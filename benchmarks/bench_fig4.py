@@ -1,0 +1,86 @@
+"""Fig. 4 reproduction: microservice vs monolithic architecture latency
+as replicas grow (lambda = 4).
+
+Monolithic = all three models share one replica pool; each request still
+needs its own model, so the pool context-switches between models — we
+charge the measured switch penalty (weights reload / cache thrash) when
+consecutive requests differ, which is the paper's stated mechanism
+('context switching among different models imposes a higher burden').
+Microservice = one pool per model (the paper's design)."""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+from repro.core.latency_model import EFFICIENTDET, PI4_EDGE, YOLOV5M
+from repro.core.workload import poisson_arrivals
+
+SWITCH_PENALTY = 0.35   # s: model swap on a 3-CPU Pi-class node
+
+
+def _simulate_pool(arrivals, n_replicas: int, service_time, seed: int = 0):
+    """Tiny M/G/c with per-replica 'last model' state."""
+    rng = np.random.default_rng(seed)
+    free = [(0.0, i, None) for i in range(n_replicas)]  # (ready_at, id, last)
+    heapq.heapify(free)
+    lats = []
+    for t, model in arrivals:
+        ready, rid, last = heapq.heappop(free)
+        start = max(t, ready)
+        st = service_time(model, rng)
+        if last is not None and last != model:
+            st += SWITCH_PENALTY
+        done = start + st
+        lats.append(done - t)
+        heapq.heappush(free, (done, rid, model))
+    return np.array(lats)
+
+
+def main(print_csv: bool = True) -> list[dict]:
+    lam = 4.0
+    rows = []
+    for n in (2, 3, 4, 6, 8):
+        res = {}
+        for seed in (0, 1, 2):
+            a1 = [(a.t, "yolo") for a in
+                  poisson_arrivals(lam / 2, 400.0, "m", seed=seed)]
+            a2 = [(a.t, "edet") for a in
+                  poisson_arrivals(lam / 2, 400.0, "m", seed=seed + 100)]
+            mixed = sorted(a1 + a2)
+
+            def svc(model, rng):
+                base = YOLOV5M.l_ref if model == "yolo" else EFFICIENTDET.l_ref
+                return base * rng.lognormal(0, 0.2)
+
+            mono = _simulate_pool(mixed, n, svc, seed)
+            # microservice: split pool proportional to load share
+            n_yolo = max(1, round(n * 0.85))     # yolo needs ~7x the CPU
+            n_edet = max(1, n - n_yolo)
+            micro = np.concatenate([
+                _simulate_pool(a1, n_yolo, svc, seed),
+                _simulate_pool(a2, n_edet, svc, seed),
+            ])
+            for k, v in (("mono", mono), ("micro", micro)):
+                res.setdefault(k, []).append(v)
+        mono = np.concatenate(res["mono"])
+        micro = np.concatenate(res["micro"])
+        rows.append({
+            "n": n,
+            "mono_mean": float(mono.mean()),
+            "micro_mean": float(micro.mean()),
+            "mono_p99": float(np.percentile(mono, 99)),
+            "micro_p99": float(np.percentile(micro, 99)),
+        })
+    if print_csv:
+        print("# Fig4: monolithic vs microservice (lambda=4)")
+        print("N,mono_mean,micro_mean,mono_p99,micro_p99")
+        for r in rows:
+            print(f"{r['n']},{r['mono_mean']:.2f},{r['micro_mean']:.2f},"
+                  f"{r['mono_p99']:.2f},{r['micro_p99']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Table VI + Figs. 7-8 reproduction: P95/P99 (mean +- SD over seeds)
+for LA-IMR vs the reactive latency-only baseline across lambda = 1..6.
+
+Paper's claims to validate:
+  * P99 gains grow with load — from ~1% at lambda=1 up to 20.7% at
+    lambda=6, ~9% average;
+  * P99 SD at peak load cut by >60%;
+  * IQR -27%, max outlier -41% (Fig. 8).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import LAMBDAS, per_lambda_stats, run_ramp
+
+SEEDS = (1, 2, 3, 4, 5)
+
+
+def run(seeds=SEEDS) -> dict:
+    stats: dict[str, dict[float, list[dict]]] = {
+        "laimr": {l: [] for l in LAMBDAS},
+        "baseline": {l: [] for l in LAMBDAS},
+    }
+    for seed in seeds:
+        for mode in ("laimr", "baseline"):
+            _, res = run_ramp(mode, seed)
+            for lam, s in per_lambda_stats(res).items():
+                if s:
+                    stats[mode][lam].append(s)
+    return stats
+
+
+def aggregate(stats) -> list[dict]:
+    rows = []
+    for lam in LAMBDAS:
+        row = {"lambda": lam}
+        for mode in ("laimr", "baseline"):
+            runs = stats[mode][lam]
+            for metric in ("p95", "p99", "iqr", "max", "std"):
+                vals = np.array([r[metric] for r in runs])
+                row[f"{mode}_{metric}"] = float(vals.mean())
+                row[f"{mode}_{metric}_sd"] = float(vals.std())
+        row["p99_reduction_pct"] = 100.0 * (
+            1.0 - row["laimr_p99"] / row["baseline_p99"])
+        row["p95_reduction_pct"] = 100.0 * (
+            1.0 - row["laimr_p95"] / row["baseline_p95"])
+        rows.append(row)
+    return rows
+
+
+def main(print_csv: bool = True) -> list[dict]:
+    rows = aggregate(run())
+    if print_csv:
+        print("# Table VI reproduction (mean over seeds)")
+        print("lambda,laimr_p95,base_p95,laimr_p99,base_p99,"
+              "p95_red_pct,p99_red_pct,laimr_p99_sd,base_p99_sd")
+        for r in rows:
+            print(f"{r['lambda']},{r['laimr_p95']:.3f},{r['baseline_p95']:.3f},"
+                  f"{r['laimr_p99']:.3f},{r['baseline_p99']:.3f},"
+                  f"{r['p95_reduction_pct']:.1f},{r['p99_reduction_pct']:.1f},"
+                  f"{r['laimr_p99_sd']:.3f},{r['baseline_p99_sd']:.3f}")
+        # Fig. 8 aggregates
+        iqr_red = 100 * (1 - np.mean([r["laimr_iqr"] for r in rows])
+                         / np.mean([r["baseline_iqr"] for r in rows]))
+        max_red = 100 * (1 - np.mean([r["laimr_max"] for r in rows])
+                         / np.mean([r["baseline_max"] for r in rows]))
+        peak = rows[-1]
+        print(f"# fig8: iqr_reduction={iqr_red:.1f}% "
+              f"max_outlier_reduction={max_red:.1f}%")
+        print(f"# peak-load p99 SD: laimr={peak['laimr_p99_sd'] :.2f} "
+              f"baseline={peak['baseline_p99_sd']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

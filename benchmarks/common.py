@@ -1,0 +1,75 @@
+"""Shared experiment setup for the paper-reproduction benchmarks.
+
+The Table VI / Fig 7-8 experiment cluster: a YOLOv5m microservice on the
+edge (Pi-4-class replicas, ~1 s robot->router->edge->robot RTT, §V-A4)
+with a cloud upstream tier (Ericsson cluster, +36 ms, §V-A2). Both
+LA-IMR and the reactive baseline see identical arrival traces; the
+baseline cannot offload (it models 'traditional latency-only
+autoscaling').
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.catalogue import Cluster, Deployment
+from repro.core.latency_model import CLOUD, PI4_EDGE, YOLOV5M
+from repro.core.router import RouterParams
+from repro.core.scheduler import QualityClass
+from repro.core.simulator import ClusterSimulator, SimConfig
+from repro.core.workload import ramp_arrivals
+
+SLO = 1.8            # tau = x * L_infer = 2.25 * 0.8 (§V-A4); RTT excluded
+SEGMENT = 180.0      # seconds per lambda level
+WARMUP = 60.0        # discarded at each level boundary (steady state only)
+LAMBDAS = [1, 2, 3, 4, 5, 6]
+
+
+def experiment_cluster(n_edge: int = 3, edge_max: int = 6,
+                       n_cloud: int = 1, cloud_max: int = 2) -> Cluster:
+    edge = dataclasses.replace(PI4_EDGE, net_rtt=1.0)
+    cloud = dataclasses.replace(CLOUD, net_rtt=1.036, speedup=2.0)
+    return Cluster([
+        Deployment(YOLOV5M, edge, QualityClass.BALANCED,
+                   n_replicas=n_edge, n_max=edge_max),
+        Deployment(YOLOV5M, cloud, QualityClass.BALANCED,
+                   n_replicas=n_cloud, n_max=cloud_max),
+    ])
+
+
+def run_ramp(mode: str, seed: int, lambdas=None, segment: float = SEGMENT):
+    lambdas = lambdas or LAMBDAS
+    arr = ramp_arrivals(lambdas, segment, "yolov5m", seed=seed)
+    sim = ClusterSimulator(
+        experiment_cluster(),
+        SimConfig(mode=mode, seed=seed, slo=SLO, jitter_sigma=0.2,
+                  baseline_lag=30.0,
+                  router=RouterParams(x=2.25, ewma_alpha=0.8, rho_low=0.3)))
+    res = sim.run(arr, horizon=segment * len(lambdas) + 60.0)
+    return arr, res
+
+
+def per_lambda_stats(res, lambdas=None, segment: float = SEGMENT,
+                     warmup: float = WARMUP) -> dict[float, dict]:
+    lambdas = lambdas or LAMBDAS
+    out = {}
+    for k, lam in enumerate(lambdas):
+        lo, hi = k * segment + warmup, (k + 1) * segment
+        lat = np.array([r.latency for r in res.completed
+                        if r.latency is not None and lo <= r.arrival < hi])
+        if lat.size == 0:
+            out[lam] = {}
+            continue
+        q1, q3 = np.percentile(lat, [25, 75])
+        out[lam] = {
+            "mean": float(lat.mean()),
+            "p50": float(np.percentile(lat, 50)),
+            "p95": float(np.percentile(lat, 95)),
+            "p99": float(np.percentile(lat, 99)),
+            "std": float(lat.std()),
+            "iqr": float(q3 - q1),
+            "max": float(lat.max()),
+            "n": int(lat.size),
+        }
+    return out

@@ -1,0 +1,99 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+For each (arch x shape x mesh) record in results/dryrun/*.json, derive
+the three per-step roofline terms (TPU v5e constants from launch.mesh):
+
+  compute    = FLOPs_per_device / peak_FLOP/s            [s]
+  memory     = HBM_bytes_per_device / HBM_bw             [s]
+  collective = collective_bytes_per_device / ICI_bw      [s]
+
+FLOPs/bytes come from the trip-count-aware HLO analysis (launch.
+hlo_analysis); collective bytes are summed operand sizes of all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute. All three
+are per-device quantities of the SPMD module, so no further division by
+chip count is needed.
+
+Also reports MODEL_FLOPS (6·N_active·D train, 2·N_active·D inference)
+and the usefulness ratio MODEL_FLOPS / (HLO_FLOPs x chips).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs.base import SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    from repro.models.model import active_param_count
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: one token/seq
+
+
+def load_records(dryrun_dir: str = "results/dryrun") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_row(rec: dict) -> dict:
+    compute = rec["flops"] / PEAK_FLOPS_BF16
+    memory = rec["hlo_bytes"] / HBM_BW
+    coll = rec["collective_bytes_total"] / ICI_BW
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", coll), key=lambda kv: kv[1])[0]
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / max(rec["flops"] * rec["n_devices"], 1.0)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "dominant": dominant, "model_flops": mf, "useful_ratio": useful,
+        "step_s_bound": max(compute, memory, coll),
+    }
+
+
+def main(print_csv: bool = True, dryrun_dir: str = "results/dryrun",
+         mesh: str = "single") -> list[dict]:
+    rows = []
+    for rec in load_records(dryrun_dir):
+        if rec.get("mesh") != mesh:
+            continue
+        if rec["status"] == "skip":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": mesh, "dominant": "SKIP",
+                         "reason": rec["reason"]})
+            continue
+        if rec["status"] != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": mesh, "dominant": "ERROR"})
+            continue
+        rows.append(roofline_row(rec))
+    if print_csv:
+        print(f"# roofline terms per (arch x shape), mesh={mesh} "
+              "(TPU v5e: 197TF bf16, 819GB/s HBM, 50GB/s ICI)")
+        print("arch,shape,compute_s,memory_s,collective_s,dominant,"
+              "useful_ratio")
+        for r in rows:
+            if r["dominant"] in ("SKIP", "ERROR"):
+                print(f"{r['arch']},{r['shape']},,,,{r['dominant']},")
+                continue
+            print(f"{r['arch']},{r['shape']},{r['compute_s']:.4f},"
+                  f"{r['memory_s']:.4f},{r['collective_s']:.4f},"
+                  f"{r['dominant']},{r['useful_ratio']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

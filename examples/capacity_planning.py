@@ -1,0 +1,20 @@
+"""Capacity planning with Eq. (23): size replica pools for a forecast
+load, sweep the cost/latency trade-off, compare greedy vs exhaustive.
+
+  PYTHONPATH=src python examples/capacity_planning.py
+"""
+from repro.core import paper_cluster, plan_exhaustive, plan_greedy
+
+forecast = {"efficientdet": 12.0, "yolov5m": 4.0, "faster_rcnn": 1.5}
+print(f"forecast arrival rates: {forecast}")
+for beta in (0.1, 2.5, 10.0):
+    plan = plan_greedy(paper_cluster(6, 6), forecast, beta=beta)
+    print(f"\nbeta={beta} (latency-vs-cost weight):")
+    for key, n in plan.replicas.items():
+        print(f"  {key:28s} N={n}")
+    print(f"  worst latency={plan.worst_latency:.2f}s "
+          f"cost={plan.cost:.1f} feasible={plan.feasible}")
+
+g = plan_greedy(paper_cluster(4, 4), forecast, beta=2.5)
+e = plan_exhaustive(paper_cluster(4, 4), forecast, beta=2.5)
+print(f"\ngreedy objective {g.objective:.2f} vs exhaustive {e.objective:.2f}")

@@ -1,0 +1,33 @@
+"""Quickstart: calibrate the latency model, route a burst, watch PM-HPA scale.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (ClusterSimulator, SimConfig, bounded_pareto_bursts,
+                        calibrate_from_table_iv, paper_cluster)
+from repro.core.latency_model import YOLOV5M, PI4_EDGE, g_fixed_replicas_np
+
+# 1. Calibrate the closed-form latency law on the paper's Table IV data.
+fit = calibrate_from_table_iv()
+print(f"calibrated: alpha={fit.alpha:.2f} beta={fit.beta:.2f} "
+      f"gamma={fit.gamma:.2f} (MAPE {100*fit.mape:.1f}%)")
+
+# 2. Ask the dual-purpose model both questions the paper asks of it.
+lam = 4.0
+g_by_n = g_fixed_replicas_np(lam, np.arange(1, 9), YOLOV5M, PI4_EDGE, 1.18)
+print(f"g(lambda=4, N=1..8) = {np.round(g_by_n, 2)}")  # capacity planning
+print(f"-> smallest N meeting a 1.8s SLO: "
+      f"{1 + int(np.argmax(g_by_n <= 1.8))}")
+
+# 3. Run a bursty trace through the full LA-IMR control loop.
+arrivals = bounded_pareto_bursts(base_lam=3.0, horizon=120.0,
+                                 model="yolov5m", seed=0)
+sim = ClusterSimulator(paper_cluster(), SimConfig(mode="laimr", seed=0))
+res = sim.run(arrivals)
+s = res.summary()
+print(f"served {int(s['n'])} requests: p50={s['p50']:.2f}s "
+      f"p99={s['p99']:.2f}s; offloaded={res.offload_fast}; "
+      f"scale events={len(res.scale_events)}")
+for ev in res.scale_events[:5]:
+    print(f"  t={ev.t:6.1f}s  {ev.deployment_key}: {ev.from_n}->{ev.to_n}")

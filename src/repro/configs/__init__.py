@@ -1,0 +1,5 @@
+from repro.configs.base import (ARCH_IDS, SHAPES, ArchConfig, InputShape,
+                                get_config, reduced, registry)
+
+__all__ = ["ARCH_IDS", "SHAPES", "ArchConfig", "InputShape", "get_config",
+           "reduced", "registry"]

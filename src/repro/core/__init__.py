@@ -1,0 +1,46 @@
+"""LA-IMR core: the paper's contribution as a composable library.
+
+Public surface:
+
+* latency model   — ``ModelProfile``, ``InstanceClass``, ``g_fixed_replicas``,
+                    ``g_fixed_traffic``, ``calibrate``
+* queueing        — ``erlang_c``, ``mmc_wait`` (jnp) and numpy twins
+* routing         — ``Router``, ``RouterParams``, ``score_instances``
+* scheduling      — ``MultiQueueScheduler``, ``QualityClass``, ``Request``
+* autoscaling     — ``PMHPA``, ``ReactiveAutoscaler``, ``desired_replicas``
+* capacity        — ``plan_greedy``, ``plan_exhaustive`` (Eq. 23)
+* simulation      — ``ClusterSimulator``, ``SimConfig``
+* workload        — ``poisson_arrivals``, ``bounded_pareto_bursts``, ...
+"""
+from repro.core.autoscaler import PMHPA, ReactiveAutoscaler, desired_replicas
+from repro.core.capacity import evaluate, plan_exhaustive, plan_greedy
+from repro.core.catalogue import Cluster, Deployment, paper_cluster
+from repro.core.latency_model import (CLOUD, EFFICIENTDET, FASTER_RCNN,
+                                      PI4_EDGE, YOLOV5M, CalibratedModel,
+                                      InstanceClass, ModelProfile,
+                                      affine_power_law, calibrate,
+                                      calibrate_from_table_iv,
+                                      g_fixed_replicas, g_fixed_traffic)
+from repro.core.queueing import erlang_c, mmc_wait, mmc_wait_np
+from repro.core.router import (Action, Decision, Router, RouterParams,
+                               score_instances, select_instance)
+from repro.core.scheduler import MultiQueueScheduler, QualityClass, Request
+from repro.core.simulator import ClusterSimulator, SimConfig, SimResult
+from repro.core.telemetry import Ewma, MetricsRegistry, SlidingRate
+from repro.core.workload import (Arrival, bounded_pareto_bursts,
+                                 poisson_arrivals, ramp_arrivals, robot_trace)
+
+__all__ = [
+    "PMHPA", "ReactiveAutoscaler", "desired_replicas", "evaluate",
+    "plan_exhaustive", "plan_greedy", "Cluster", "Deployment",
+    "paper_cluster", "CLOUD", "EFFICIENTDET", "FASTER_RCNN", "PI4_EDGE",
+    "YOLOV5M", "CalibratedModel", "InstanceClass", "ModelProfile",
+    "affine_power_law", "calibrate", "calibrate_from_table_iv",
+    "g_fixed_replicas", "g_fixed_traffic", "erlang_c", "mmc_wait",
+    "mmc_wait_np", "Action", "Decision", "Router", "RouterParams",
+    "score_instances", "select_instance", "MultiQueueScheduler",
+    "QualityClass", "Request", "ClusterSimulator", "SimConfig", "SimResult",
+    "Ewma", "MetricsRegistry", "SlidingRate", "Arrival",
+    "bounded_pareto_bursts", "poisson_arrivals", "ramp_arrivals",
+    "robot_trace",
+]

@@ -1,0 +1,273 @@
+"""SLO-aware adaptive router — the paper's Algorithm 1 plus §IV-B selection.
+
+Two layers:
+
+* :func:`score_instances` / :func:`select_instance` — the vectorised,
+  jit-compiled per-request scoring hot path (§IV-B steps ii-iv): predict
+  g_mi(lambda) for every candidate deployment from the in-memory table,
+  mask infeasible ones (SLO or stability), argmin with cost tie-break.
+  A Pallas TPU kernel with identical semantics lives in
+  ``repro.kernels.routing_score`` (ref oracle = this function).
+
+* :class:`Router` — the event-driven controller (Algorithm 1): per
+  *service instance* in-memory telemetry (sliding rate + EWMA), x-scaled
+  SLO, per-request offload guard, EWMA-predicted breach -> scale-out or
+  fractional offload phi, idle -> scale-in.
+
+One reading note on Algorithm 1: line 11 offloads the at-risk request and
+returns. The offloaded request then *arrives at the upstream instance*,
+whose own event-driven controller runs the same loop (every instance runs
+LA-IMR — that is what makes the cloud tier scale under offloaded load).
+We implement that one-hop arrival explicitly in :meth:`Router.on_request`;
+without it the local tier would offload forever and no tier would ever
+scale, which is visibly not the behaviour in the paper's Fig. 7.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import queueing
+from repro.core.catalogue import Cluster, Deployment
+from repro.core.scheduler import Request
+from repro.core.telemetry import MetricsRegistry, ModelTelemetry
+
+BIG = 1e9  # sentinel latency for infeasible candidates
+
+
+@jax.jit
+def score_instances(lam: jax.Array, alpha: jax.Array, beta: jax.Array,
+                    gamma: jax.Array, mu: jax.Array, n: jax.Array,
+                    rtt: jax.Array) -> jax.Array:
+    """Predicted end-to-end latency g_mi(lam) per deployment (Eq. 15).
+
+    All inputs are (I,) float32 arrays over candidate deployments; ``lam``
+    is the aggregate arrival rate each pool would see. Processing uses the
+    calibrated affine power law on the per-replica rate, queueing uses
+    Erlang-C, network adds the tier RTT. Unstable pools score BIG.
+    """
+    lam = jnp.asarray(lam, jnp.float32)
+    lam_tilde = lam / jnp.maximum(n, 1.0)
+    proc = alpha + beta * jnp.power(jnp.maximum(lam_tilde, 0.0), gamma)
+    q = queueing.mmc_wait(lam, jnp.asarray(n, jnp.int32), mu, unstable_value=BIG)
+    g = proc + rtt + q
+    rho = lam / jnp.maximum(n * mu, 1e-12)
+    return jnp.where(rho < 1.0, g, BIG)
+
+
+@jax.jit
+def select_instance(g: jax.Array, slo: jax.Array, cost: jax.Array,
+                    candidate_mask: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """§IV-B steps iii-iv: filter feasible (g <= slo), argmin latency,
+    tie-break by lower cost. Returns (index, feasible_any).
+
+    Tie-break ('breaking ties by the lower cost to avoid unnecessary
+    over-provisioning') is a two-stage argmin: find the feasible latency
+    minimum, then the cheapest candidate within a relative epsilon of it.
+    """
+    feasible = (g <= slo) & candidate_mask
+    g_masked = jnp.where(feasible, g, jnp.inf)
+    gmin = jnp.min(g_masked)
+    near = feasible & (g_masked <= gmin * (1.0 + 1e-5) + 1e-9)
+    idx = jnp.argmin(jnp.where(near, cost, jnp.inf))
+    return idx, jnp.any(feasible)
+
+
+def score_instances_np(lam: float, alpha, beta, gamma, mu, n, rtt) -> np.ndarray:
+    """numpy twin of :func:`score_instances` (control-plane call sites)."""
+    alpha = np.asarray(alpha, np.float64)
+    n = np.asarray(n, np.float64)
+    lam_tilde = lam / np.maximum(n, 1.0)
+    proc = alpha + np.asarray(beta) * np.power(np.maximum(lam_tilde, 0.0),
+                                               np.asarray(gamma))
+    q = np.array([queueing.mmc_wait_np(lam, np.array([int(nn)]), float(m))[0]
+                  for nn, m in zip(np.atleast_1d(n), np.atleast_1d(mu))])
+    q = np.where(np.isfinite(q), q, BIG)
+    g = proc + np.asarray(rtt) + q
+    rho = lam / np.maximum(n * np.asarray(mu), 1e-12)
+    return np.where(rho < 1.0, np.minimum(g, BIG), BIG)
+
+
+class Action(enum.Enum):
+    LOCAL = "local"                    # routed to a local replica (line 28)
+    OFFLOAD_FAST = "offload_fast"      # per-request SLO guard (line 11)
+    OFFLOAD_FRACTION = "offload_frac"  # bulk offload fraction phi (line 22)
+
+
+@dataclasses.dataclass
+class Decision:
+    action: Action
+    target: Optional[Deployment]        # where the request goes
+    scale_out: list = dataclasses.field(default_factory=list)
+    scale_in: list = dataclasses.field(default_factory=list)
+    phi: float = 0.0                    # bulk offload fraction (line 21)
+    predicted_latency: float = 0.0
+    lam: float = 0.0
+    lam_accum: float = 0.0              # EWMA at the *target* deployment
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterParams:
+    """Algorithm 1 parameters (paper §V-A4 calibrated values)."""
+
+    x: float = 2.25          # latency-budget multiplier (tau_m = x * L_m)
+    ewma_alpha: float = 0.8  # EWMA weight on the old value
+    rho_low: float = 0.3     # utilisation floor for scale-in
+    window: float = 1.0      # sliding-window width [s]
+    slo_includes_rtt: bool = True  # paper's tau=1.8s budgets the ~1s RTT in
+
+
+class Router:
+    """Event-driven LA-IMR controller (Algorithm 1), one loop per instance."""
+
+    def __init__(self, cluster: Cluster, params: RouterParams = RouterParams(),
+                 metrics: Optional[MetricsRegistry] = None):
+        self.cluster = cluster
+        self.params = params
+        self.metrics = metrics or MetricsRegistry()
+        # per-deployment in-memory telemetry (the paper's in-process state)
+        self.telemetry: dict[str, ModelTelemetry] = {}
+
+    def tel(self, dep_key: str) -> ModelTelemetry:
+        t = self.telemetry.get(dep_key)
+        if t is None:
+            t = ModelTelemetry.create(self.params.ewma_alpha, self.params.window)
+            self.telemetry[dep_key] = t
+        return t
+
+    # ------------------------------------------------------------------ #
+    def slo_budget(self, dep: Deployment, req: Request) -> float:
+        """tau_m = x * L_m^infer (Alg. 1 line 8), or the request's own tau_t.
+
+        With ``slo_includes_rtt`` the budget also covers the tier RTT the
+        way the paper's tau = 1.8 s 'budgets headroom for networking and
+        queueing' on top of L ~= 0.8 s.
+        """
+        if req.slo is not None:
+            return req.slo
+        base = dep.model.l_ref / dep.instance.speedup
+        tau = self.params.x * base
+        if self.params.slo_includes_rtt:
+            tau += dep.instance.net_rtt
+        return tau
+
+    def predict(self, dep: Deployment, lam: float,
+                with_rtt: bool = True) -> float:
+        """g_mi(lam) — scalar numpy evaluation of the in-memory table.
+
+        ``with_rtt=False`` drops the network term: the paper's SLO
+        tau = x * L_m budgets processing + queueing only — its own
+        experiment has tau = 1.8 s while every request pays ~1 s of robot
+        RTT on top (§V-A4), so the Algorithm-1 guard must compare the
+        *controllable* latency against tau, not the RTT-inflated total.
+        Tier selection (route_best) keeps the RTT so cross-tier
+        comparisons stay honest."""
+        g = score_instances_np(
+            lam, [dep.alpha], [dep.beta], [dep.gamma], [dep.mu],
+            [dep.n_replicas],
+            [dep.instance.net_rtt if with_rtt else 0.0])
+        return float(g[0])
+
+    # ------------------------------------------------------------------ #
+    def _control_pass(self, dep: Deployment, req: Request, t_now: float,
+                      decision: Decision) -> None:
+        """Algorithm 1 lines 14-27 at deployment ``dep``: EWMA update,
+        predicted-breach scaling / bulk offload, idle scale-in."""
+        p = self.params
+        tel = self.tel(dep.key)
+        lam_accum = tel.ewma.value                        # updated on arrival
+        tau = self.slo_budget(dep, req)
+        g_hat = self.predict(dep, lam_accum, with_rtt=False)   # line 16
+        decision.lam_accum = lam_accum
+        decision.predicted_latency = g_hat
+        if g_hat > tau:                                   # line 17
+            if dep.n_replicas < dep.n_max:                # line 18
+                decision.scale_out.append(dep)            # line 19
+                tel.scale_outs += 1
+            else:                                         # line 20
+                phi = min(1.0, (g_hat - tau) / max(g_hat, 1e-12))  # line 21
+                upstream = self.cluster.upstream_of(dep)
+                if upstream is not None and decision.action is Action.LOCAL:
+                    decision.action = Action.OFFLOAD_FRACTION      # line 22
+                    decision.target = upstream
+                    decision.phi = phi
+                    tel.offloaded_bulk += phi
+        else:
+            rho = dep.rho(lam_accum)
+            if rho < p.rho_low and dep.n_replicas > 1:    # line 25
+                decision.scale_in.append(dep)             # line 26
+                tel.scale_ins += 1
+
+    def on_request(self, req: Request, dep: Deployment, t_now: float) -> Decision:
+        """Algorithm 1 for request r arriving at service instance (m, i)."""
+        tel = self.tel(dep.key)
+        lam, _ = tel.on_arrival(t_now)                    # lines 7, 15
+        tau = self.slo_budget(dep, req)                   # line 8
+        g_inst = self.predict(dep, lam, with_rtt=False)   # line 9
+
+        upstream = self.cluster.upstream_of(dep)
+        if g_inst > tau and upstream is not None:         # line 10
+            # line 11: protect this request — it now ARRIVES at the
+            # upstream instance, whose own controller loop runs.
+            tel.offloaded_fast += 1
+            req.offloaded = True
+            decision = Decision(Action.OFFLOAD_FAST, upstream, lam=lam)
+            up_tel = self.tel(upstream.key)
+            up_tel.on_arrival(t_now)
+            self._control_pass(upstream, req, t_now, decision)
+            # keep the fast-offload action even if upstream is congested
+            decision.action = Action.OFFLOAD_FAST
+            decision.target = upstream
+            return decision
+
+        decision = Decision(Action.LOCAL, dep, lam=lam)
+        self._control_pass(dep, req, t_now, decision)     # lines 14-27
+        req.offloaded = decision.action is not Action.LOCAL
+        return decision                                   # line 28
+
+    # ------------------------------------------------------------------ #
+    def route_best(self, req: Request, t_now: float,
+                   candidates: Optional[list[Deployment]] = None) -> Decision:
+        """§IV-B steps i-v: full selection across candidate deployments.
+
+        Used when a request is not pre-bound to a deployment (the general
+        routing problem, Eq. 18): score every candidate, filter by SLO,
+        pick argmin latency with cost tie-break; if none feasible, offload
+        upstream of the cheapest candidate.
+        """
+        cands = candidates if candidates is not None else \
+            self.cluster.for_quality(req.quality) or list(self.cluster)
+        lam_by_cand = []
+        for d in cands:
+            t = self.tel(d.key)
+            lam_by_cand.append(t.sliding.rate(t_now))
+        # the request would add itself to whichever pool it lands in
+        lam_arr = np.asarray(lam_by_cand, np.float32) + 1.0 / self.params.window
+
+        g = score_instances(
+            jnp.asarray(lam_arr),
+            jnp.asarray([d.alpha for d in cands], jnp.float32),
+            jnp.asarray([d.beta for d in cands], jnp.float32),
+            jnp.asarray([d.gamma for d in cands], jnp.float32),
+            jnp.asarray([d.mu for d in cands], jnp.float32),
+            jnp.asarray([d.n_replicas for d in cands], jnp.float32),
+            jnp.asarray([d.instance.net_rtt for d in cands], jnp.float32))
+        slo = jnp.asarray([self.slo_budget(d, req) for d in cands], jnp.float32)
+        cost = jnp.asarray([d.instance.cost for d in cands], jnp.float32)
+        idx, ok = select_instance(g, slo, cost, jnp.ones(len(cands), bool))
+        if bool(ok):
+            d = cands[int(idx)]
+            self.tel(d.key).on_arrival(t_now)
+            return Decision(Action.LOCAL, d, predicted_latency=float(g[int(idx)]))
+        cheapest = min(cands, key=lambda d: d.instance.cost)
+        upstream = self.cluster.upstream_of(cheapest) or cheapest
+        self.tel(upstream.key).on_arrival(t_now)
+        self.tel(upstream.key).offloaded_fast += 1
+        req.offloaded = upstream is not cheapest
+        return Decision(Action.OFFLOAD_FAST, upstream,
+                        predicted_latency=float(jnp.min(g)))

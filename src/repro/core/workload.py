@@ -1,0 +1,119 @@
+"""Arrival-process generators (paper §V-B/§V-D).
+
+The paper evaluates under steadily increasing arrival rates lambda = 1..6
+req/s and emulates load bursts 'with a bounded-Pareto process'. We
+provide:
+
+* :func:`poisson_arrivals` — homogeneous Poisson at rate lam.
+* :func:`bounded_pareto_bursts` — a modulated Poisson process whose burst
+  episode *intensities* are bounded-Pareto distributed (heavy-tailed
+  burst sizes, bounded so the system stays within the simulated range).
+* :func:`ramp_arrivals` — the paper's 'steadily increase lambda' sweep.
+* :func:`robot_trace` — per-robot periodic capture (30 FPS cameras downsampled
+  to a per-robot request period) with jitter: the CloudGripper-shaped trace.
+
+All generators are seeded and deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    t: float
+    model: str
+    robot: int = 0
+
+
+def poisson_arrivals(lam: float, horizon: float, model: str,
+                     seed: int = 0) -> list[Arrival]:
+    rng = np.random.default_rng(seed)
+    t, out = 0.0, []
+    while True:
+        t += rng.exponential(1.0 / lam)
+        if t >= horizon:
+            break
+        out.append(Arrival(t, model))
+    return out
+
+
+def bounded_pareto(rng: np.random.Generator, alpha: float, lo: float,
+                   hi: float, size: int = 1) -> np.ndarray:
+    """Bounded-Pareto(alpha, lo, hi) via inverse-CDF sampling."""
+    u = rng.uniform(size=size)
+    la, ha = lo ** alpha, hi ** alpha
+    return (-(u * ha - u * la - ha) / (ha * la)) ** (-1.0 / alpha)
+
+
+def bounded_pareto_bursts(base_lam: float, horizon: float, model: str,
+                          seed: int = 0, burst_rate: float = 0.05,
+                          pareto_alpha: float = 1.5, burst_lo: float = 2.0,
+                          burst_hi: float = 8.0,
+                          burst_duration: float = 5.0) -> list[Arrival]:
+    """Poisson baseline at ``base_lam`` with burst episodes.
+
+    Bursts arrive as a Poisson process (rate ``burst_rate`` per second);
+    each burst multiplies the arrival rate by a bounded-Pareto(alpha)
+    factor in [burst_lo, burst_hi] for ``burst_duration`` seconds —
+    heavy-tailed burst *intensity*, the regime that produces the paper's
+    long-tail latency spikes.
+    """
+    rng = np.random.default_rng(seed)
+    # burst episode start times
+    starts, t = [], 0.0
+    while True:
+        t += rng.exponential(1.0 / burst_rate)
+        if t >= horizon:
+            break
+        starts.append(t)
+    factors = bounded_pareto(rng, pareto_alpha, burst_lo, burst_hi,
+                             size=len(starts))
+
+    def rate_at(tt: float) -> float:
+        r = base_lam
+        for s, f in zip(starts, factors):
+            if s <= tt < s + burst_duration:
+                r = max(r, base_lam * f)
+        return r
+
+    # thinning (Lewis-Shedler) against the max possible rate
+    lam_max = base_lam * burst_hi
+    out, t = [], 0.0
+    while True:
+        t += rng.exponential(1.0 / lam_max)
+        if t >= horizon:
+            break
+        if rng.uniform() <= rate_at(t) / lam_max:
+            out.append(Arrival(t, model))
+    return out
+
+
+def ramp_arrivals(lams: list[float], seg_duration: float, model: str,
+                  seed: int = 0) -> list[Arrival]:
+    """Piecewise-constant rate sweep: lam = lams[0], lams[1], ... (§V-B)."""
+    out, t0 = [], 0.0
+    for k, lam in enumerate(lams):
+        seg = poisson_arrivals(lam, seg_duration, model, seed=seed + k)
+        out.extend(Arrival(a.t + t0, a.model, a.robot) for a in seg)
+        t0 += seg_duration
+    return out
+
+
+def robot_trace(n_robots: int, period: float, horizon: float, model: str,
+                seed: int = 0, jitter: float = 0.05) -> list[Arrival]:
+    """CloudGripper-style trace: n robots each sending one frame every
+    ``period`` seconds with phase offsets and Gaussian jitter."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for r in range(n_robots):
+        phase = rng.uniform(0.0, period)
+        t = phase
+        while t < horizon:
+            out.append(Arrival(max(t + rng.normal(0.0, jitter), 0.0), model, r))
+            t += period
+    out.sort(key=lambda a: a.t)
+    return out

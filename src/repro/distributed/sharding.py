@@ -1,0 +1,333 @@
+"""Sharding rules: pytree path -> PartitionSpec.
+
+Mesh axes
+---------
+  single pod :  (data=16, model=16)
+  multi-pod  :  (pod=2, data=16, model=16)  — "pod" composes with "data"
+                into the batch/FSDP axis tuple ("pod", "data").
+
+Strategy
+--------
+* **Training** (train_4k): FSDP over the batch axes x tensor parallel
+  over "model". Every weight matrix shards its TP-natural dim over
+  "model" (attention heads / FFN hidden / experts / vocab) and its
+  d_model dim over the batch axes. Optimizer state follows params.
+* **Serving** (prefill/decode): TP over "model"; params replicated over
+  "data" unless ``cfg.serve_fsdp`` (the >=100B models, which don't fit
+  16 chips at bf16) keeps the FSDP axis.
+* **Divisibility guard**: a dim is sharded only when its size divides
+  the axis size; otherwise the next-preference dim is tried (e.g. q
+  heads 56 on a 16-way model axis fall back to sharding d_model —
+  Megatron row-parallel — rather than failing to lower).
+* **Decode caches**: KV heads over "model" when divisible, else the
+  cache-length dim (flash-decode style KV-sequence sharding); batch over
+  the batch axes, except long_500k (batch=1) which context-shards the
+  cache length over "data".
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+PyTree = Any
+
+
+# ----------------------------------------------------------------------
+# Activation sharding constraints. Without these, GSPMD happily propagates
+# a WEIGHT's FSDP sharding into the activations (batch replicated, d_model
+# sharded) — observed on the first stablelm dry-run as a 4x per-device
+# FLOP blow-up (see EXPERIMENTS §Perf, iteration 1). The dry-run sets the
+# batch axes before lowering; model code calls constrain_batch() on the
+# residual stream at block boundaries. Outside a configured context this
+# is an identity, so tests and CPU runs are unaffected.
+_ACT_BATCH_AXES = None
+
+
+def set_activation_batch_axes(axes) -> None:
+    """axes: e.g. ("data",) or ("pod", "data"), or None to disable."""
+    global _ACT_BATCH_AXES
+    _ACT_BATCH_AXES = axes
+
+
+def constrain_batch(x):
+    """Constrain dim 0 of an activation to the configured batch axes."""
+    if _ACT_BATCH_AXES is None:
+        return x
+    spec = P(tuple(_ACT_BATCH_AXES), *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# MoE dispatch sharding (§Perf hillclimb 'dbrx-collective', EXPERIMENTS.md):
+# without these constraints GSPMD builds the (E, C, d) dispatch buffer at
+# GLOBAL capacity, replicated across data ranks, and contracts the expert
+# einsums over the FSDP-sharded d axis — an all-reduce of ~14 GB fp32
+# activations per MoE matmul plus 16x redundant expert compute. Pinning
+# the buffer to (experts -> model, capacity -> data) and the weights to
+# expert-parallel-only at compute time (storage stays FSDP; this inserts
+# a ~100 MB weight all-gather instead of the 14 GB activation all-reduce)
+# restores data parallelism inside the MoE.
+_MOE_EXPERT_AXIS = None
+_MOE_GROUPS = 1          # token groups for data-local dispatch
+
+
+def set_moe_expert_axis(axis, groups: int = 1) -> None:
+    global _MOE_EXPERT_AXIS, _MOE_GROUPS
+    _MOE_EXPERT_AXIS = axis
+    _MOE_GROUPS = max(1, groups)
+
+
+def moe_num_groups() -> int:
+    return _MOE_GROUPS
+
+
+def constrain_moe_groups(x):
+    """x: (G, ...) grouped tokens -> groups over the batch axes."""
+    if _MOE_EXPERT_AXIS is None:
+        return x
+    grp_ax = tuple(_ACT_BATCH_AXES) if _ACT_BATCH_AXES else None
+    return jax.lax.with_sharding_constraint(
+        x, P(grp_ax, *([None] * (x.ndim - 1))))
+
+
+def constrain_moe_buffer(buf):
+    """buf: (G, E, C, d) dispatch buffer -> groups over the batch axes,
+    experts over the model axis."""
+    if _MOE_EXPERT_AXIS is None:
+        return buf
+    grp_ax = tuple(_ACT_BATCH_AXES) if _ACT_BATCH_AXES else None
+    return jax.lax.with_sharding_constraint(
+        buf, P(grp_ax, _MOE_EXPERT_AXIS, None, None))
+
+
+def constrain_moe_weight(w):
+    """Expert weight (E, d, ff)/(E, ff, d) at COMPUTE time: expert-parallel
+    only (all-gather the FSDP shards rather than all-reduce activations)."""
+    if _MOE_EXPERT_AXIS is None:
+        return w
+    return jax.lax.with_sharding_constraint(
+        w, P(_MOE_EXPERT_AXIS, None, None))
+
+
+def batch_axes(mesh: Mesh):
+    """The compound batch/FSDP axis tuple for this mesh."""
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else ("data",)
+
+
+def _axsize(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    n = _axsize(mesh, axis)
+    return dim % n == 0 and dim >= n
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(f"[{p.idx}]")
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(path: str, shape: tuple, mesh: Mesh, *, fsdp: bool) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    ``path`` is the '/'-joined key path; stacked block params carry a
+    leading period/layer axis which is never sharded.
+    """
+    ba = batch_axes(mesh)
+    fs = ba if fsdp else None          # the FSDP slot (None = replicate)
+    stacked = ("blocks" in path and "layer" in path) or "_blocks" in path
+    lead = 1 if stacked else 0
+    core = shape[lead:]
+    nd = len(core)
+
+    def spec(*axes):
+        return P(*(((None,) * lead) + axes))
+
+    def fsdp_ax(dim):
+        return fs if (fsdp and fs and _fits(dim, mesh, ba)) else None
+
+    def tp_ax(dim):
+        return "model" if _fits(dim, mesh, "model") else None
+
+    name = path.split("/")[-1]
+
+    # ---------------- embeddings / head ----------------
+    if name == "embed" and nd == 2:                     # (V, d)
+        v, d = core
+        return spec(tp_ax(v), fsdp_ax(d))
+    if name == "lm_head" and nd == 2:                   # (d, V)
+        d, v = core
+        return spec(fsdp_ax(d), tp_ax(v))
+
+    # ---------------- attention ----------------
+    if name in ("wq", "wk", "wv") and nd == 3:          # (d, H, hd)
+        d, h, hd = core
+        if _fits(h, mesh, "model"):
+            return spec(fsdp_ax(d), "model", None)
+        # heads not divisible: row-parallel on d_model
+        return spec(tp_ax(d) or fsdp_ax(d), None, None) if not fsdp \
+            else spec(fsdp_ax(d), None, None)
+    if name == "wo" and nd == 3:                        # (H, hd, d) attn out
+        h, hd, d = core
+        if _fits(h, mesh, "model"):
+            return spec("model", None, fsdp_ax(d))
+        return spec(None, None, tp_ax(d) if not fsdp else fsdp_ax(d))
+
+    # ---------------- MoE ----------------
+    if nd == 3 and name in ("wi", "wg"):                # (E, d, ff)
+        e, d, ff = core
+        return spec(tp_ax(e), fsdp_ax(d), None)
+    if nd == 3 and name == "wo":                        # (E, ff, d)
+        e, ff, d = core
+        return spec(tp_ax(e), None, fsdp_ax(d))
+    if name == "router" and nd == 2:                    # (d, E)
+        d, e = core
+        return spec(fsdp_ax(d), None)
+
+    # ---------------- dense MLP ----------------
+    if name in ("wi", "wg") and nd == 2:                # (d, ff)
+        d, ff = core
+        return spec(fsdp_ax(d), tp_ax(ff))
+    if name == "wo" and nd == 2:                        # (ff, d)
+        ff, d = core
+        return spec(tp_ax(ff), fsdp_ax(d))
+
+    # ---------------- SSM / RG-LRU projections ----------------
+    if name == "in_proj" and nd == 2:                   # (d, big)
+        d, big = core
+        return spec(fsdp_ax(d), tp_ax(big))
+    if name == "out_proj" and nd == 2:                  # (big, d)
+        big, d = core
+        return spec(tp_ax(big), fsdp_ax(d))
+    if name == "conv_w" and nd == 2:                    # (w, C)
+        w, c = core
+        return spec(None, tp_ax(c))
+
+    # small vectors / norms / gates: replicate
+    return spec(*([None] * nd))
+
+
+def params_sharding(params_shapes: PyTree, mesh: Mesh, *,
+                    fsdp: bool) -> PyTree:
+    """NamedSharding tree matching a params (or opt m/v) shape tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    out = []
+    for path, leaf in flat:
+        spec = param_spec(_path_str(path), leaf.shape, mesh, fsdp=fsdp)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_state_sharding(opt_shapes: PyTree, mesh: Mesh, *, fsdp: bool) -> PyTree:
+    """m/v follow params; step is replicated."""
+    def one(path, leaf):
+        ps = _path_str(path)
+        if ps.endswith("step"):
+            return NamedSharding(mesh, P())
+        # strip the leading m/ or v/ so param rules apply
+        core = ps.split("/", 1)[1] if "/" in ps else ps
+        return NamedSharding(mesh, param_spec(core, leaf.shape, mesh,
+                                              fsdp=fsdp))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat])
+
+
+# ------------------------------------------------------------------ data
+def batch_sharding(batch_shapes: PyTree, mesh: Mesh) -> PyTree:
+    """Training/prefill batches: batch dim over the batch axes."""
+    ba = batch_axes(mesh)
+
+    def one(leaf):
+        b = leaf.shape[0]
+        first = ba if _fits(b, mesh, ba) else \
+            ("data" if _fits(b, mesh, "data") else None)
+        return NamedSharding(mesh, P(first, *([None] * (len(leaf.shape) - 1))))
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_spec(path: str, shape: tuple, mesh: Mesh, cfg: ArchConfig, *,
+               long_context: bool) -> P:
+    """Decode-cache sharding. See module docstring."""
+    ba = batch_axes(mesh)
+    name = path.split("/")[-1]
+    # leading stacking axis: scan-period caches ("blocks/...") and the
+    # enc-dec caches (self_k/cross_k...: stacked over decoder layers)
+    stacked = "blocks" in path or name.startswith(("self_", "cross_"))
+    lead = 1 if stacked else 0
+    core = shape[lead:]
+
+    def spec(*axes):
+        return P(*(((None,) * lead) + axes))
+    if name in ("k", "v", "self_k", "self_v", "cross_k", "cross_v"):
+        b, c, hkv, hd = core
+        if long_context:
+            # batch=1: context-shard the cache length over "data"
+            seq_ax = "data" if _fits(c, mesh, "data") else None
+            head_ax = "model" if _fits(hkv, mesh, "model") else None
+            return spec(None, seq_ax, head_ax, None)
+        b_ax = ba if _fits(b, mesh, ba) else \
+            ("data" if _fits(b, mesh, "data") else None)
+        if _fits(hkv, mesh, "model"):
+            return spec(b_ax, None, "model", None)
+        if _fits(c, mesh, "model"):
+            return spec(b_ax, "model", None, None)
+        return spec(b_ax, None, None, None)
+    if name in ("pos", "self_pos"):
+        b, c = core
+        if long_context:
+            return spec(None, "data" if _fits(c, mesh, "data") else None)
+        b_ax = ba if _fits(b, mesh, ba) else \
+            ("data" if _fits(b, mesh, "data") else None)
+        return spec(b_ax, None)
+    if name == "ssm":                                   # (B, H, P, N)
+        b, h, pdim, n = core
+        b_ax = ba if _fits(b, mesh, ba) else \
+            ("data" if _fits(b, mesh, "data") else None)
+        return spec(b_ax, "model" if _fits(h, mesh, "model") else None,
+                    None, None)
+    if name == "conv":                                  # (B, W-1, C)
+        b, w, c = core
+        b_ax = ba if _fits(b, mesh, ba) else \
+            ("data" if _fits(b, mesh, "data") else None)
+        return spec(b_ax, None, "model" if _fits(c, mesh, "model") else None)
+    if name == "h":                                     # (B, w) rglru state
+        b, w = core
+        b_ax = ba if _fits(b, mesh, ba) else \
+            ("data" if _fits(b, mesh, "data") else None)
+        return spec(b_ax, "model" if _fits(w, mesh, "model") else None)
+    return spec(*([None] * len(core)))
+
+
+def cache_sharding(cache_shapes: PyTree, mesh: Mesh, cfg: ArchConfig, *,
+                   long_context: bool) -> PyTree:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    out = [NamedSharding(mesh, cache_spec(_path_str(p), l.shape, mesh, cfg,
+                                          long_context=long_context))
+           for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def token_sharding(shape: tuple, mesh: Mesh) -> NamedSharding:
+    """Decode-step per-sequence vectors: (B,) over batch axes."""
+    ba = batch_axes(mesh)
+    b = shape[0]
+    first = ba if _fits(b, mesh, ba) else \
+        ("data" if _fits(b, mesh, "data") else None)
+    return NamedSharding(mesh, P(first, *([None] * (len(shape) - 1))))

@@ -1,0 +1,108 @@
+"""Single-token (flash-decode) attention against a ring-buffered KV cache.
+
+One new query per sequence attends to a cache of C slots whose absolute
+positions arrive as a side input (``kv_pos``; -1 = never written). The
+kernel tiles the cache sequence into VMEM blocks and carries the online
+softmax state (m, l, acc) across the kv-block grid axis — the TPU-native
+flash-decode: the cache streams HBM->VMEM exactly once, and the fp32
+accumulator never leaves VMEM.
+
+GQA via index_map (q-head -> kv-head h // rep), validity masking from
+kv_pos (handles ring-buffer wraparound and sliding windows without any
+position arithmetic in the layer code).
+
+Oracle: ``repro.kernels.ref.decode_attention``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, kvpos_ref, qpos_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale: float, window: int,
+            softcap: float, n_kv_blocks: int):
+    ikv = pl.program_id(2)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, :]                          # (D,)
+    k = k_ref[0, :, 0, :]                       # (bkv, D)
+    v = v_ref[0, :, 0, :]
+    kv_pos = kvpos_ref[0, :]                    # (bkv,)
+    q_pos = qpos_ref[0]
+
+    s = jnp.sum(k.astype(jnp.float32) * q.astype(jnp.float32)[None, :],
+                axis=1) * scale                 # (bkv,)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = (kv_pos >= 0) & (kv_pos <= q_pos)
+    if window > 0:
+        valid &= kv_pos > (q_pos - window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[0] = l_ref[0] * corr + jnp.sum(p)
+    acc_ref[...] = acc_ref[...] * corr + jnp.sum(
+        p[:, None] * v.astype(jnp.float32), axis=0)[None, :]
+    m_ref[0] = m_new
+
+    @pl.when(ikv == n_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[0], 1e-30)
+        o_ref[0, 0, :] = (acc_ref[0, :] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "scale", "block_kv",
+                              "interpret"))
+def decode_attention(q, k_cache, v_cache, kv_pos, q_pos, *, window: int = 0,
+                     softcap: float = 0.0, scale=None, block_kv: int = 512,
+                     interpret: bool = False):
+    """q: (B, H, D); k_cache/v_cache: (B, C, Hkv, D); kv_pos: (B, C);
+    q_pos: (B,). Returns (B, H, D)."""
+    b, h, d = q.shape
+    _, c, hkv, _ = k_cache.shape
+    rep = h // hkv
+    scale = float(d ** -0.5 if scale is None else scale)
+    block_kv = min(block_kv, c)
+    assert c % block_kv == 0, (c, block_kv)
+    n_kv = c // block_kv
+    grid = (b, h, n_kv)
+
+    kernel = functools.partial(_kernel, scale=scale, window=window,
+                               softcap=softcap, n_kv_blocks=n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda bb, hh, ikv: (bb, hh, 0)),
+            pl.BlockSpec((1, block_kv, 1, d),
+                         lambda bb, hh, ikv: (bb, ikv, hh // rep, 0)),
+            pl.BlockSpec((1, block_kv, 1, d),
+                         lambda bb, hh, ikv: (bb, ikv, hh // rep, 0)),
+            pl.BlockSpec((1, block_kv), lambda bb, hh, ikv: (bb, ikv)),
+            pl.BlockSpec((1,), lambda bb, hh, ikv: (bb,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda bb, hh, ikv: (bb, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),        # m
+            pltpu.VMEM((1,), jnp.float32),        # l
+            pltpu.VMEM((1, d), jnp.float32),      # acc
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, kv_pos, q_pos)

@@ -1,0 +1,111 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+Every op has three execution paths:
+
+* ``ref``      — the pure-jnp oracle (``repro.kernels.ref``). Default on
+                 CPU and for the multi-pod dry-run (fully shardable HLO).
+* ``pallas``   — the Pallas TPU kernel compiled for real (TPU target).
+* ``interp``   — the same Pallas kernel in interpret mode (CPU-correct,
+                 used by the kernel test suite).
+
+Select globally via ``set_implementation`` or the REPRO_KERNELS env var,
+or per-call via the ``impl=`` keyword.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref as _ref
+
+_IMPL = os.environ.get("REPRO_KERNELS", "ref")
+_VALID = ("ref", "pallas", "interp", "fused")
+
+
+def set_implementation(impl: str) -> None:
+    global _IMPL
+    if impl not in _VALID:
+        raise ValueError(f"impl must be one of {_VALID}, got {impl}")
+    _IMPL = impl
+
+
+def get_implementation() -> str:
+    return _IMPL
+
+
+def _resolve(impl: Optional[str]) -> str:
+    return impl if impl is not None else _IMPL
+
+
+def attention(q, k, v, *, causal=True, window=0, softcap=0.0, scale=None,
+              segment_pos=None, impl: Optional[str] = None):
+    """Multi-head attention (GQA/window/softcap). See kernels.ref.attention."""
+    mode = _resolve(impl)
+    if mode == "ref":
+        return _ref.attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap, scale=scale,
+                              segment_pos=segment_pos)
+    if mode == "fused":
+        from repro.kernels import fused
+        return fused.fused_attention(q, k, v, causal, window, softcap,
+                                     scale, segment_pos)
+    from repro.kernels import flash_attention as fa
+    return fa.flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap, scale=scale,
+                              segment_pos=segment_pos,
+                              interpret=(mode == "interp"))
+
+
+def decode_attention(q, k_cache, v_cache, kv_pos, q_pos, *, window=0,
+                     softcap=0.0, scale=None, impl: Optional[str] = None):
+    """Single-token attention against a KV cache. See kernels.ref."""
+    mode = _resolve(impl)
+    if mode == "ref":
+        return _ref.decode_attention(q, k_cache, v_cache, kv_pos, q_pos,
+                                     window=window, softcap=softcap,
+                                     scale=scale)
+    if mode == "fused":
+        from repro.kernels import fused
+        return fused.fused_decode_attention(q, k_cache, v_cache, kv_pos,
+                                            q_pos, window=window,
+                                            softcap=softcap, scale=scale)
+    from repro.kernels import decode_attention as da
+    return da.decode_attention(q, k_cache, v_cache, kv_pos, q_pos,
+                               window=window, softcap=softcap, scale=scale,
+                               interpret=(mode == "interp"))
+
+
+def ssd_scan(x, dt, a, b, c, d_skip, initial_state=None,
+             return_final_state=False, impl: Optional[str] = None,
+             chunk: int = 64):
+    """Mamba-2 SSD scan. See kernels.ref.ssd_scan."""
+    mode = _resolve(impl)
+    if mode == "ref":
+        return _ref.ssd_scan(x, dt, a, b, c, d_skip,
+                             initial_state=initial_state,
+                             return_final_state=return_final_state)
+    if mode == "fused":
+        from repro.kernels import fused
+        return fused.fused_ssd_scan(x, dt, a, b, c, d_skip,
+                                    initial_state=initial_state,
+                                    return_final_state=return_final_state,
+                                    chunk=chunk)
+    from repro.kernels import ssd_scan as ssd
+    return ssd.ssd_scan(x, dt, a, b, c, d_skip,
+                        initial_state=initial_state,
+                        return_final_state=return_final_state,
+                        chunk=chunk, interpret=(mode == "interp"))
+
+
+def routing_score(lam, alpha, beta, gamma, mu, n, rtt, slo, cost,
+                  erlang_c_table, impl: Optional[str] = None):
+    """Batched LA-IMR routing decisions. See kernels.ref.routing_score."""
+    mode = _resolve(impl)
+    if mode in ("ref", "fused"):
+        return _ref.routing_score(lam, alpha, beta, gamma, mu, n, rtt, slo,
+                                  cost, erlang_c_table)
+    from repro.kernels import routing_score as rs
+    return rs.routing_score(lam, alpha, beta, gamma, mu, n, rtt, slo, cost,
+                            erlang_c_table, interpret=(mode == "interp"))

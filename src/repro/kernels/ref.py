@@ -1,0 +1,193 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the semantics contract: each Pallas kernel's test sweeps shapes
+and dtypes and asserts allclose against the function here. They are also
+the default execution path on CPU (models call them through
+``repro.kernels.ops``), since the Pallas TPU kernels only run in
+interpret mode on this host.
+
+Conventions: q/k/v are (B, S, H, D) ("BSHD"); GQA is expressed as
+n_heads % n_kv_heads == 0 with kv tensors carrying n_kv heads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, Hkv, D) -> (B, S, Hkv*n_rep, D) by head repetition (GQA)."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)) \
+        .reshape(b, s, h * n_rep, d)
+
+
+def _softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap if cap > 0 else x
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int = 0, softcap: float = 0.0,
+              scale: float | None = None,
+              segment_pos: jax.Array | None = None) -> jax.Array:
+    """Full (quadratic) multi-head attention with GQA / sliding window /
+    logit soft-capping. Oracle for ``flash_attention``.
+
+    q: (B, Sq, H, D);  k, v: (B, Skv, Hkv, D). For self-attention during
+    training/prefill Sq == Skv; ``causal`` masks j > i; ``window`` > 0
+    additionally masks j <= i - window (sliding window, gemma2-style);
+    ``softcap`` applies tanh capping to the logits (gemma2).
+    ``segment_pos``: optional (B, Sq) absolute positions of the queries
+    (defaults to arange; needed when Sq is a suffix of the kv sequence).
+    """
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    k = _repeat_kv(k, h // hkv)
+    v = _repeat_kv(v, h // hkv)
+    scale = (d ** -0.5) if scale is None else scale
+
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = _softcap(logits, softcap)
+
+    if segment_pos is None:
+        qpos = jnp.arange(sq)[None, :] + (skv - sq)   # suffix alignment
+        qpos = jnp.broadcast_to(qpos, (b, sq))
+    else:
+        qpos = segment_pos
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((b, sq, skv), bool)
+    if causal:
+        mask &= kpos[None, None, :] <= qpos[:, :, None]
+    if window > 0:
+        mask &= kpos[None, None, :] > qpos[:, :, None] - window
+    logits = jnp.where(mask[:, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_pos: jax.Array, q_pos: jax.Array, *,
+                     window: int = 0, softcap: float = 0.0,
+                     scale: float | None = None) -> jax.Array:
+    """Single-token attention against a (possibly ring-buffered) KV cache.
+    Oracle for ``decode_attention``.
+
+    q: (B, H, D) — one new token per sequence.
+    k_cache/v_cache: (B, C, Hkv, D) — C cache slots.
+    kv_pos: (B, C) int32 — absolute position held in each slot; negative
+        means the slot has never been written.
+    q_pos: (B,) int32 — the query's absolute position.
+    Valid keys: kv_pos >= 0, kv_pos <= q_pos, and within the window if set.
+    """
+    b, h, d = q.shape
+    _, c, hkv, _ = k_cache.shape
+    k = _repeat_kv(k_cache, h // hkv)
+    v = _repeat_kv(v_cache, h // hkv)
+    scale = (d ** -0.5) if scale is None else scale
+    logits = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = _softcap(logits, softcap)
+    valid = (kv_pos >= 0) & (kv_pos <= q_pos[:, None])
+    if window > 0:
+        valid &= kv_pos > (q_pos[:, None] - window)
+    logits = jnp.where(valid[:, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array, d_skip: jax.Array,
+             initial_state: jax.Array | None = None,
+             return_final_state: bool = False):
+    """Mamba-2 SSD (state-space dual) — sequential reference.
+
+    x:  (B, L, H, P)   input heads
+    dt: (B, L, H)      softplus-activated step sizes (>0)
+    a:  (H,)           negative state decay (A = -exp(a_log) outside)
+    b:  (B, L, G, N)   input projection (G groups, N state)
+    c:  (B, L, G, N)   output projection
+    d_skip: (H,)       skip connection
+    h_t = exp(dt*a) * h_{t-1} + dt * x_t  b_t^T ;  y_t = c_t h_t + D x_t
+
+    Sequential lax.scan over L — the oracle the chunked Pallas kernel must
+    match. Heads are grouped: head h uses group h // (H // G).
+    """
+    bsz, L, H, P = x.shape
+    _, _, G, N = b.shape
+    rep = H // G
+    b_h = jnp.repeat(b, rep, axis=2)   # (B, L, H, N)
+    c_h = jnp.repeat(c, rep, axis=2)
+
+    decay = jnp.exp(dt.astype(jnp.float32) * a.astype(jnp.float32))  # (B,L,H)
+    xin = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]  # dt * x
+
+    def step(h, inputs):
+        dec_t, x_t, b_t, c_t = inputs
+        # h: (B, H, P, N)
+        h = h * dec_t[..., None, None] \
+            + x_t[..., :, None] * b_t[..., None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((bsz, H, P, N), jnp.float32) if initial_state is None \
+        else initial_state.astype(jnp.float32)
+    xs = (jnp.moveaxis(decay, 1, 0), jnp.moveaxis(xin, 1, 0),
+          jnp.moveaxis(b_h.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(c_h.astype(jnp.float32), 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (B, L, H, P)
+    y = y + x.astype(jnp.float32) * d_skip.astype(jnp.float32)[None, None, :, None]
+    y = y.astype(x.dtype)
+    if return_final_state:
+        return y, h_final
+    return y
+
+
+def routing_score(lam: jax.Array, alpha: jax.Array, beta: jax.Array,
+                  gamma: jax.Array, mu: jax.Array, n: jax.Array,
+                  rtt: jax.Array, slo: jax.Array, cost: jax.Array,
+                  erlang_c_table: jax.Array):
+    """Batched LA-IMR routing decision. Oracle for ``routing_score``.
+
+    For each request r (arrival-rate estimate lam[r], shape (R,)) against
+    I candidate deployments, compute g_mi(lam) = affine power law
+    + RTT + Erlang-C queueing (via a precomputed table over a rho grid —
+    the in-memory table of paper §IV-B step ii), mask infeasible
+    (g > slo or rho >= 1), and return (best index, best g, feasible?).
+
+    erlang_c_table: (I, T) — per-deployment expected wait at rho grid
+    points rho = linspace(0, 1, T) (last entries may be large/BIG).
+    """
+    R = lam.shape[0]
+    T = erlang_c_table.shape[1]
+    lam_ = lam[:, None].astype(jnp.float32)                     # (R, 1)
+    lam_tilde = lam_ / jnp.maximum(n[None, :], 1.0)
+    proc = alpha[None, :] + beta[None, :] * jnp.power(
+        jnp.maximum(lam_tilde, 0.0), gamma[None, :])
+    rho = lam_ / jnp.maximum(n[None, :] * mu[None, :], 1e-12)   # (R, I)
+    # table lookup with linear interpolation on the rho grid
+    pos = jnp.clip(rho, 0.0, 1.0) * (T - 1)
+    lo = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, T - 2)
+    frac = pos - lo.astype(jnp.float32)
+    tbl = erlang_c_table.astype(jnp.float32)
+    # gather per (r, i): table[i, lo[r, i]]
+    q_lo = jax.vmap(lambda l_row: tbl[jnp.arange(tbl.shape[0]), l_row])(lo)
+    q_hi = jax.vmap(lambda l_row: tbl[jnp.arange(tbl.shape[0]), l_row + 1])(lo)
+    q = q_lo * (1 - frac) + q_hi * frac
+    g = proc + rtt[None, :] + q
+    feasible = (rho < 1.0) & (g <= slo[None, :])
+    g_masked = jnp.where(feasible, g, jnp.inf)
+    gmin = jnp.min(g_masked, axis=1, keepdims=True)
+    near = feasible & (g_masked <= gmin * (1.0 + 1e-5) + 1e-9)
+    idx = jnp.argmin(jnp.where(near, cost[None, :], jnp.inf), axis=1)
+    any_ok = jnp.any(feasible, axis=1)
+    best_g = jnp.take_along_axis(g, idx[:, None], axis=1)[:, 0]
+    return idx, best_g, any_ok

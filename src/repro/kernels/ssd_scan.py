@@ -1,0 +1,128 @@
+"""Chunked Mamba-2 SSD scan for TPU.
+
+The TPU re-blocking of the SSD algorithm (arXiv:2405.21060 §6): split the
+sequence into chunks of Q steps; within a chunk everything is dense
+matmuls the MXU likes —
+
+  intra-chunk :  Y_diag = ((C B^T) ⊙ L) X          (Q x Q causal-decay mask)
+  chunk state :  H_c    = (decay-weighted X)^T B    (P x N)
+  inter-chunk :  Y_off  = decay ⊙ (C H_{c-1})
+
+— and the only sequential dependence is the (P x N) state carried from
+chunk to chunk, which lives in fp32 VMEM scratch across the chunk grid
+axis. This replaces the Mamba-2 GPU kernel's warp-level recurrence with
+a systolic-friendly block recurrence; nothing in the algorithm needs
+shared-memory banking or shuffles.
+
+Grid: (B, H, L/Q) with the chunk axis minor (sequential carry).
+Oracle: ``repro.kernels.ref.ssd_scan`` (element-recurrent lax.scan).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, dskip_ref, h0_ref,
+            y_ref, hout_ref, state_ref, *, n_chunks: int, rep: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = h0_ref[0, 0].astype(jnp.float32)   # (P, N)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)               # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)                # (Q,)
+    a = a_ref[0]                                            # scalar
+    bmat = b_ref[0, :, 0, :].astype(jnp.float32)            # (Q, N)
+    cmat = c_ref[0, :, 0, :].astype(jnp.float32)            # (Q, N)
+    d_skip = dskip_ref[0]
+
+    # cumulative log-decay within the chunk: seg[i] = sum_{j<=i} dt_j * a
+    dta = dt * a                                            # (Q,) negative
+    seg = jnp.cumsum(dta)                                   # (Q,)
+
+    # ---- inter-chunk: y_off[i] = exp(seg[i]) * C_i . H_prev^T ----------
+    h_prev = state_ref[...]                                 # (P, N)
+    y_off = jnp.exp(seg)[:, None] * jax.lax.dot_general(
+        cmat, h_prev, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                 # (Q, P)
+
+    # ---- intra-chunk: causal decay mask L[i,j] = exp(seg_i - seg_j) ----
+    li = seg[:, None] - seg[None, :]                        # (Q, Q)
+    q = seg.shape[0]
+    row = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    lmask = jnp.where(row >= col, jnp.exp(li), 0.0)
+    cb = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    xin = x * dt[:, None]                                   # dt_j * x_j
+    y_diag = jax.lax.dot_general(cb * lmask, xin, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    y = y_diag + y_off + x * d_skip
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # ---- state update: H_c = exp(seg_last) H_prev + sum_j w_j x_j b_j^T
+    seg_last = seg[-1]
+    w = jnp.exp(seg_last - seg)                             # (Q,)
+    h_new = jnp.exp(seg_last) * h_prev + jax.lax.dot_general(
+        xin * w[:, None], bmat, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                 # (P, N)
+    state_ref[...] = h_new
+
+    @pl.when(ic == n_chunks - 1)
+    def _finish():
+        hout_ref[0, 0] = h_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret",
+                                             "return_final_state"))
+def ssd_scan(x, dt, a, b, c, d_skip, initial_state=None,
+             return_final_state: bool = False, chunk: int = 64,
+             interpret: bool = False):
+    """x: (B, L, H, P); dt: (B, L, H); a, d_skip: (H,);
+    b, c: (B, L, G, N). Returns y (+ final state (B, H, P, N))."""
+    bsz, L, H, P = x.shape
+    _, _, G, N = b.shape
+    rep = H // G
+    chunk = min(chunk, L)
+    assert L % chunk == 0, (L, chunk)
+    n_chunks = L // chunk
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, H, P, N), jnp.float32)
+
+    grid = (bsz, H, n_chunks)
+    kernel = functools.partial(_kernel, n_chunks=n_chunks, rep=rep)
+    y, h_final = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda bb, hh, ic: (bb, ic, hh, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bb, hh, ic: (bb, ic, hh)),
+            pl.BlockSpec((1,), lambda bb, hh, ic: (hh,)),
+            pl.BlockSpec((1, chunk, 1, N),
+                         lambda bb, hh, ic: (bb, ic, hh // rep, 0)),
+            pl.BlockSpec((1, chunk, 1, N),
+                         lambda bb, hh, ic: (bb, ic, hh // rep, 0)),
+            pl.BlockSpec((1,), lambda bb, hh, ic: (hh,)),
+            pl.BlockSpec((1, 1, P, N), lambda bb, hh, ic: (bb, hh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda bb, hh, ic: (bb, ic, hh, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bb, hh, ic: (bb, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, L, H, P), x.dtype),
+            jax.ShapeDtypeStruct((bsz, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c, d_skip, initial_state)
+    if return_final_state:
+        return y, h_final
+    return y

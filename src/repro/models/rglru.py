@@ -1,0 +1,127 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block structure (the Griffin 'recurrent block'):
+
+  x, gate = in_proj(u)                    # d -> 2w
+  x = causal_conv1d(x, width 4)
+  h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)     (RG-LRU)
+  out = out_proj( h ⊙ gelu(gate) )        # w -> d
+
+with  a_t = exp(-c · softplus(Λ) · r_t),  r_t = σ(W_a x_t + b_a),
+      i_t = σ(W_x x_t + b_x),  c = 8.
+
+Gate projections W_a/W_x are diagonal here (Griffin uses block-diagonal
+per head; diagonal preserves the recurrence structure at lower cost —
+noted in DESIGN.md as a simplification). The linear recurrence is
+evaluated with ``jax.lax.associative_scan`` — a log-depth parallel scan
+that XLA maps well to TPU; no custom kernel needed (measured: the block
+is memory-bound, see EXPERIMENTS §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+
+_C = 8.0
+
+
+def width(cfg: ArchConfig) -> int:
+    return cfg.rglru_width or cfg.d_model
+
+
+def init(key, cfg: ArchConfig, dtype) -> dict:
+    d, w = cfg.d_model, width(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": layers._dense_init(k1, (d, 2 * w), d, dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.conv_width, w), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        # RG-LRU gates (diagonal) + learnable decay Λ
+        "w_a": jnp.zeros((w,), jnp.float32),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_x": jnp.zeros((w,), jnp.float32),
+        "b_x": jnp.zeros((w,), jnp.float32),
+        # init so a ≈ 0.9..0.999 at r=1 (Griffin's Λ init range)
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, w)) / _C)).astype(jnp.float32),
+        "out_proj": layers._dense_init(k3, (w, d), w, dtype),
+    }
+
+
+def _gates(params, x):
+    """a_t (recurrence gate) and gated input, all fp32. x: (..., w)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(params["w_a"] * xf + params["b_a"])
+    i = jax.nn.sigmoid(params["w_x"] * xf + params["b_x"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    return a, gated_x
+
+
+def forward(params: dict, cfg: ArchConfig, u: jax.Array,
+            state: dict | None = None, return_state: bool = False):
+    """Full-sequence pass. u: (B, L, d)."""
+    w = width(cfg)
+    proj = layers.matmul(u, params["in_proj"])
+    x, gate = proj[..., :w], proj[..., w:]
+
+    from repro.models.ssm import _causal_conv
+    conv_buf = None if state is None else state["conv"]
+    x, conv_buf = _causal_conv(params["conv_w"], params["conv_b"], x,
+                               conv_buf, silu=False)  # Griffin: no conv act
+
+    a, gx = _gates(params, x)                        # (B, L, w) fp32
+    h0 = None if state is None else state["h"]
+    if h0 is not None:
+        # fold the carried hidden state in as a virtual step 0
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+        gx = jnp.concatenate([h0[:, None, :], gx], axis=1)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, br + ar * bl
+
+    a_all, h_all = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    h = h_all if h0 is None else h_all[:, 1:]
+    y = h.astype(u.dtype) * jax.nn.gelu(
+        gate.astype(jnp.float32), approximate=True).astype(u.dtype)
+    out = layers.matmul(y, params["out_proj"])
+    if return_state:
+        return out, {"conv": conv_buf, "h": h[:, -1, :]}
+    return out
+
+
+def init_state(cfg: ArchConfig, batch: int, dtype) -> dict:
+    w = width(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def decode_step(params: dict, cfg: ArchConfig, u: jax.Array, state: dict):
+    """One-token step. u: (B, 1, d)."""
+    w = width(cfg)
+    proj = layers.matmul(u, params["in_proj"])
+    x, gate = proj[..., :w], proj[..., w:]
+
+    buf = state["conv"]
+    ext = jnp.concatenate([buf.astype(x.dtype), x], axis=1)
+    cw = params["conv_w"].shape[0]
+    xc = jnp.einsum("bwc,wc->bc", ext[:, -cw:, :].astype(jnp.float32),
+                    params["conv_w"].astype(jnp.float32))
+    xc = xc + params["conv_b"].astype(jnp.float32)   # Griffin: no conv act
+    new_buf = ext[:, -(cw - 1):, :]
+
+    a, gx = _gates(params, xc)                       # (B, w)
+    h = a * state["h"] + gx
+    y = h[:, None, :].astype(u.dtype) * jax.nn.gelu(
+        gate.astype(jnp.float32), approximate=True).astype(u.dtype)
+    out = layers.matmul(y, params["out_proj"])
+    return out, {"conv": new_buf, "h": h}

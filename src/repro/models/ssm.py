@@ -1,0 +1,166 @@
+"""Mamba-2 block (SSD — state-space duality), train/prefill/decode paths.
+
+Faithful to arXiv:2405.21060 §7 (the Mamba-2 block):
+
+  in_proj: d -> [z (d_in), x (d_in), B (G·N), C (G·N), dt (H)]
+  causal depthwise conv (width 4) over [x, B, C]
+  dt = softplus(dt + dt_bias);  A = -exp(A_log)  (per head)
+  y = SSD(x·heads, dt, A, B, C) + D ⊙ x
+  out = out_proj( rmsnorm(y) * silu(z) )     (gated RMSNorm variant)
+
+The SSD scan itself is delegated to ``repro.kernels.ops.ssd_scan``
+(pure-jnp sequential oracle on CPU; chunked Pallas kernel on TPU).
+
+Decode carries two pieces of state per layer:
+  conv buffer (B, W-1, d_conv_channels) and SSM state (B, H, P, N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.models import layers
+
+
+def dims(cfg: ArchConfig) -> dict:
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    conv_ch = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+    return dict(d_in=d_in, n_heads=n_heads, head_dim=cfg.ssm_head_dim,
+                state=cfg.ssm_state, groups=cfg.ssm_groups,
+                conv_ch=conv_ch, conv_w=cfg.conv_width)
+
+
+def init(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    dd = dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_out = 2 * dd["d_in"] + 2 * dd["groups"] * dd["state"] + dd["n_heads"]
+    return {
+        "in_proj": layers._dense_init(k1, (d, proj_out), d, dtype),
+        "conv_w": (jax.random.normal(k2, (dd["conv_w"], dd["conv_ch"]),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((dd["conv_ch"],), dtype),
+        "dt_bias": jnp.zeros((dd["n_heads"],), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, dd["n_heads"],
+                                      dtype=jnp.float32)),
+        "d_skip": jnp.ones((dd["n_heads"],), jnp.float32),
+        "norm": layers.rmsnorm_init(dd["d_in"]),
+        "out_proj": layers._dense_init(k3, (dd["d_in"], d), dd["d_in"], dtype),
+    }
+
+
+def _split(cfg: ArchConfig, proj: jax.Array):
+    dd = dims(cfg)
+    gn = dd["groups"] * dd["state"]
+    z, x, b, c, dt = jnp.split(
+        proj, [dd["d_in"], 2 * dd["d_in"], 2 * dd["d_in"] + gn,
+               2 * dd["d_in"] + 2 * gn], axis=-1)
+    return z, x, b, c, dt
+
+
+def _causal_conv(conv_w, conv_b, u: jax.Array,
+                 buf: jax.Array | None = None, silu: bool = True):
+    """Depthwise causal conv. u: (B, L, C). Returns (y, new_buf) where
+    new_buf holds the last W-1 inputs for decode continuation.
+    ``silu``: Mamba applies SiLU after the conv; Griffin does not."""
+    w = conv_w.shape[0]
+    if buf is None:
+        pad = jnp.zeros((u.shape[0], w - 1, u.shape[2]), u.dtype)
+    else:
+        pad = buf.astype(u.dtype)
+    ext = jnp.concatenate([pad, u], axis=1)          # (B, L+W-1, C)
+    # depthwise: sum_w ext[:, t+i, c] * conv_w[i, c]
+    y = sum(ext[:, i:i + u.shape[1], :] * conv_w[i][None, None, :]
+            for i in range(w))
+    y = (y + conv_b).astype(jnp.float32)
+    if silu:
+        y = jax.nn.silu(y)
+    y = y.astype(u.dtype)
+    new_buf = ext[:, -(w - 1):, :] if w > 1 else pad
+    return y, new_buf
+
+
+def forward(params: dict, cfg: ArchConfig, x: jax.Array,
+            state: dict | None = None, return_state: bool = False):
+    """Full-sequence pass. x: (B, L, d). Optionally resumes/returns state."""
+    dd = dims(cfg)
+    bsz, L, _ = x.shape
+    proj = layers.matmul(x, params["in_proj"])
+    z, xs, b, c, dt = _split(cfg, proj)
+
+    conv_in = jnp.concatenate([xs, b, c], axis=-1)
+    conv_buf = None if state is None else state["conv"]
+    conv_out, conv_buf = _causal_conv(params["conv_w"], params["conv_b"],
+                                      conv_in, conv_buf)
+    gn = dd["groups"] * dd["state"]
+    xs = conv_out[..., :dd["d_in"]]
+    b = conv_out[..., dd["d_in"]:dd["d_in"] + gn]
+    c = conv_out[..., dd["d_in"] + gn:]
+
+    xh = xs.reshape(bsz, L, dd["n_heads"], dd["head_dim"])
+    bh = b.reshape(bsz, L, dd["groups"], dd["state"])
+    ch = c.reshape(bsz, L, dd["groups"], dd["state"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+
+    ssm_state = None if state is None else state["ssm"]
+    y, final = ops.ssd_scan(xh, dt, a, bh, ch, params["d_skip"],
+                            initial_state=ssm_state, return_final_state=True)
+    y = y.reshape(bsz, L, dd["d_in"])
+    y = layers.rmsnorm(params["norm"], y) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(x.dtype)
+    out = layers.matmul(y, params["out_proj"])
+    if return_state:
+        return out, {"conv": conv_buf, "ssm": final}
+    return out
+
+
+def init_state(cfg: ArchConfig, batch: int, dtype) -> dict:
+    dd = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, dd["conv_w"] - 1, dd["conv_ch"]), dtype),
+        "ssm": jnp.zeros((batch, dd["n_heads"], dd["head_dim"], dd["state"]),
+                         jnp.float32),
+    }
+
+
+def decode_step(params: dict, cfg: ArchConfig, x: jax.Array, state: dict):
+    """One-token step. x: (B, 1, d). O(1) in sequence length."""
+    dd = dims(cfg)
+    bsz = x.shape[0]
+    proj = layers.matmul(x, params["in_proj"])       # (B, 1, proj_out)
+    z, xs, b, c, dt = _split(cfg, proj)
+
+    conv_in = jnp.concatenate([xs, b, c], axis=-1)   # (B, 1, C)
+    buf = state["conv"]
+    ext = jnp.concatenate([buf.astype(conv_in.dtype), conv_in], axis=1)
+    w = params["conv_w"].shape[0]
+    y = jnp.einsum("bwc,wc->bc", ext[:, -w:, :].astype(jnp.float32),
+                   params["conv_w"].astype(jnp.float32))
+    y = jax.nn.silu(y + params["conv_b"].astype(jnp.float32))
+    new_buf = ext[:, -(w - 1):, :]
+
+    gn = dd["groups"] * dd["state"]
+    xs1 = y[:, :dd["d_in"]].reshape(bsz, dd["n_heads"], dd["head_dim"])
+    b1 = y[:, dd["d_in"]:dd["d_in"] + gn].reshape(bsz, dd["groups"], dd["state"])
+    c1 = y[:, dd["d_in"] + gn:].reshape(bsz, dd["groups"], dd["state"])
+    rep = dd["n_heads"] // dd["groups"]
+    b1 = jnp.repeat(b1, rep, axis=1)                 # (B, H, N)
+    c1 = jnp.repeat(c1, rep, axis=1)
+
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt1 * a)                          # (B, H)
+    h = state["ssm"]                                  # (B, H, P, N) fp32
+    h = h * decay[..., None, None] + (dt1[..., None] * xs1.astype(jnp.float32)
+                                      )[..., None] * b1[:, :, None, :]
+    yh = jnp.einsum("bhpn,bhn->bhp", h, c1)           # (B, H, P)
+    yh = yh + xs1.astype(jnp.float32) * params["d_skip"][None, :, None]
+    yh = yh.reshape(bsz, 1, dd["d_in"]).astype(x.dtype)
+    yh = layers.rmsnorm(params["norm"], yh) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(x.dtype)
+    out = layers.matmul(yh, params["out_proj"])
+    return out, {"conv": new_buf, "ssm": h}

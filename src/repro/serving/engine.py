@@ -1,0 +1,121 @@
+"""Batched serving engine.
+
+Provides the two pure functions the dry-run lowers for inference shapes
+(``prefill_step`` / ``decode_step``) plus a small continuous-batching
+engine used by the serving examples and the LA-IMR integration: requests
+join/leave decode slots between steps, which is how the router's replica
+pools map onto actual TPU batch slots.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import model
+
+PyTree = Any
+
+
+def make_prefill_fn(cfg: ArchConfig):
+    """(params, batch) -> (last-token logits, cache). Lowered for
+    prefill_* shapes."""
+    def fn(params, batch):
+        return model.prefill(params, cfg, batch)
+    return fn
+
+
+def make_decode_fn(cfg: ArchConfig):
+    """(params, tokens, cache, pos) -> (logits, cache). ONE new token per
+    sequence against a seq_len-deep cache — the decode_* dry-run shape."""
+    def fn(params, tokens, cache, pos):
+        return model.decode_step(params, cfg, tokens, cache, pos)
+    return fn
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray          # (B, steps)
+    steps: int
+
+
+class ServingEngine:
+    """Greedy batched generation with slot-based continuous batching.
+
+    The engine owns a fixed-size decode batch (``slots``); sequences are
+    assigned to free slots after prefill and release them on completion.
+    This is the data-plane object an LA-IMR 'replica' models: its service
+    rate is one decode step across all active slots.
+    """
+
+    def __init__(self, cfg: ArchConfig, params: PyTree, slots: int,
+                 max_len: int):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = model.init_cache(cfg, slots, max_len)
+        self.pos = jnp.zeros((slots,), jnp.int32)
+        self.active = np.zeros((slots,), bool)
+        self.current = jnp.zeros((slots,), jnp.int32)
+        self._decode = jax.jit(
+            lambda p, t, c, q: model.decode_step(p, self.cfg, t, c, q))
+
+    def free_slots(self) -> list[int]:
+        return [i for i in range(self.slots) if not self.active[i]]
+
+    def admit(self, slot: int, first_token: int, start_pos: int) -> None:
+        self.active[slot] = True
+        self.current = self.current.at[slot].set(first_token)
+        self.pos = self.pos.at[slot].set(start_pos)
+
+    def release(self, slot: int) -> None:
+        self.active[slot] = False
+
+    def step(self) -> np.ndarray:
+        """One decode step for all slots; returns the new tokens (B,)."""
+        logits, self.cache = self._decode(self.params, self.current,
+                                          self.cache, self.pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.current = nxt
+        self.pos = self.pos + 1
+        return np.asarray(nxt)
+
+    def generate(self, prompts: jax.Array, steps: int) -> GenerationResult:
+        """Prefill ``prompts`` (B<=slots, S) then greedy-decode ``steps``."""
+        b, s = prompts.shape
+        assert b <= self.slots
+        batch = {"tokens": prompts} if self.cfg.frontend == "tokens" else \
+            {"embeddings": prompts}
+        logits, cache = jax.jit(
+            lambda p, bb: model.prefill(p, self.cfg, bb))(self.params, batch)
+        # move the prefilled cache into the engine slots (b == slots fast path)
+        if b == self.slots:
+            self.cache = cache
+        else:
+            self.cache = jax.tree.map(
+                lambda full, new: full.at[..., :b, *([slice(None)] * 0)].set(new)
+                if False else _merge_batch(full, new, b), self.cache, cache)
+        first = jnp.argmax(logits, -1).astype(jnp.int32)
+        self.current = jnp.zeros((self.slots,), jnp.int32).at[:b].set(first)
+        self.pos = jnp.zeros((self.slots,), jnp.int32).at[:b].set(s)
+        self.active[:b] = True
+        out = [np.asarray(self.current[:b])]
+        for _ in range(steps - 1):
+            out.append(self.step()[:b])
+        return GenerationResult(tokens=np.stack(out, axis=1), steps=steps)
+
+
+def _merge_batch(full: jax.Array, new: jax.Array, b: int) -> jax.Array:
+    """Write `new` (batch b) into `full` along its batch axis (the axis
+    whose size differs)."""
+    for ax in range(full.ndim):
+        if full.shape[ax] != new.shape[ax]:
+            idx = [slice(None)] * full.ndim
+            idx[ax] = slice(0, b)
+            return full.at[tuple(idx)].set(new)
+    return new  # same shape: replace

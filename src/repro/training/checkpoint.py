@@ -1,0 +1,104 @@
+"""Minimal but real checkpointing: pytree <-> directory of .npy files.
+
+No orbax dependency; handles nested dicts/lists/scalars, preserves
+dtypes (including bfloat16 via a sidecar dtype tag), atomic via
+write-then-rename, keeps the last ``keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+_SEP = "__"
+
+
+def _flatten(tree: PyTree) -> dict[str, jax.Array]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"idx{p.idx}"
+    return str(p)
+
+
+def save(tree: PyTree, directory: str, step: int, keep: int = 3) -> str:
+    """Write checkpoint atomically; returns the checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    flat = _flatten(tree)
+    manifest = {}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        dtype_tag = str(leaf.dtype)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+        np.save(os.path.join(tmp, f"{key}.npy"), arr)
+        manifest[key] = dtype_tag
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "dtypes": manifest}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(directory, keep)
+    return final
+
+
+def restore(tree_like: PyTree, directory: str, step: int | None = None) -> PyTree:
+    """Restore into the structure of ``tree_like`` (shapes must match)."""
+    path = _resolve(directory, step)
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)["dtypes"]
+    flat_paths = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for pth, leaf in flat_paths[0]:
+        key = _SEP.join(_path_str(p) for p in pth)
+        arr = np.load(os.path.join(path, f"{key}.npy"))
+        dt = manifest[key]
+        if dt == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        out = jnp.asarray(arr, dtype=dt)
+        if out.shape != leaf.shape:
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{out.shape} vs {leaf.shape}")
+        leaves.append(out)
+    return jax.tree_util.tree_unflatten(flat_paths[1], leaves)
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def _resolve(directory: str, step: int | None) -> str:
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    return os.path.join(directory, f"step_{step:08d}")
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_"))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)

@@ -1,0 +1,74 @@
+"""Training step: loss, train state, jit'd update.
+
+``train_step`` is the function the multi-pod dry-run lowers for the
+train_4k shape: forward (scan-over-periods, remat) -> softmax
+cross-entropy -> backward -> AdamW.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model
+from repro.training import optimizer as opt
+
+PyTree = Any
+
+MOE_AUX_WEIGHT = 0.01
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: PyTree
+    opt_state: PyTree
+    opt_cfg: opt.AdamWConfig
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token NLL. logits fp32 (B, S, V); labels (B, S) int32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def loss_fn(params: PyTree, cfg: ArchConfig, batch: dict) -> tuple[jax.Array, dict]:
+    logits, aux = model.forward(params, cfg, batch)
+    nll = cross_entropy(logits, batch["labels"])
+    loss = nll + MOE_AUX_WEIGHT * aux
+    return loss, {"nll": nll, "moe_aux": aux}
+
+
+def make_train_state(key, cfg: ArchConfig, lr: float = 3e-4,
+                     total_steps: int = 10_000) -> TrainState:
+    params = model.init_params(key, cfg)
+    ocfg = opt.AdamWConfig(lr=lr, state_dtype=cfg.opt_state_dtype,
+                           total_steps=total_steps)
+    return TrainState(params=params, opt_state=opt.init_opt_state(params, ocfg),
+                      opt_cfg=ocfg)
+
+
+def train_step(state: TrainState, cfg: ArchConfig, batch: dict
+               ) -> tuple[TrainState, dict]:
+    """One optimizer step (eager wrapper; jit via make_jit_train_step)."""
+    (loss, extras), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        state.params, cfg, batch)
+    new_params, new_opt, stats = opt.apply_updates(
+        state.params, grads, state.opt_state, state.opt_cfg)
+    metrics = {"loss": loss, **extras, **stats}
+    return TrainState(new_params, new_opt, state.opt_cfg), metrics
+
+
+def make_functional_step(cfg: ArchConfig, ocfg: opt.AdamWConfig):
+    """(params, opt_state, batch) -> (params, opt_state, metrics) — the
+    pure function the dry-run lowers with explicit shardings."""
+    def step(params, opt_state, batch):
+        (loss, extras), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, batch)
+        new_params, new_opt, stats = opt.apply_updates(
+            params, grads, opt_state, ocfg)
+        return new_params, new_opt, {"loss": loss, **extras, **stats}
+    return step

@@ -1,0 +1,145 @@
+"""PM-HPA (paper §IV-D, §V-A3) and the reactive baseline autoscaler."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.autoscaler import PMHPA, ReactiveAutoscaler, desired_replicas
+from repro.core.catalogue import Cluster, Deployment
+from repro.core.latency_model import CLOUD, PI4_EDGE, YOLOV5M, g_fixed_replicas_np
+from repro.core.scheduler import QualityClass
+from repro.core.telemetry import MetricsRegistry
+
+
+def one_pool(n=1, n_max=8) -> Cluster:
+    return Cluster([Deployment(YOLOV5M, PI4_EDGE, QualityClass.BALANCED,
+                               n_replicas=n, n_max=n_max)])
+
+
+class TestDesiredReplicas:
+    def test_idle_needs_one(self):
+        dep = list(one_pool())[0]
+        assert desired_replicas(dep, 0.0, tau=2.0) == 1
+
+    def test_minimal_and_feasible(self):
+        dep = list(one_pool())[0]
+        for lam in [0.5, 1.5, 3.0, 4.5, 6.0]:
+            tau = 2.25 * dep.model.l_ref
+            n = desired_replicas(dep, lam, tau)
+            g_n = g_fixed_replicas_np(lam, np.array([n]), dep.model,
+                                      dep.instance, dep.gamma)[0]
+            if n < dep.n_max:
+                assert g_n <= tau, (lam, n, g_n)
+            if n > 1:
+                g_prev = g_fixed_replicas_np(lam, np.array([n - 1]), dep.model,
+                                             dep.instance, dep.gamma)[0]
+                assert not (g_prev <= tau), "not minimal"
+
+    def test_monotone_in_lambda(self):
+        dep = list(one_pool())[0]
+        tau = 2.25 * dep.model.l_ref
+        ns = [desired_replicas(dep, lam, tau) for lam in np.linspace(0.2, 8, 16)]
+        assert all(b >= a for a, b in zip(ns, ns[1:]))
+
+    def test_capped_at_n_max(self):
+        dep = list(one_pool(n_max=3))[0]
+        assert desired_replicas(dep, 50.0, tau=1.0) == 3
+
+
+class TestPMHPA:
+    def test_export_and_reconcile(self):
+        cl = one_pool(n=1)
+        m = MetricsRegistry()
+        hpa = PMHPA(cl, m, x=2.25)
+        dep = list(cl)[0]
+        want = hpa.export(dep, lam_accum=4.0)
+        assert want > 1
+        events = hpa.reconcile(t_now=5.0)
+        assert len(events) == 1
+        assert events[0].from_n == 1 and events[0].to_n == want
+
+    def test_no_event_when_converged(self):
+        cl = one_pool(n=2)
+        hpa = PMHPA(cl, x=2.25)
+        dep = list(cl)[0]
+        # export a metric equal to the current size
+        hpa.metrics.set_gauge(
+            hpa.metrics.desired_replicas_key(dep.model.name, dep.instance.name), 2)
+        assert hpa.reconcile(0.0) == []
+
+    def test_scale_in_hysteresis(self):
+        cl = one_pool(n=4)
+        hpa = PMHPA(cl, x=2.25, rho_low=0.3)
+        dep = list(cl)[0]
+        # moderate load: model wants fewer replicas but rho >= rho_low
+        lam = 0.4 * dep.n_replicas * dep.mu  # rho = 0.4
+        want = hpa.export(dep, lam)
+        assert want == 4  # held, no flapping
+        # near-idle: rho < rho_low -> allowed to shrink
+        lam = 0.1 * dep.n_replicas * dep.mu
+        want = hpa.export(dep, lam)
+        assert want < 4
+
+    def test_quota_bounds_scale_out(self):
+        cl = one_pool(n=1)
+        hpa = PMHPA(cl, x=2.25, quota=3)
+        dep = list(cl)[0]
+        hpa.export(dep, lam_accum=20.0)   # wants n_max=8
+        events = hpa.reconcile(0.0)
+        assert events[0].to_n <= 3
+
+    def test_due_period(self):
+        hpa = PMHPA(one_pool(), reconcile_period=5.0)
+        assert hpa.due(0.0)
+        hpa.reconcile(0.0)
+        assert not hpa.due(4.9)
+        assert hpa.due(5.0)
+
+
+class TestReactive:
+    def _mk(self, **kw):
+        cl = one_pool(n=1)
+        return cl, ReactiveAutoscaler(cl, slo_multiplier=2.25, **kw)
+
+    def test_no_action_before_stabilization(self):
+        cl, ra = self._mk(scrape_interval=0.0, up_stabilization=60.0)
+        dep = list(cl)[0]
+        for _ in range(50):
+            ra.observe(dep, 10.0)   # way over target
+        assert ra.reconcile(t_now=0.0) == []       # breach just started
+        assert ra.reconcile(t_now=30.0) == []      # still inside window
+        for _ in range(50):
+            ra.observe(dep, 10.0)
+        evs = ra.reconcile(t_now=61.0)             # lag elapsed -> act
+        assert len(evs) == 1 and evs[0].to_n > 1
+
+    def test_multiplicative_jump(self):
+        cl, ra = self._mk(scrape_interval=0.0, up_stabilization=0.0)
+        dep = list(cl)[0]
+        target = ra._target(dep)
+        for _ in range(20):
+            ra.observe(dep, 3.0 * target)
+        evs = ra.reconcile(t_now=1.0)
+        assert evs and evs[0].to_n == 3  # ceil(1 * 3.0)
+
+    def test_tolerance_deadband(self):
+        cl, ra = self._mk(scrape_interval=0.0, up_stabilization=0.0,
+                          tolerance=0.1)
+        dep = list(cl)[0]
+        target = ra._target(dep)
+        for _ in range(20):
+            ra.observe(dep, 1.05 * target)  # within 10% tolerance
+        assert ra.reconcile(1.0) == []
+
+    def test_scale_in_waits_long(self):
+        cl, ra = self._mk(scrape_interval=0.0, up_stabilization=0.0,
+                          down_stabilization=300.0)
+        dep = list(cl)[0]
+        dep.n_replicas = 4
+        for _ in range(20):
+            ra.observe(dep, 0.05)
+        assert ra.reconcile(10.0) == []     # low but inside down window
+        for _ in range(20):
+            ra.observe(dep, 0.05)
+        evs = ra.reconcile(320.0)
+        assert evs and evs[0].to_n == 3     # one step down, conservative

@@ -1,0 +1,72 @@
+"""Capacity planning — Eq. (23) joint replica sizing + routing."""
+import pytest
+
+from repro.core.capacity import evaluate, plan_exhaustive, plan_greedy
+from repro.core.catalogue import Cluster, Deployment, paper_cluster
+from repro.core.latency_model import CLOUD, PI4_EDGE, YOLOV5M
+from repro.core.scheduler import QualityClass
+
+
+def small_cluster(n_max=4) -> Cluster:
+    return Cluster([
+        Deployment(YOLOV5M, PI4_EDGE, QualityClass.BALANCED, n_max=n_max),
+        Deployment(YOLOV5M, CLOUD, QualityClass.BALANCED, n_max=n_max),
+    ])
+
+
+class TestEvaluate:
+    def test_infeasible_when_unstable(self):
+        cl = small_cluster()
+        plan = evaluate(cl, {"yolov5m": 50.0},
+                        {d.key: 1 for d in cl}, beta=2.5, x=2.25)
+        assert not plan.feasible
+
+    def test_cost_accounting(self):
+        cl = small_cluster()
+        layout = {d.key: 2 for d in cl}
+        plan = evaluate(cl, {"yolov5m": 0.5}, layout, beta=2.5, x=2.25)
+        want = sum(2 * d.instance.cost for d in cl)
+        assert plan.cost == pytest.approx(want)
+
+    def test_objective_formula(self):
+        cl = small_cluster()
+        layout = {d.key: 3 for d in cl}
+        plan = evaluate(cl, {"yolov5m": 1.0}, layout, beta=2.5, x=2.25)
+        assert plan.objective == pytest.approx(
+            plan.worst_latency + 2.5 * plan.cost)
+
+
+class TestPlanners:
+    def test_greedy_matches_exhaustive_small(self):
+        for lam in [1.0, 3.0, 6.0]:
+            g = plan_greedy(small_cluster(), {"yolov5m": lam})
+            e = plan_exhaustive(small_cluster(), {"yolov5m": lam})
+            assert g.feasible == e.feasible
+            # greedy may tie rather than beat; allow tiny slack
+            assert g.objective <= e.objective * 1.05 + 1e-6
+
+    def test_plans_are_stable(self):
+        plan = plan_greedy(small_cluster(), {"yolov5m": 6.0})
+        assert plan.feasible
+        cl = small_cluster()
+        for d in cl:
+            n = plan.replicas[d.key]
+            assert 1 <= n <= d.n_max
+
+    def test_higher_load_costs_more(self):
+        lo = plan_greedy(small_cluster(8), {"yolov5m": 1.0})
+        hi = plan_greedy(small_cluster(8), {"yolov5m": 8.0})
+        assert hi.cost >= lo.cost
+
+    def test_beta_tradeoff(self):
+        # large beta -> prefer fewer replicas (higher latency tolerated)
+        cheap = plan_greedy(small_cluster(8), {"yolov5m": 3.0}, beta=50.0)
+        fast = plan_greedy(small_cluster(8), {"yolov5m": 3.0}, beta=0.01)
+        assert sum(cheap.replicas.values()) <= sum(fast.replicas.values())
+        assert cheap.worst_latency >= fast.worst_latency - 1e-6
+
+    def test_paper_cluster_plan(self):
+        cl = paper_cluster(n_edge_max=4, n_cloud_max=4)
+        lam = {"efficientdet": 8.0, "yolov5m": 3.0, "faster_rcnn": 1.0}
+        plan = plan_greedy(cl, lam)
+        assert plan.feasible

@@ -1,0 +1,65 @@
+"""Catalogue: paper cluster topology + the dry-run -> LA-IMR bridge."""
+import os
+
+import pytest
+
+from repro.core.catalogue import Cluster, paper_cluster, tpu_catalogue
+from repro.core.scheduler import QualityClass
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "dryrun")
+
+
+class TestPaperCluster:
+    def test_three_lanes(self):
+        cl = paper_cluster()
+        assert len(cl.for_quality(QualityClass.LOW_LATENCY)) == 1
+        assert len(cl.for_quality(QualityClass.BALANCED)) == 2
+        assert len(cl.for_quality(QualityClass.PRECISE)) == 1
+
+    def test_edge_offloads_to_same_model_cloud(self):
+        cl = paper_cluster()
+        up = cl.upstream_of(cl["yolov5m@pi4-edge"])
+        assert up is cl["yolov5m@cloud"]
+
+    def test_duplicate_rejected(self):
+        cl = paper_cluster()
+        deps = list(cl)
+        with pytest.raises(ValueError):
+            Cluster(deps + [deps[0]])
+
+    def test_score_arrays_shapes(self):
+        cl = paper_cluster()
+        arrs = cl.score_arrays()
+        assert all(v.shape == (len(cl),) for v in arrs.values())
+
+
+@pytest.mark.skipif(not os.path.isdir(RESULTS),
+                    reason="dry-run artifacts not generated")
+class TestTpuCatalogue:
+    def test_builds_all_decode_capable_archs(self):
+        cl = tpu_catalogue(RESULTS)
+        assert len(cl) == 10          # every arch lowers decode_32k
+        for d in cl:
+            assert d.model.l_ref > 0 and d.mu > 0
+
+    def test_lanes_stratified_by_scale(self):
+        cl = tpu_catalogue(RESULTS)
+        lanes = {q: cl.for_quality(q) for q in QualityClass}
+        assert all(lanes.values())
+        # SSM/hybrid land in the low-latency lane (O(1) decode state)
+        low = {d.model.name for d in lanes[QualityClass.LOW_LATENCY]}
+        assert "mamba2_370m" in low and "recurrentgemma_2b" in low
+        # the 340B dense lands in PRECISE
+        assert any(d.model.name == "nemotron_4_340b"
+                   for d in lanes[QualityClass.PRECISE])
+
+    def test_routable(self):
+        from repro.core.router import Router, RouterParams
+        from repro.core.scheduler import Request
+        cl = tpu_catalogue(RESULTS)
+        r = Router(cl, RouterParams(x=3.0))
+        req = Request(model="any", quality=QualityClass.LOW_LATENCY,
+                      arrival=0.0, slo=1.0)
+        d = r.route_best(req, 0.0)
+        assert d.target.quality == QualityClass.LOW_LATENCY

@@ -1,0 +1,43 @@
+"""Integration: the multi-pod dry-run pipeline end to end (subprocess,
+since the 512-device XLA flag must be set before jax initialises)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("shape,mesh", [("decode_32k", "single"),
+                                        ("train_4k", "multi")])
+def test_dryrun_lowers_and_compiles(tmp_path, shape, mesh):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "stablelm_3b",
+         "--shape", shape, "--mesh", mesh, "--out", str(tmp_path), "--force"],
+        env=env, cwd=REPO, capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.load(open(tmp_path / f"stablelm_3b__{shape}__{mesh}.json"))
+    assert rec["status"] == "ok", rec.get("error")
+    assert rec["n_devices"] == (512 if mesh == "multi" else 256)
+    assert rec["flops"] > 0
+    if shape == "train_4k":
+        # FSDP + TP training must communicate
+        assert rec["collective_bytes_total"] > 1e9
+
+
+def test_dryrun_skip_reasons(tmp_path):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "phi3_medium_14b", "--shape", "long_500k", "--mesh", "single",
+         "--out", str(tmp_path), "--force"],
+        env=env, cwd=REPO, capture_output=True, text=True, timeout=180)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.load(open(tmp_path / "phi3_medium_14b__long_500k__single.json"))
+    assert rec["status"] == "skip"
+    assert "sub-quadratic" in rec["reason"]

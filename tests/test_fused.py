@@ -1,0 +1,158 @@
+"""Fused (flash-style, custom-VJP) attention: fwd + grads vs oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.fused import fused_attention, fused_decode_attention
+
+
+def mk(b=2, s=256, h=4, hkv=2, d=32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (b, s, h, d), jnp.float32),
+            jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32),
+            jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32))
+
+
+CASES = [dict(causal=True), dict(causal=True, window=64),
+         dict(causal=True, softcap=20.0), dict(causal=False),
+         dict(causal=True, window=100, softcap=30.0)]
+
+
+class TestFusedAttention:
+    @pytest.mark.parametrize("kw", CASES)
+    def test_forward(self, kw):
+        q, k, v = mk()
+        got = fused_attention(q, k, v, kw.get("causal", True),
+                              kw.get("window", 0), kw.get("softcap", 0.0),
+                              None, None, 64)
+        want = ref.attention(q, k, v, **kw)
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+    @pytest.mark.parametrize("kw", CASES)
+    def test_custom_vjp_matches_autodiff_of_ref(self, kw):
+        q, k, v = mk(seed=1)
+        f_fused = lambda q, k, v: jnp.sum(jnp.square(fused_attention(
+            q, k, v, kw.get("causal", True), kw.get("window", 0),
+            kw.get("softcap", 0.0), None, None, 64)))
+        f_ref = lambda q, k, v: jnp.sum(jnp.square(
+            ref.attention(q, k, v, **kw)))
+        g1 = jax.grad(f_fused, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(a, b, atol=1e-3, rtol=1e-3)
+
+    @pytest.mark.parametrize("shapes", [(1, 128, 1, 1, 64), (2, 128, 8, 1, 16),
+                                        (1, 512, 6, 3, 32)])
+    def test_shape_sweep(self, shapes):
+        b, s, h, hkv, d = shapes
+        q, k, v = mk(b, s, h, hkv, d, seed=2)
+        got = fused_attention(q, k, v, True, 0, 0.0, None, None, 128)
+        want = ref.attention(q, k, v, causal=True)
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+    def test_bf16(self):
+        q, k, v = mk(seed=3)
+        q, k, v = (x.astype(jnp.bfloat16) for x in (q, k, v))
+        got = fused_attention(q, k, v, True, 0, 0.0, None, None, 64)
+        want = ref.attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   atol=5e-2, rtol=5e-2)
+
+
+class TestFusedDecode:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(0)
+        b, h, hkv, d, c = 3, 4, 2, 32, 256
+        ks = jax.random.split(jax.random.PRNGKey(4), 3)
+        q = jax.random.normal(ks[0], (b, h, d), jnp.float32)
+        kc = jax.random.normal(ks[1], (b, c, hkv, d), jnp.float32)
+        vc = jax.random.normal(ks[2], (b, c, hkv, d), jnp.float32)
+        kv_pos = jnp.asarray(rng.integers(-1, 300, (b, c)), jnp.int32)
+        q_pos = jnp.asarray(rng.integers(100, 301, (b,)), jnp.int32)
+        for kw in (dict(), dict(window=128), dict(softcap=50.0)):
+            got = fused_decode_attention(q, kc, vc, kv_pos, q_pos, **kw)
+            want = ref.decode_attention(q, kc, vc, kv_pos, q_pos, **kw)
+            np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+class TestOpsDispatch:
+    def test_fused_impl_through_ops(self):
+        from repro.kernels import ops
+        q, k, v = mk(seed=5)
+        got = ops.attention(q, k, v, causal=True, impl="fused")
+        want = ops.attention(q, k, v, causal=True, impl="ref")
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+    def test_model_forward_equal_under_fused(self):
+        """Whole-model invariance: switching the attention implementation
+        must not change logits (gemma2 reduced exercises local+softcap)."""
+        from repro.configs.base import get_config, reduced
+        from repro.kernels import ops
+        from repro.models import model
+        cfg = reduced(get_config("gemma2_27b"))
+        params = model.init_params(jax.random.PRNGKey(0), cfg)
+        batch = {"tokens": jnp.ones((2, 32), jnp.int32)}
+        ref_logits, _ = model.forward(params, cfg, batch)
+        old = ops.get_implementation()
+        try:
+            ops.set_implementation("fused")
+            fused_logits, _ = model.forward(params, cfg, batch)
+        finally:
+            ops.set_implementation(old)
+        np.testing.assert_allclose(ref_logits, fused_logits,
+                                   atol=2e-4, rtol=2e-4)
+
+
+class TestFusedSSD:
+    @pytest.mark.parametrize("chunk", [16, 32, 64])
+    def test_matches_oracle(self, chunk):
+        ks = jax.random.split(jax.random.PRNGKey(7), 6)
+        b, l, h, p, g, n = 2, 128, 4, 32, 2, 16
+        x = jax.random.normal(ks[0], (b, l, h, p), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+        a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+        bb = jax.random.normal(ks[3], (b, l, g, n)) * 0.3
+        cc = jax.random.normal(ks[4], (b, l, g, n)) * 0.3
+        d = jax.random.normal(ks[5], (h,))
+        from repro.kernels.fused import fused_ssd_scan
+        got, hf = fused_ssd_scan(x, dt, a, bb, cc, d, chunk=chunk,
+                                 return_final_state=True)
+        want, hw = ref.ssd_scan(x, dt, a, bb, cc, d, return_final_state=True)
+        np.testing.assert_allclose(got, want, atol=5e-4, rtol=5e-4)
+        np.testing.assert_allclose(hf, hw, atol=5e-4, rtol=5e-4)
+
+    def test_gradients_flow(self):
+        ks = jax.random.split(jax.random.PRNGKey(8), 6)
+        b, l, h, p, g, n = 1, 64, 2, 16, 1, 8
+        x = jax.random.normal(ks[0], (b, l, h, p), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+        a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+        bb = jax.random.normal(ks[3], (b, l, g, n)) * 0.3
+        cc = jax.random.normal(ks[4], (b, l, g, n)) * 0.3
+        d = jnp.zeros((h,))
+        from repro.kernels.fused import fused_ssd_scan
+        g1 = jax.grad(lambda x: jnp.sum(jnp.square(
+            fused_ssd_scan(x, dt, a, bb, cc, d, chunk=16))))(x)
+        g2 = jax.grad(lambda x: jnp.sum(jnp.square(
+            ref.ssd_scan(x, dt, a, bb, cc, d))))(x)
+        np.testing.assert_allclose(g1, g2, atol=1e-3, rtol=1e-3)
+
+    def test_mamba_model_invariant_under_fused(self):
+        from repro.configs.base import get_config, reduced
+        from repro.kernels import ops
+        from repro.models import model
+        cfg = reduced(get_config("mamba2_370m"))
+        params = model.init_params(jax.random.PRNGKey(0), cfg)
+        batch = {"tokens": jnp.ones((2, 64), jnp.int32)}
+        ref_logits, _ = model.forward(params, cfg, batch)
+        old = ops.get_implementation()
+        try:
+            ops.set_implementation("fused")
+            fused_logits, _ = model.forward(params, cfg, batch)
+        finally:
+            ops.set_implementation(old)
+        np.testing.assert_allclose(ref_logits, fused_logits,
+                                   atol=5e-4, rtol=5e-4)

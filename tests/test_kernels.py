@@ -1,0 +1,225 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp
+oracle (kernels/ref.py), plus ref-vs-model consistency checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.routing_score import build_erlang_table, routing_score
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,s,h,hkv,d", [
+        (1, 128, 1, 1, 64),      # minimal
+        (2, 256, 4, 2, 64),      # GQA
+        (2, 128, 4, 1, 32),      # MQA
+        (1, 512, 2, 2, 128),     # MXU-aligned head dim
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_causal_matches_ref(self, b, s, h, hkv, d, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+        k = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+        v = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+        got = flash_attention(q, k, v, causal=True, block_q=64, block_kv=64,
+                              interpret=True)
+        want = ref.attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **tol(dtype))
+
+    @pytest.mark.parametrize("window", [32, 64, 100])
+    def test_sliding_window(self, window):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (2, 256, 2, 32), jnp.float32)
+        k = jax.random.normal(ks[1], (2, 256, 2, 32), jnp.float32)
+        v = jax.random.normal(ks[2], (2, 256, 2, 32), jnp.float32)
+        got = flash_attention(q, k, v, causal=True, window=window,
+                              block_q=64, block_kv=64, interpret=True)
+        want = ref.attention(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+    def test_softcap_and_scale(self):
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = jax.random.normal(ks[0], (1, 128, 2, 64), jnp.float32) * 3
+        k = jax.random.normal(ks[1], (1, 128, 2, 64), jnp.float32) * 3
+        v = jax.random.normal(ks[2], (1, 128, 2, 64), jnp.float32)
+        got = flash_attention(q, k, v, causal=True, softcap=30.0,
+                              scale=0.1, block_q=64, block_kv=64,
+                              interpret=True)
+        want = ref.attention(q, k, v, causal=True, softcap=30.0, scale=0.1)
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+    def test_non_causal(self):
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(ks[0], (2, 128, 2, 32), jnp.float32)
+        k = jax.random.normal(ks[1], (2, 128, 2, 32), jnp.float32)
+        v = jax.random.normal(ks[2], (2, 128, 2, 32), jnp.float32)
+        got = flash_attention(q, k, v, causal=False, block_q=64,
+                              block_kv=64, interpret=True)
+        want = ref.attention(q, k, v, causal=False)
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+    def test_ref_softmax_rows_sum_to_one_property(self):
+        # oracle sanity: output of attention over constant V equals V
+        v_const = jnp.ones((1, 64, 2, 16), jnp.float32) * 3.0
+        ks = jax.random.split(jax.random.PRNGKey(4), 2)
+        q = jax.random.normal(ks[0], (1, 64, 2, 16), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 64, 2, 16), jnp.float32)
+        out = ref.attention(q, k, v_const, causal=True)
+        np.testing.assert_allclose(out, v_const, atol=1e-5)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("b,h,hkv,d,c", [
+        (1, 1, 1, 32, 128),
+        (3, 4, 2, 64, 256),
+        (2, 8, 1, 64, 512),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, b, h, hkv, d, c, dtype):
+        rng = np.random.default_rng(0)
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (b, h, d), dtype)
+        k = jax.random.normal(ks[1], (b, c, hkv, d), dtype)
+        v = jax.random.normal(ks[2], (b, c, hkv, d), dtype)
+        kv_pos = jnp.asarray(rng.integers(-1, 300, (b, c)), jnp.int32)
+        q_pos = jnp.asarray(rng.integers(100, 301, (b,)), jnp.int32)
+        got = decode_attention(q, k, v, kv_pos, q_pos, block_kv=64,
+                               interpret=True)
+        want = ref.decode_attention(q, k, v, kv_pos, q_pos)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **tol(dtype))
+
+    def test_window(self):
+        rng = np.random.default_rng(1)
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        b, h, hkv, d, c = 2, 4, 2, 32, 256
+        q = jax.random.normal(ks[0], (b, h, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, c, hkv, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, c, hkv, d), jnp.float32)
+        kv_pos = jnp.asarray(rng.integers(0, 500, (b, c)), jnp.int32)
+        q_pos = jnp.asarray([400, 499], jnp.int32)
+        got = decode_attention(q, k, v, kv_pos, q_pos, window=128,
+                               block_kv=64, interpret=True)
+        want = ref.decode_attention(q, k, v, kv_pos, q_pos, window=128)
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+    def test_ring_buffer_semantics(self):
+        """Cache equals an explicit suffix window -> same result as full
+        attention restricted to those positions."""
+        b, h, d, c = 1, 2, 16, 64
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = jax.random.normal(ks[0], (b, h, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, c, h, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, c, h, d), jnp.float32)
+        # slots hold positions 100..163 (no wraparound ambiguity)
+        kv_pos = jnp.arange(100, 164, dtype=jnp.int32)[None, :]
+        q_pos = jnp.asarray([163], jnp.int32)
+        got = decode_attention(q, k, v, kv_pos, q_pos, interpret=True,
+                               block_kv=64)
+        # equivalent full attention with q appended at the end
+        q4 = q[:, None, :, :]
+        out = ref.attention(q4, k, v, causal=True)
+        np.testing.assert_allclose(got, out[:, 0], atol=2e-5, rtol=2e-5)
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("b,l,h,p,g,n,chunk", [
+        (1, 64, 1, 16, 1, 8, 16),
+        (2, 128, 4, 32, 2, 16, 32),
+        (2, 128, 4, 32, 4, 16, 64),
+        (1, 256, 2, 64, 1, 32, 64),
+    ])
+    def test_matches_sequential_oracle(self, b, l, h, p, g, n, chunk):
+        ks = jax.random.split(jax.random.PRNGKey(0), 6)
+        x = jax.random.normal(ks[0], (b, l, h, p), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+        a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+        bb = jax.random.normal(ks[3], (b, l, g, n)) * 0.3
+        cc = jax.random.normal(ks[4], (b, l, g, n)) * 0.3
+        d_skip = jax.random.normal(ks[5], (h,))
+        got, hf = ssd_scan(x, dt, a, bb, cc, d_skip, chunk=chunk,
+                           interpret=True, return_final_state=True)
+        want, hf_want = ref.ssd_scan(x, dt, a, bb, cc, d_skip,
+                                     return_final_state=True)
+        np.testing.assert_allclose(got, want, atol=5e-4, rtol=5e-4)
+        np.testing.assert_allclose(hf, hf_want, atol=5e-4, rtol=5e-4)
+
+    def test_initial_state_continuation(self):
+        """Scanning [first half] then [second half with carried state]
+        equals scanning the whole sequence (the prefill->decode contract)."""
+        b, l, h, p, g, n = 1, 128, 2, 16, 1, 8
+        ks = jax.random.split(jax.random.PRNGKey(1), 6)
+        x = jax.random.normal(ks[0], (b, l, h, p), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+        a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+        bb = jax.random.normal(ks[3], (b, l, g, n)) * 0.3
+        cc = jax.random.normal(ks[4], (b, l, g, n)) * 0.3
+        d_skip = jnp.zeros((h,))
+        full = ref.ssd_scan(x, dt, a, bb, cc, d_skip)
+        half = l // 2
+        y1, h1 = ssd_scan(x[:, :half], dt[:, :half], a, bb[:, :half],
+                          cc[:, :half], d_skip, chunk=32, interpret=True,
+                          return_final_state=True)
+        y2 = ssd_scan(x[:, half:], dt[:, half:], a, bb[:, half:],
+                      cc[:, half:], d_skip, initial_state=h1, chunk=32,
+                      interpret=True)
+        np.testing.assert_allclose(
+            jnp.concatenate([y1, y2], axis=1), full, atol=5e-4, rtol=5e-4)
+
+
+class TestRoutingScore:
+    def _setup(self, i=6, r=256, seed=0):
+        rng = np.random.default_rng(seed)
+        p = dict(
+            alpha=jnp.asarray(rng.uniform(0.1, 1.0, i), jnp.float32),
+            beta=jnp.asarray(rng.uniform(0.1, 2.0, i), jnp.float32),
+            gamma=jnp.asarray(rng.uniform(0.9, 1.8, i), jnp.float32),
+            mu=jnp.asarray(rng.uniform(0.5, 3.0, i), jnp.float32),
+            n=jnp.asarray(rng.integers(1, 8, i), jnp.float32),
+            rtt=jnp.asarray(rng.uniform(0, 0.1, i), jnp.float32),
+            slo=jnp.asarray(rng.uniform(1.0, 4.0, i), jnp.float32),
+            cost=jnp.asarray(rng.uniform(1, 3, i), jnp.float32),
+        )
+        lam = jnp.asarray(rng.uniform(0.0, 10.0, r), jnp.float32)
+        table = build_erlang_table(np.asarray(p["mu"]), np.asarray(p["n"]))
+        return lam, p, table
+
+    @pytest.mark.parametrize("i,r", [(2, 64), (6, 256), (11, 128)])
+    def test_matches_ref(self, i, r):
+        lam, p, table = self._setup(i, r, seed=i)
+        gi, gg, gok = routing_score(lam, *p.values(), table, block_r=64,
+                                    interpret=True)
+        ri, rg, rok = ref.routing_score(lam, *p.values(), table)
+        assert bool(jnp.all(gok == rok))
+        feas = np.asarray(rok)
+        np.testing.assert_array_equal(np.asarray(gi)[feas],
+                                      np.asarray(ri)[feas])
+        np.testing.assert_allclose(np.asarray(gg)[feas],
+                                   np.asarray(rg)[feas], rtol=1e-4)
+
+    def test_matches_router_scalar_path(self):
+        """Kernel ref agrees with the (numpy) router used by the
+        simulator, up to the table-interpolation error."""
+        from repro.core.router import score_instances_np
+        lam, p, table = self._setup(4, 64, seed=7)
+        _, rg, rok = ref.routing_score(lam, *p.values(), table)
+        for ridx in range(0, 64, 7):
+            g_np = score_instances_np(
+                float(lam[ridx]), np.asarray(p["alpha"]),
+                np.asarray(p["beta"]), np.asarray(p["gamma"]),
+                np.asarray(p["mu"]), np.asarray(p["n"]),
+                np.asarray(p["rtt"]))
+            feasible = (g_np <= np.asarray(p["slo"])) & (g_np < 1e8)
+            if feasible.any() and bool(rok[ridx]):
+                best = g_np[feasible].min()
+                assert abs(float(rg[ridx]) - best) / best < 0.05

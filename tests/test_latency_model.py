@@ -1,0 +1,116 @@
+"""Latency model (paper §III): power law, Eq. 15/17, calibration."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import latency_model as lm
+
+
+class TestProcessingDelay:
+    def test_idle_equals_reference(self):
+        # At U=0 the processing delay is exactly L_m / S_mi.
+        d = float(lm.processing_delay(0.73, 1.0, 0.0, 1.49))
+        assert d == pytest.approx(0.73)
+        d = float(lm.processing_delay(0.73, 4.0, 0.0, 1.49))
+        assert d == pytest.approx(0.73 / 4.0)
+
+    @given(st.floats(0.0, 3.0), st.floats(0.5, 2.5))
+    @settings(max_examples=50, deadline=None)
+    def test_monotone_in_utilisation(self, u, gamma):
+        d1 = float(lm.processing_delay(1.0, 1.0, u, gamma))
+        d2 = float(lm.processing_delay(1.0, 1.0, u + 0.1, gamma))
+        assert d2 >= d1
+
+    def test_affine_equals_eq5_expansion(self):
+        # Eq. 8 == Eq. 5 under the expansion the paper performs (B_i = 0).
+        m, i, gamma = lm.YOLOV5M, lm.PI4_EDGE, 1.49
+        alpha, beta = lm.affine_params(m, i, gamma)
+        for lam_t in [0.5, 1.0, 2.0, 4.0]:
+            util = lm.utilisation(lam_t, m.r_demand, i.background, i.r_max)
+            eq5 = float(lm.processing_delay(m.l_ref, i.speedup, util, gamma))
+            eq8 = float(lm.affine_power_law(lam_t, alpha, beta, gamma))
+            assert eq5 == pytest.approx(eq8, rel=1e-5)
+
+
+class TestGFunctions:
+    def test_g_components(self):
+        # g = processing + rtt + queueing; with lam -> 0 queueing -> 0.
+        m, i = lm.YOLOV5M, lm.CLOUD
+        g = float(lm.g_fixed_replicas(1e-4, 4, m, i, gamma=1.2))
+        assert g == pytest.approx(m.l_ref / i.speedup + i.net_rtt, rel=1e-2)
+
+    def test_g_unstable_is_inf(self):
+        m, i = lm.YOLOV5M, lm.PI4_EDGE     # mu = 1.37
+        assert np.isinf(float(lm.g_fixed_replicas(3.0, 1, m, i, gamma=1.2)))
+
+    def test_g_decreases_with_replicas(self):
+        m, i = lm.YOLOV5M, lm.PI4_EDGE
+        lam = 4.0
+        gs = [float(lm.g_fixed_traffic(n, lam, m, i, gamma=1.2))
+              for n in range(3, 10)]
+        assert all(b <= a + 1e-9 for a, b in zip(gs, gs[1:]))
+
+    def test_marginal_benefit_flattens(self):
+        # §III-G: marginal gain largest near instability, flattens at rho<=0.3.
+        m, i = lm.YOLOV5M, lm.PI4_EDGE
+        lam = 4.0  # needs n>=3 for stability
+        g3 = float(lm.g_fixed_traffic(3, lam, m, i, gamma=1.2))
+        g4 = float(lm.g_fixed_traffic(4, lam, m, i, gamma=1.2))
+        g10 = float(lm.g_fixed_traffic(10, lam, m, i, gamma=1.2))
+        g11 = float(lm.g_fixed_traffic(11, lam, m, i, gamma=1.2))
+        assert (g3 - g4) > 10 * (g10 - g11)
+
+    def test_np_twin_matches(self):
+        m, i = lm.YOLOV5M, lm.CLOUD
+        ns = np.arange(1, 12)
+        got = lm.g_fixed_replicas_np(3.0, ns, m, i, 1.3)
+        want = np.array([float(lm.g_fixed_replicas(3.0, int(n), m, i, 1.3,
+                                                   unstable_value=np.inf))
+                         for n in ns])
+        mask = np.isfinite(want)
+        np.testing.assert_allclose(got[mask], want[mask], rtol=2e-3)
+        assert (np.isinf(got) == np.isinf(want)).all()
+
+
+class TestCalibration:
+    def test_recovers_synthetic_parameters(self):
+        rng = np.random.default_rng(0)
+        alpha, beta, gamma = 0.6, 1.1, 1.4
+        lam = np.linspace(0.3, 5.0, 40)
+        lat = alpha + beta * lam**gamma
+        lat = lat * (1 + rng.normal(0, 0.01, lam.shape))  # 1% noise
+        fit = lm.calibrate(lam, lat)
+        assert fit.alpha == pytest.approx(alpha, abs=0.1)
+        assert fit.beta == pytest.approx(beta, rel=0.15)
+        assert fit.gamma == pytest.approx(gamma, abs=0.15)
+        assert fit.mape < 0.05
+
+    def test_fixed_alpha_mode(self):
+        lam = np.linspace(0.5, 4.0, 20)
+        lat = 0.73 + 1.29 * lam**1.49
+        fit = lm.calibrate(lam, lat, fixed_alpha=0.73)
+        assert fit.alpha == 0.73
+        assert fit.beta == pytest.approx(1.29, rel=0.02)
+        assert fit.gamma == pytest.approx(1.49, abs=0.05)
+
+    def test_table_iv_reproduction(self):
+        """Fig. 2 reproduction: the affine power law fits Table IV's loaded
+        region within a few percent (the paper's 'within a few percent'
+        claim), with a super-linear exponent, alpha pinned at L_m."""
+        fit = lm.calibrate_from_table_iv()
+        assert fit.alpha == 0.73
+        assert fit.gamma > 1.0          # super-linear contention
+        assert fit.mape < 0.03          # 'tracks observed latencies within a few percent'
+        # the paper's own printed parameters describe the same curve family:
+        # check its prediction at lam_tilde=3 is within 15% of ours.
+        ours = float(fit.predict(3.0))
+        paper = 0.73 + 1.29 * 3.0**1.49
+        assert abs(ours - paper) / paper < 0.15
+
+    def test_predict_matches_measurements(self):
+        fit = lm.calibrate_from_table_iv()
+        # N=1 row, lam = 2..4 (loaded region used for the fit)
+        for lam, measured in [(2.0, 4.97), (3.0, 7.71), (4.0, 10.46)]:
+            pred = float(fit.predict(lam))
+            assert abs(pred - measured) / measured < 0.05

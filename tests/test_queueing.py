@@ -1,0 +1,132 @@
+"""Queueing-theory primitives: closed-form oracles + hypothesis properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import queueing
+
+
+class TestErlangC:
+    def test_single_server_equals_rho(self):
+        # For c=1 the Erlang-C probability of queueing is exactly rho.
+        for rho in [0.1, 0.3, 0.5, 0.7, 0.9, 0.99]:
+            c = float(queueing.erlang_c(rho, 1, 1.0))
+            assert c == pytest.approx(rho, rel=1e-5)
+
+    def test_known_value_two_servers(self):
+        # M/M/2, lam=1, mu=1 (a=1, rho=0.5): C = 1/3 (classic textbook value).
+        assert float(queueing.erlang_c(1.0, 2, 1.0)) == pytest.approx(1 / 3, rel=1e-5)
+
+    def test_direct_sum_oracle(self):
+        # Compare against the naive Erlang-C sum for small c.
+        import math
+        def naive(lam, c, mu):
+            a = lam / mu
+            rho = a / c
+            top = a**c / (math.factorial(c) * (1 - rho))
+            bottom = sum(a**k / math.factorial(k) for k in range(c)) + top
+            return top / bottom
+        for lam, c, mu in [(0.5, 1, 1.0), (1.5, 2, 1.0), (3.0, 4, 1.0),
+                           (6.5, 8, 1.0), (2.2, 3, 1.3), (10.0, 16, 0.8)]:
+            got = float(queueing.erlang_c(lam, c, mu))
+            want = naive(lam, c, mu)
+            assert got == pytest.approx(want, rel=1e-4), (lam, c, mu)
+
+    @given(st.floats(0.05, 0.95), st.integers(1, 64))
+    @settings(max_examples=50, deadline=None)
+    def test_bounded_and_monotone_in_c(self, rho, c):
+        mu = 1.0
+        lam = rho * c * mu
+        cc = float(queueing.erlang_c(lam, c, mu))
+        assert 0.0 <= cc <= 1.0
+        # adding a server at the same lam strictly reduces queueing prob
+        cc2 = float(queueing.erlang_c(lam, c + 1, mu))
+        assert cc2 <= cc + 1e-6
+
+    def test_unstable_returns_one(self):
+        assert float(queueing.erlang_c(5.0, 2, 1.0)) == 1.0
+
+
+class TestMMcWait:
+    def test_mm1_closed_form(self):
+        for lam in [0.1, 0.5, 0.9]:
+            got = float(queueing.mmc_wait(lam, 1, 1.0))
+            want = float(queueing.mm1_wait(lam, 1.0))
+            assert got == pytest.approx(want, rel=1e-5)
+
+    def test_unstable_is_inf(self):
+        assert np.isinf(float(queueing.mmc_wait(2.0, 1, 1.0)))
+        assert np.isinf(float(queueing.mmc_wait(4.0, 4, 1.0)))
+
+    @given(st.floats(0.05, 0.9), st.integers(1, 32))
+    @settings(max_examples=50, deadline=None)
+    def test_wait_decreases_with_servers(self, rho, c):
+        mu = 1.0
+        lam = rho * c * mu
+        w1 = float(queueing.mmc_wait(lam, c, mu))
+        w2 = float(queueing.mmc_wait(lam, c + 1, mu))
+        assert w2 <= w1 + 1e-9
+
+    @given(st.integers(1, 16), st.floats(0.5, 2.0))
+    @settings(max_examples=30, deadline=None)
+    def test_wait_increases_with_lam(self, c, mu):
+        lams = np.linspace(0.05, 0.9, 6) * c * mu
+        ws = [float(queueing.mmc_wait(l, c, mu)) for l in lams]
+        assert all(b >= a - 1e-9 for a, b in zip(ws, ws[1:]))
+
+    def test_wait_blows_up_near_instability(self):
+        mu, c = 1.0, 4
+        w_low = float(queueing.mmc_wait(0.5 * c, c, mu))
+        w_hi = float(queueing.mmc_wait(0.99 * c, c, mu))
+        assert w_hi > 20 * w_low
+
+
+class TestNumpyTwins:
+    @given(st.floats(0.1, 0.95), st.integers(1, 48), st.floats(0.5, 3.0))
+    @settings(max_examples=60, deadline=None)
+    def test_np_matches_jnp(self, rho, c, mu):
+        lam = rho * c * mu
+        got = queueing.mmc_wait_np(lam, np.array([c]), mu)[0]
+        want = float(queueing.mmc_wait(lam, c, mu))
+        assert got == pytest.approx(want, rel=2e-3, abs=1e-5)
+
+    def test_vectorised_over_c(self):
+        cs = np.arange(1, 20)
+        w = queueing.mmc_wait_np(3.0, cs, 1.0)
+        assert w.shape == (19,)
+        assert np.isinf(w[:3]).all()      # c=1,2,3 unstable at lam=3, mu=1
+        assert np.all(np.diff(w[3:]) <= 1e-12)  # monotone decreasing after
+
+    def test_zero_lambda(self):
+        assert queueing.mmc_wait_np(0.0, np.array([3]), 1.0)[0] == 0.0
+
+
+class TestInverse:
+    def test_replicas_for_wait(self):
+        lam, mu = 4.0, 1.37
+        c = queueing.replicas_for_wait(lam, mu, target_wait=0.5)
+        assert float(queueing.mmc_wait(lam, c, mu)) <= 0.5
+        if c > 1:
+            assert float(queueing.mmc_wait(lam, c - 1, mu)) > 0.5
+
+    def test_min_stable(self):
+        assert int(queueing.min_stable_replicas(4.0, 1.37)) == 3
+        assert float(queueing.mmc_wait(4.0, 3, 1.37)) < np.inf
+
+    @given(st.floats(0.2, 20.0), st.floats(0.5, 3.0),
+           st.floats(0.05, 2.0))
+    @settings(max_examples=40, deadline=None)
+    def test_replicas_for_wait_is_minimal_and_feasible(self, lam, mu, target):
+        c = queueing.replicas_for_wait(lam, mu, target)
+        w = queueing.mmc_wait_np(lam, np.array([c]), mu)[0]
+        if c < queueing.MAX_SERVERS:
+            assert w <= target
+
+    def test_batch_matches_scalar(self):
+        lam, mu, tgt = 4.0, 1.37, 0.5
+        got = int(queueing.replicas_for_wait_batch(
+            jnp.float32(lam), jnp.float32(mu), jnp.float32(tgt)))
+        want = queueing.replicas_for_wait(lam, mu, tgt)
+        assert got == want

@@ -1,0 +1,197 @@
+"""Router (Algorithm 1 + §IV-B selection) behaviour tests."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.catalogue import Cluster, Deployment, paper_cluster
+from repro.core.latency_model import CLOUD, PI4_EDGE, YOLOV5M
+from repro.core.router import (BIG, Action, Router, RouterParams,
+                               score_instances, score_instances_np,
+                               select_instance)
+from repro.core.scheduler import QualityClass, Request
+
+
+def two_tier(n_edge: int = 1, n_cloud: int = 2, edge_max: int = 4) -> Cluster:
+    edge = dataclasses.replace(PI4_EDGE, net_rtt=0.05)
+    cloud = dataclasses.replace(CLOUD, net_rtt=0.086)
+    return Cluster([
+        Deployment(YOLOV5M, edge, QualityClass.BALANCED,
+                   n_replicas=n_edge, n_max=edge_max),
+        Deployment(YOLOV5M, cloud, QualityClass.BALANCED,
+                   n_replicas=n_cloud, n_max=16),
+    ])
+
+
+def mk_req(slo=None):
+    return Request(model="yolov5m", quality=QualityClass.BALANCED,
+                   arrival=0.0, slo=slo)
+
+
+class TestScoring:
+    def test_np_matches_jnp(self):
+        rng = np.random.default_rng(1)
+        k = 8
+        alpha = rng.uniform(0.1, 1.0, k).astype(np.float32)
+        beta = rng.uniform(0.1, 2.0, k).astype(np.float32)
+        gamma = rng.uniform(0.9, 1.8, k).astype(np.float32)
+        mu = rng.uniform(0.5, 3.0, k).astype(np.float32)
+        n = rng.integers(1, 8, k).astype(np.float32)
+        rtt = rng.uniform(0.0, 0.1, k).astype(np.float32)
+        for lam in [0.5, 2.0, 5.0]:
+            got = score_instances_np(lam, alpha, beta, gamma, mu, n, rtt)
+            want = np.asarray(score_instances(
+                jnp.float32(lam), jnp.asarray(alpha), jnp.asarray(beta),
+                jnp.asarray(gamma), jnp.asarray(mu), jnp.asarray(n),
+                jnp.asarray(rtt)))
+            finite = want < BIG / 2
+            np.testing.assert_allclose(got[finite], want[finite], rtol=5e-3)
+            assert ((got >= BIG / 2) == ~finite).all()
+
+    def test_unstable_pool_scores_big(self):
+        g = score_instances(jnp.float32(10.0),
+                            jnp.asarray([0.5]), jnp.asarray([1.0]),
+                            jnp.asarray([1.2]), jnp.asarray([1.0]),
+                            jnp.asarray([2.0]), jnp.asarray([0.0]))
+        assert float(g[0]) == BIG
+
+    def test_select_feasible_argmin(self):
+        g = jnp.asarray([0.5, 0.3, 0.7])
+        slo = jnp.asarray([1.0, 1.0, 1.0])
+        cost = jnp.asarray([1.0, 5.0, 1.0])
+        idx, ok = select_instance(g, slo, cost, jnp.ones(3, bool))
+        assert bool(ok) and int(idx) == 1
+
+    def test_select_tie_breaks_by_cost(self):
+        g = jnp.asarray([0.5, 0.5])
+        slo = jnp.asarray([1.0, 1.0])
+        cost = jnp.asarray([3.0, 1.0])
+        idx, ok = select_instance(g, slo, cost, jnp.ones(2, bool))
+        assert bool(ok) and int(idx) == 1
+
+    def test_select_respects_slo_filter(self):
+        g = jnp.asarray([0.5, 0.9])
+        slo = jnp.asarray([0.4, 1.0])    # first violates its SLO
+        cost = jnp.asarray([1.0, 1.0])
+        idx, ok = select_instance(g, slo, cost, jnp.ones(2, bool))
+        assert bool(ok) and int(idx) == 1
+
+    def test_select_none_feasible(self):
+        g = jnp.asarray([0.5, 0.9])
+        slo = jnp.asarray([0.1, 0.1])
+        _, ok = select_instance(g, slo, jnp.asarray([1.0, 1.0]),
+                                jnp.ones(2, bool))
+        assert not bool(ok)
+
+
+class TestAlgorithm1:
+    def test_low_load_stays_local(self):
+        # n=2 edge pool at lam=1: g ~= 0.95 s < tau ~= 1.69 s -> local.
+        cl = two_tier(n_edge=2)
+        r = Router(cl, RouterParams(x=2.25))
+        dep = cl["yolov5m@pi4-edge"]
+        d = r.on_request(mk_req(), dep, t_now=0.0)
+        assert d.action is Action.LOCAL and d.target is dep
+
+    def test_per_request_guard_offloads(self):
+        # Saturate the 1-s window so g_inst > tau -> immediate offload.
+        cl = two_tier()
+        r = Router(cl, RouterParams(x=2.25))
+        dep = cl["yolov5m@pi4-edge"]
+        decisions = [r.on_request(mk_req(), dep, t_now=0.01 * k)
+                     for k in range(12)]
+        assert decisions[-1].action is Action.OFFLOAD_FAST
+        assert decisions[-1].target.instance.tier == "cloud"
+        assert r.tel(dep.key).offloaded_fast > 0
+
+    def test_offload_updates_upstream_telemetry(self):
+        cl = two_tier()
+        r = Router(cl, RouterParams())
+        dep = cl["yolov5m@pi4-edge"]
+        up = cl["yolov5m@cloud"]
+        for k in range(12):
+            r.on_request(mk_req(), dep, t_now=0.01 * k)
+        assert r.tel(up.key).arrivals > 0   # upstream loop ran
+
+    def test_predicted_breach_scales_out(self):
+        """Algorithm 1 line 17-19 fires when the EWMA (sustained demand)
+        predicts a breach while the instantaneous guard passes — i.e. in
+        the tail of a burst. Burst to pump the EWMA, then slow down."""
+        cl = two_tier(n_edge=2)
+        r = Router(cl, RouterParams(ewma_alpha=0.8))
+        dep = cl["yolov5m@pi4-edge"]
+        for k in range(40):                      # burst: lam_inst ~ 5/s
+            r.on_request(mk_req(), dep, t_now=0.2 * k)
+        out = []
+        for k in range(6):                       # cool-down: lam_inst ~ 1/s
+            d = r.on_request(mk_req(), dep, t_now=9.0 + 1.1 * k)
+            out.extend(d.scale_out)
+        assert any(x.key == dep.key for x in out)
+
+    def test_at_cap_offloads_fraction(self):
+        """Line 20-22: at n_max the predicted breach becomes a fractional
+        bulk offload phi instead of a scale-out."""
+        cl = two_tier(n_edge=4, edge_max=4)  # already at n_max
+        r = Router(cl, RouterParams(ewma_alpha=0.8))
+        dep = cl["yolov5m@pi4-edge"]
+        for k in range(60):                      # burst: lam_inst ~ 7/s
+            r.on_request(mk_req(), dep, t_now=0.15 * k)
+        phis, actions = [], []
+        for k in range(6):                       # cool-down: lam_inst ~ 1/s
+            d = r.on_request(mk_req(), dep, t_now=10.0 + 1.1 * k)
+            actions.append(d.action)
+            if d.action is Action.OFFLOAD_FRACTION:
+                phis.append(d.phi)
+        assert phis, f"expected bulk offload once pool capped, got {actions}"
+        assert all(0.0 < p <= 1.0 for p in phis)
+
+    def test_idle_scale_in(self):
+        cl = two_tier(n_edge=3)
+        r = Router(cl, RouterParams())
+        dep = cl["yolov5m@pi4-edge"]
+        # sparse arrivals -> rho below rho_low -> scale-in
+        ins = []
+        for k in range(10):
+            d = r.on_request(mk_req(), dep, t_now=10.0 * k)
+            ins.extend(d.scale_in)
+        assert any(x.key == dep.key for x in ins)
+
+    def test_scale_in_never_below_one(self):
+        cl = two_tier(n_edge=1)
+        r = Router(cl, RouterParams())
+        dep = cl["yolov5m@pi4-edge"]
+        for k in range(10):
+            d = r.on_request(mk_req(), dep, t_now=10.0 * k)
+            # n_replicas == 1: line 25 requires > 1 (upstream may scale in)
+            assert all(x.key != dep.key for x in d.scale_in)
+
+    def test_explicit_request_slo_wins(self):
+        cl = two_tier()
+        r = Router(cl, RouterParams())
+        dep = cl["yolov5m@pi4-edge"]
+        assert r.slo_budget(dep, mk_req(slo=9.9)) == 9.9
+
+    def test_slo_budget_formula(self):
+        cl = two_tier()
+        dep = cl["yolov5m@pi4-edge"]
+        r = Router(cl, RouterParams(x=2.25, slo_includes_rtt=False))
+        assert r.slo_budget(dep, mk_req()) == pytest.approx(2.25 * 0.73)
+
+
+class TestRouteBest:
+    def test_picks_feasible_minimum(self):
+        cl = paper_cluster()
+        r = Router(cl, RouterParams())
+        req = Request(model="yolov5m", quality=QualityClass.BALANCED,
+                      arrival=0.0, slo=5.0)
+        d = r.route_best(req, t_now=0.0)
+        assert d.action is Action.LOCAL
+        assert d.target.model.name == "yolov5m"
+
+    def test_infeasible_offloads_upstream(self):
+        cl = two_tier()
+        r = Router(cl, RouterParams())
+        req = mk_req(slo=1e-6)   # impossible SLO
+        d = r.route_best(req, t_now=0.0)
+        assert d.action is Action.OFFLOAD_FAST

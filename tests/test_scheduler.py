@@ -1,0 +1,64 @@
+"""Quality-differentiated multi-queue scheduler (paper §IV-A)."""
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.scheduler import MultiQueueScheduler, QualityClass, Request
+
+
+def req(q: QualityClass, t: float = 0.0) -> Request:
+    return Request(model="m", quality=q, arrival=t)
+
+
+class TestMultiQueue:
+    def test_strict_priority(self):
+        s = MultiQueueScheduler()
+        s.enqueue(req(QualityClass.PRECISE))
+        s.enqueue(req(QualityClass.BALANCED))
+        s.enqueue(req(QualityClass.LOW_LATENCY))
+        order = [s.dequeue().quality for _ in range(3)]
+        assert order == [QualityClass.LOW_LATENCY, QualityClass.BALANCED,
+                         QualityClass.PRECISE]
+
+    def test_fifo_within_lane(self):
+        s = MultiQueueScheduler()
+        a, b, c = (req(QualityClass.BALANCED, t) for t in (0.0, 1.0, 2.0))
+        for r in (a, b, c):
+            s.enqueue(r)
+        assert [s.dequeue() for _ in range(3)] == [a, b, c]
+
+    def test_empty_returns_none(self):
+        assert MultiQueueScheduler().dequeue() is None
+
+    def test_depths(self):
+        s = MultiQueueScheduler()
+        s.enqueue(req(QualityClass.LOW_LATENCY))
+        s.enqueue(req(QualityClass.LOW_LATENCY))
+        s.enqueue(req(QualityClass.PRECISE))
+        assert s.depth() == 3
+        assert s.depth(QualityClass.LOW_LATENCY) == 2
+        assert s.depths()[QualityClass.BALANCED] == 0
+
+    def test_drain_empties(self):
+        s = MultiQueueScheduler()
+        for q in QualityClass:
+            s.enqueue(req(q))
+        drained = list(s.drain())
+        assert len(drained) == 3 and s.depth() == 0
+
+    @given(st.lists(st.sampled_from(list(QualityClass)), max_size=60))
+    @settings(max_examples=30, deadline=None)
+    def test_conservation_and_priority_property(self, qs):
+        """Everything enqueued is dequeued exactly once, and each dequeue
+        returns the highest-priority non-empty lane at that moment."""
+        s = MultiQueueScheduler()
+        reqs = [req(q, float(i)) for i, q in enumerate(qs)]
+        for r in reqs:
+            s.enqueue(r)
+        seen = []
+        lanes = {q: [r for r in reqs if r.quality == q] for q in QualityClass}
+        while (r := s.dequeue()) is not None:
+            expected_lane = next(q for q in QualityClass if lanes[q])
+            assert r.quality == expected_lane
+            assert r is lanes[expected_lane].pop(0)
+            seen.append(r.req_id)
+        assert sorted(seen) == sorted(r.req_id for r in reqs)

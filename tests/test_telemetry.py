@@ -1,0 +1,84 @@
+"""In-memory telemetry: sliding window + EWMA (Algorithm 1 lines 1-6, 15)."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.telemetry import Ewma, MetricsRegistry, ModelTelemetry, SlidingRate
+
+
+class TestSlidingRate:
+    def test_counts_within_window(self):
+        sr = SlidingRate(window=1.0)
+        for t in [0.0, 0.2, 0.4, 0.6, 0.8]:
+            rate = sr.observe(t)
+        assert rate == 5.0
+
+    def test_old_arrivals_expire(self):
+        sr = SlidingRate(window=1.0)
+        sr.observe(0.0)
+        sr.observe(0.9)
+        assert sr.observe(1.6) == 2.0  # 0.9 and 1.6 in window; 0.0 expired
+        assert sr.rate(3.0) == 0.0
+
+    def test_rate_readonly_does_not_record(self):
+        sr = SlidingRate(window=1.0)
+        sr.observe(0.0)
+        assert sr.rate(0.1) == 1.0
+        assert sr.rate(0.1) == 1.0
+        assert len(sr) == 1
+
+    @given(st.lists(st.floats(0.0, 100.0), min_size=1, max_size=200))
+    @settings(max_examples=30, deadline=None)
+    def test_rate_equals_bruteforce(self, ts):
+        ts = sorted(ts)
+        sr = SlidingRate(window=1.0)
+        for i, t in enumerate(ts):
+            got = sr.observe(t)
+            brute = sum(1 for u in ts[: i + 1] if t - u <= 1.0)
+            assert got == brute
+
+
+class TestEwma:
+    def test_paper_convention(self):
+        # alpha weights the OLD value: v <- 0.8 v + 0.2 sample.
+        e = Ewma(alpha=0.8, init=0.0)
+        assert e.update(10.0) == pytest.approx(2.0)
+        assert e.update(10.0) == pytest.approx(3.6)
+
+    def test_converges_to_constant(self):
+        e = Ewma(alpha=0.8)
+        for _ in range(200):
+            v = e.update(5.0)
+        assert v == pytest.approx(5.0, rel=1e-6)
+
+    def test_rejects_bad_alpha(self):
+        with pytest.raises(ValueError):
+            Ewma(alpha=1.5)
+
+    @given(st.floats(0.0, 0.99), st.lists(st.floats(0, 100), min_size=1, max_size=50))
+    @settings(max_examples=30, deadline=None)
+    def test_stays_within_sample_range(self, alpha, samples):
+        e = Ewma(alpha=alpha, init=samples[0])
+        for s in samples:
+            v = e.update(s)
+        assert min(samples) - 1e-9 <= v <= max(samples) + 1e-9
+
+
+class TestModelTelemetry:
+    def test_on_arrival_updates_both(self):
+        tel = ModelTelemetry.create(ewma_alpha=0.5)
+        lam, acc = tel.on_arrival(0.0)
+        assert lam == 1.0 and acc == 0.5
+        lam, acc = tel.on_arrival(0.1)
+        assert lam == 2.0 and acc == pytest.approx(1.25)
+        assert tel.arrivals == 2
+
+
+class TestMetricsRegistry:
+    def test_gauge_roundtrip(self):
+        m = MetricsRegistry()
+        key = m.desired_replicas_key("yolov5m", "pi4-edge")
+        m.set_gauge(key, 4)
+        assert m.get_gauge(key) == 4.0
+        assert key in m.snapshot()
+        assert m.get_gauge("missing", 7.0) == 7.0

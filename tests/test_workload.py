@@ -1,0 +1,88 @@
+"""Arrival-process generators (§V-B, §V-D)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import workload
+
+
+class TestPoisson:
+    def test_rate_is_right(self):
+        arr = workload.poisson_arrivals(5.0, 2000.0, "m", seed=0)
+        rate = len(arr) / 2000.0
+        assert rate == pytest.approx(5.0, rel=0.1)
+
+    def test_sorted_and_within_horizon(self):
+        arr = workload.poisson_arrivals(3.0, 100.0, "m", seed=1)
+        ts = [a.t for a in arr]
+        assert ts == sorted(ts)
+        assert all(0 <= t < 100.0 for t in ts)
+
+    def test_deterministic(self):
+        a = workload.poisson_arrivals(2.0, 50.0, "m", seed=42)
+        b = workload.poisson_arrivals(2.0, 50.0, "m", seed=42)
+        assert [x.t for x in a] == [x.t for x in b]
+
+
+class TestBoundedPareto:
+    @given(st.floats(1.1, 3.0), st.integers(0, 100))
+    @settings(max_examples=30, deadline=None)
+    def test_samples_within_bounds(self, alpha, seed):
+        rng = np.random.default_rng(seed)
+        x = workload.bounded_pareto(rng, alpha, 2.0, 8.0, size=500)
+        assert (x >= 2.0 - 1e-9).all() and (x <= 8.0 + 1e-9).all()
+
+    def test_heavy_tail_shape(self):
+        rng = np.random.default_rng(0)
+        x = workload.bounded_pareto(rng, 1.5, 2.0, 8.0, size=20000)
+        # Pareto mass concentrates near the lower bound
+        assert np.median(x) < 3.2
+        assert x.max() > 6.0
+
+    def test_burst_process_rate_exceeds_base(self):
+        base = workload.poisson_arrivals(2.0, 500.0, "m", seed=3)
+        bursty = workload.bounded_pareto_bursts(2.0, 500.0, "m", seed=3,
+                                                burst_rate=0.1)
+        assert len(bursty) > len(base)
+
+    def test_bursts_are_localised(self):
+        arr = workload.bounded_pareto_bursts(1.0, 600.0, "m", seed=4,
+                                             burst_rate=0.02,
+                                             burst_duration=5.0)
+        ts = np.array([a.t for a in arr])
+        counts, _ = np.histogram(ts, bins=np.arange(0, 601, 1.0))
+        # some 1-second bins should be far above the base rate
+        assert counts.max() >= 4
+
+
+class TestRamp:
+    def test_segments_have_rising_rates(self):
+        arr = workload.ramp_arrivals([1, 4], 300.0, "m", seed=5)
+        ts = np.array([a.t for a in arr])
+        n1 = ((ts >= 0) & (ts < 300)).sum() / 300.0
+        n2 = ((ts >= 300) & (ts < 600)).sum() / 300.0
+        assert n1 == pytest.approx(1.0, rel=0.3)
+        assert n2 == pytest.approx(4.0, rel=0.3)
+
+    def test_sorted(self):
+        arr = workload.ramp_arrivals([2, 1, 3], 50.0, "m", seed=6)
+        ts = [a.t for a in arr]
+        assert ts == sorted(ts)
+
+
+class TestRobotTrace:
+    def test_per_robot_period(self):
+        arr = workload.robot_trace(n_robots=5, period=1.0, horizon=60.0,
+                                   model="m", seed=7, jitter=0.0)
+        per_robot = {}
+        for a in arr:
+            per_robot.setdefault(a.robot, []).append(a.t)
+        assert len(per_robot) == 5
+        for ts in per_robot.values():
+            gaps = np.diff(sorted(ts))
+            np.testing.assert_allclose(gaps, 1.0, atol=1e-6)
+
+    def test_aggregate_rate(self):
+        arr = workload.robot_trace(10, 1.0, 100.0, "m", seed=8)
+        assert len(arr) / 100.0 == pytest.approx(10.0, rel=0.1)
