@@ -13,7 +13,7 @@ import os
 import time
 
 ALL = ("fig2", "table4", "fig3", "fig4", "table6", "router_us", "capacity",
-       "roofline")
+       "sim_throughput", "roofline")
 
 
 def main() -> None:
@@ -40,6 +40,8 @@ def main() -> None:
                 from benchmarks import bench_router_us as m
             elif name == "capacity":
                 from benchmarks import bench_capacity as m
+            elif name == "sim_throughput":
+                from benchmarks import bench_sim_throughput as m
             elif name == "roofline":
                 if not os.path.isdir("results/dryrun"):
                     print("# skipped: results/dryrun missing "

@@ -21,13 +21,18 @@ from repro.core.latency_model import (CLOUD, EFFICIENTDET, FASTER_RCNN,
                                       affine_power_law, calibrate,
                                       calibrate_from_table_iv,
                                       g_fixed_replicas, g_fixed_traffic)
-from repro.core.queueing import erlang_c, mmc_wait, mmc_wait_np
+from repro.core.queueing import (erlang_c, mmc_wait, mmc_wait_np,
+                                 mmc_wait_scalar)
 from repro.core.router import (Action, Decision, Router, RouterParams,
-                               score_instances, select_instance)
+                               score_instance_scalar, score_instances,
+                               score_instances_batch, select_instance,
+                               select_instance_batch)
 from repro.core.scheduler import MultiQueueScheduler, QualityClass, Request
 from repro.core.simulator import ClusterSimulator, SimConfig, SimResult
 from repro.core.telemetry import Ewma, MetricsRegistry, SlidingRate
 from repro.core.workload import (Arrival, bounded_pareto_bursts,
+                                 diurnal_arrivals, flash_crowd_arrivals,
+                                 mixed_traffic, mmpp_arrivals,
                                  poisson_arrivals, ramp_arrivals, robot_trace)
 
 __all__ = [
@@ -37,10 +42,12 @@ __all__ = [
     "YOLOV5M", "CalibratedModel", "InstanceClass", "ModelProfile",
     "affine_power_law", "calibrate", "calibrate_from_table_iv",
     "g_fixed_replicas", "g_fixed_traffic", "erlang_c", "mmc_wait",
-    "mmc_wait_np", "Action", "Decision", "Router", "RouterParams",
-    "score_instances", "select_instance", "MultiQueueScheduler",
-    "QualityClass", "Request", "ClusterSimulator", "SimConfig", "SimResult",
-    "Ewma", "MetricsRegistry", "SlidingRate", "Arrival",
-    "bounded_pareto_bursts", "poisson_arrivals", "ramp_arrivals",
-    "robot_trace",
+    "mmc_wait_np", "mmc_wait_scalar", "Action", "Decision", "Router",
+    "RouterParams", "score_instance_scalar", "score_instances",
+    "score_instances_batch", "select_instance", "select_instance_batch",
+    "MultiQueueScheduler", "QualityClass", "Request", "ClusterSimulator",
+    "SimConfig", "SimResult", "Ewma", "MetricsRegistry", "SlidingRate",
+    "Arrival", "bounded_pareto_bursts", "diurnal_arrivals",
+    "flash_crowd_arrivals", "mixed_traffic", "mmpp_arrivals",
+    "poisson_arrivals", "ramp_arrivals", "robot_trace",
 ]

@@ -28,7 +28,6 @@ from typing import Optional
 import numpy as np
 
 from repro.core.catalogue import Cluster, Deployment
-from repro.core.latency_model import g_fixed_replicas_np
 from repro.core.telemetry import MetricsRegistry
 
 
@@ -37,19 +36,54 @@ def desired_replicas(dep: Deployment, lam_accum: float, tau: float,
     """Smallest N with g_mi(lam_accum, N) <= tau  (PM-HPA custom metric).
 
     Evaluates the fixed-traffic latency function g_mi(N) (Eq. 17) for
-    N = 1..n_probe and returns the first feasible count (capped at n_max;
+    N = 1, 2, ... and returns the first feasible count (capped at n_max;
     at least 1). This is the paper's 'replica count computed in line 15
     of Algorithm 1' generalised to jump straight to the needed N instead
     of stepping one replica at a time.
+
+    Hot path: this runs on EVERY telemetry export (per arrival in the
+    simulator), so instead of evaluating a dense 1..n_probe batch through
+    ``g_fixed_replicas_np`` it scans N upward with an early exit, growing
+    the Erlang-B inverse recurrence one step per N. Every float op is
+    bit-identical to the batched form (first-True-index semantics match
+    ``np.argmax`` on the feasibility mask); test_autoscaler pins the
+    equivalence against ``g_fixed_replicas_np``.
     """
     if lam_accum <= 0.0:
         return 1
-    ns = np.arange(1, n_probe + 1)
-    # RTT-free comparison: tau budgets processing + queueing (§V-A4)
-    g = g_fixed_replicas_np(lam_accum, ns, dep.model, dep.instance,
-                            dep.gamma) - dep.instance.net_rtt
-    ok = g <= tau
-    n_star = int(ns[np.argmax(ok)]) if ok.any() else n_probe
+    m, inst = dep.model, dep.instance
+    lam = float(lam_accum)
+    mu = inst.speedup / m.l_ref            # service_rate(m, i)
+    # Saturated regime: rho(n) = lam/(n mu) is non-increasing in n, so if
+    # even n_probe replicas are unstable every probe is infeasible and the
+    # scan would return n_probe unchanged — skip it (fleet-scale arrival
+    # bursts hit this constantly).
+    if lam / (n_probe * mu) >= 1.0:
+        return max(1, min(n_probe, dep.n_max))
+    a = lam / mu
+    base = m.l_ref / inst.speedup
+    gamma = np.float64(dep.gamma)
+    invb = 1.0                             # 1/B(a, 0)
+    n_star = n_probe
+    for n in range(1, n_probe + 1):
+        invb = 1.0 + (n / a) * invb
+        if invb > 1e280:                   # erlang_b_np's cap, inlined
+            invb = 1e280
+        cmu = n * mu
+        rho = lam / cmu
+        if rho >= 1.0:
+            continue                       # queueing term infinite
+        lam_tilde = lam / n
+        util = (lam_tilde * m.r_demand + inst.background) / inst.r_max
+        proc = base * (1.0 + float(np.power(np.float64(max(util, 0.0)),
+                                            gamma)))
+        b = 1.0 / invb
+        cc = b / max(1.0 - rho * (1.0 - b), 1e-30)
+        q = cc / max(cmu - lam, 1e-30)
+        # RTT-free comparison: tau budgets processing + queueing (§V-A4)
+        if (proc + inst.net_rtt + q) - inst.net_rtt <= tau:
+            n_star = n
+            break
     return max(1, min(n_star, dep.n_max))
 
 
@@ -83,16 +117,23 @@ class PMHPA:
         self.quota = quota  # cluster-wide replica quota (None = unlimited)
         self.events: list[ScaleEvent] = []
         self._last_reconcile = -float("inf")
+        # per-deployment constants, cached off the per-arrival export path
+        self._tau: dict[str, float] = {}
+        self._metric_key: dict[str, str] = {}
 
     # -- custom-metric export (event-driven, §IV-D) --------------------- #
     def export(self, dep: Deployment, lam_accum: float) -> int:
-        tau = self.x * (dep.model.l_ref / dep.instance.speedup)
+        tau = self._tau.get(dep.key)
+        if tau is None:
+            tau = self.x * (dep.model.l_ref / dep.instance.speedup)
+            self._tau[dep.key] = tau
+            self._metric_key[dep.key] = self.metrics.desired_replicas_key(
+                dep.model.name, dep.instance.name)
         n_star = desired_replicas(dep, lam_accum, tau)
         # scale-in hysteresis: only shrink when the pool is genuinely idle
         if n_star < dep.n_replicas and dep.rho(lam_accum) >= self.rho_low:
             n_star = dep.n_replicas
-        key = self.metrics.desired_replicas_key(dep.model.name, dep.instance.name)
-        self.metrics.set_gauge(key, n_star)
+        self.metrics.set_gauge(self._metric_key[dep.key], n_star)
         return n_star
 
     # -- HPA reconciliation loop (every 5 s, §IV-D) --------------------- #

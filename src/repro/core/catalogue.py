@@ -40,10 +40,13 @@ class Deployment:
     def __post_init__(self):
         self.alpha, self.beta = affine_params(self.model, self.instance, self.gamma)
         self.mu = service_rate(self.model, self.instance)
+        # The key is read on every routed request; model/instance are
+        # frozen dataclasses, so cache the join once.
+        self._key = f"{self.model.name}@{self.instance.name}"
 
     @property
     def key(self) -> str:
-        return f"{self.model.name}@{self.instance.name}"
+        return self._key
 
     def rho(self, lam_m: float) -> float:
         """Traffic intensity of the pool at aggregate arrival rate lam_m."""
@@ -59,6 +62,8 @@ class Cluster:
             if d.key in self.deployments:
                 raise ValueError(f"duplicate deployment {d.key}")
             self.deployments[d.key] = d
+        # topology is static: memoise the per-request upstream lookup
+        self._upstream: dict[str, Optional[Deployment]] = {}
 
     def __getitem__(self, key: str) -> Deployment:
         return self.deployments[key]
@@ -80,8 +85,17 @@ class Cluster:
 
         Edge deployments offload to the cloud deployment of the same model
         if it exists, else to the cloud deployment of the next-faster model
-        (balanced -> low-latency direction per Alg. 1 line 22).
+        (balanced -> low-latency direction per Alg. 1 line 22). Evaluated
+        on every request, so the (static) answer is memoised per key.
         """
+        try:
+            return self._upstream[dep.key]
+        except KeyError:
+            up = self._upstream_of_uncached(dep)
+            self._upstream[dep.key] = up
+            return up
+
+    def _upstream_of_uncached(self, dep: Deployment) -> Optional[Deployment]:
         if dep.instance.tier == "edge":
             cloud_same = [d for d in self.for_model(dep.model.name)
                           if d.instance.tier == "cloud"]

@@ -93,6 +93,58 @@ def score_instances_np(lam: float, alpha, beta, gamma, mu, n, rtt) -> np.ndarray
     return np.where(rho < 1.0, np.minimum(g, BIG), BIG)
 
 
+@jax.jit
+def score_instances_batch(lam: jax.Array, alpha: jax.Array, beta: jax.Array,
+                          gamma: jax.Array, mu: jax.Array, n: jax.Array,
+                          rtt: jax.Array) -> jax.Array:
+    """Batched scoring: ``lam`` is (R,) per-request aggregate-rate
+    estimates; deployment params are (I,). Returns the (R, I) predicted
+    latency matrix via ``jax.vmap`` over :func:`score_instances` — each
+    row is bit-identical to the single-request path. The Pallas kernel in
+    ``repro.kernels.routing_score`` computes the same decision with a
+    table-interpolated Erlang-C term (oracle: ``repro.kernels.ref``).
+    """
+    lam = jnp.asarray(lam, jnp.float32)
+
+    def one(lam_r: jax.Array) -> jax.Array:
+        return score_instances(jnp.broadcast_to(lam_r, alpha.shape),
+                               alpha, beta, gamma, mu, n, rtt)
+
+    return jax.vmap(one)(lam)
+
+
+@jax.jit
+def select_instance_batch(g: jax.Array, slo: jax.Array, cost: jax.Array,
+                          candidate_mask: jax.Array
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Row-wise :func:`select_instance` over a (R, I) score matrix.
+    Returns (idx (R,), feasible_any (R,))."""
+    return jax.vmap(select_instance, in_axes=(0, None, None, None))(
+        g, slo, cost, candidate_mask)
+
+
+def score_instance_scalar(lam: float, alpha: float, beta: float, gamma: float,
+                          mu: float, n: float, rtt: float) -> float:
+    """Scalar fast path of :func:`score_instances_np` for ONE deployment.
+
+    The discrete-event simulator calls the predictor twice per arrival;
+    the array version costs ~120 us in wrappers alone. This twin is
+    BIT-IDENTICAL (``np.power`` on float64 scalars matches the array
+    ufunc; Python ``**`` does not) and runs in ~1 us — test_router pins
+    the equivalence over a parameter sweep.
+    """
+    nf = float(n)
+    lam_tilde = lam / max(nf, 1.0)
+    proc = alpha + beta * float(np.power(np.float64(max(lam_tilde, 0.0)),
+                                         np.float64(gamma)))
+    q = queueing.mmc_wait_scalar(lam, int(n), mu)
+    if not q < float("inf"):
+        q = BIG
+    g = proc + rtt + q
+    rho = lam / max(nf * mu, 1e-12)
+    return min(g, BIG) if rho < 1.0 else BIG
+
+
 class Action(enum.Enum):
     LOCAL = "local"                    # routed to a local replica (line 28)
     OFFLOAD_FAST = "offload_fast"      # per-request SLO guard (line 11)
@@ -167,11 +219,9 @@ class Router:
         *controllable* latency against tau, not the RTT-inflated total.
         Tier selection (route_best) keeps the RTT so cross-tier
         comparisons stay honest."""
-        g = score_instances_np(
-            lam, [dep.alpha], [dep.beta], [dep.gamma], [dep.mu],
-            [dep.n_replicas],
-            [dep.instance.net_rtt if with_rtt else 0.0])
-        return float(g[0])
+        return score_instance_scalar(
+            lam, dep.alpha, dep.beta, dep.gamma, dep.mu, dep.n_replicas,
+            dep.instance.net_rtt if with_rtt else 0.0)
 
     # ------------------------------------------------------------------ #
     def _control_pass(self, dep: Deployment, req: Request, t_now: float,

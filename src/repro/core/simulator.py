@@ -27,12 +27,23 @@ Two controller modes:
 * ``laimr``    — Router (Algorithm 1) + PM-HPA custom-metric autoscaling.
 * ``baseline`` — static binding (no offload) + reactive latency-threshold
                  autoscaler with its 60-120 s decision lag.
+
+Fleet-scale fast path: the event loop is O(log n) per event — O(1)
+idle-replica free-list per pool, deque FIFOs, cached per-pool service
+constants, memoised home-tier binding, and scalar bit-identical twins of
+the control-plane predictors (see ``queueing.mmc_wait_scalar``,
+``router.score_instance_scalar``, ``autoscaler.desired_replicas``).
+Refactors here must keep the golden digests in
+``tests/test_sim_golden.py`` bit-identical per seed;
+``benchmarks/bench_sim_throughput.py`` is the speed baseline
+(>=1M arrivals end-to-end).
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import itertools
+from collections import deque
 from typing import Literal, Optional
 
 import numpy as np
@@ -58,7 +69,21 @@ class _Replica:
 
 
 class _Pool:
-    """Runtime state of one deployment's replica pool."""
+    """Runtime state of one deployment's replica pool.
+
+    Fleet-scale fast path: the idle-replica lookup is O(1) amortised via a
+    min-heap free-list of idle rids with lazy invalidation (rids are
+    assigned in increasing order, so heap-min == first idle replica in
+    creation order — the exact replica the seed's linear scan returned),
+    the FIFO queue is a deque (list.pop(0) was O(n)), ``n_ready`` is an
+    incrementally maintained counter, and the Eq. 5 service-time constants
+    are cached once per pool instead of chased through four attribute
+    lookups per service start.
+    """
+
+    __slots__ = ("dep", "replicas", "_rid", "queue", "rate", "pending_up",
+                 "_idle", "_n_ready", "svc_base", "svc_r_demand",
+                 "svc_background", "svc_r_max", "net_rtt")
 
     def __init__(self, dep: Deployment):
         self.dep = dep
@@ -66,23 +91,71 @@ class _Pool:
             i: _Replica(rid=i) for i in range(dep.n_replicas)
         }
         self._rid = itertools.count(dep.n_replicas)
-        self.queue: list[Request] = []
+        self.queue: deque[Request] = deque()
         self.rate = SlidingRate(window=1.0)
         self.pending_up: int = 0  # replicas booting
+        self._idle: list[int] = list(range(dep.n_replicas))  # already a heap
+        self._n_ready: int = dep.n_replicas
+        # cached Eq. 5 constants (values identical to the attribute chains)
+        self.svc_base = dep.model.l_ref / dep.instance.speedup
+        self.svc_r_demand = dep.model.r_demand
+        self.svc_background = dep.instance.background
+        self.svc_r_max = dep.instance.r_max
+        self.net_rtt = dep.instance.net_rtt
 
     @property
     def n_ready(self) -> int:
-        return sum(1 for r in self.replicas.values() if not r.draining)
+        return self._n_ready
+
+    def add_replica(self) -> _Replica:
+        rid = next(self._rid)
+        rep = _Replica(rid=rid)
+        self.replicas[rid] = rep
+        heapq.heappush(self._idle, rid)
+        self._n_ready += 1
+        return rep
+
+    def mark_draining(self, rep: _Replica) -> None:
+        """Flag for graceful termination; idle replicas leave immediately
+        (their stale free-list entry is discarded lazily).
+
+        Re-marking an already-draining replica is a no-op: scale-in can
+        re-select a busy draining replica as a victim on a later
+        reconcile, and decrementing the ready-count again would corrupt
+        it permanently (the seed's recount property was naturally
+        idempotent; the counter must be guarded)."""
+        if rep.draining:
+            return
+        rep.draining = True
+        self._n_ready -= 1
+        if not rep.busy:
+            del self.replicas[rep.rid]
+
+    def release(self, rep: _Replica) -> None:
+        """Return a replica to the free-list after a service completes."""
+        rep.busy = False
+        heapq.heappush(self._idle, rep.rid)
 
     def idle_replica(self) -> Optional[_Replica]:
-        for r in self.replicas.values():
-            if not r.busy and not r.draining:
-                return r
+        """Peek the idle replica the seed's linear scan would return,
+        discarding free-list entries invalidated by drain/removal."""
+        heap = self._idle
+        while heap:
+            rep = self.replicas.get(heap[0])
+            if rep is not None and not rep.busy and not rep.draining:
+                return rep
+            heapq.heappop(heap)
         return None
+
+    def pop_idle(self) -> Optional[_Replica]:
+        rep = self.idle_replica()
+        if rep is not None:
+            heapq.heappop(self._idle)
+        return rep
 
     def sync_dep(self) -> None:
         """Keep Deployment.n_replicas (the control-plane view) in sync."""
-        self.dep.n_replicas = max(1, self.n_ready)
+        self.dep.n_replicas = max(1, self._n_ready)
 
 
 @dataclasses.dataclass
@@ -112,6 +185,7 @@ class SimResult:
     scale_events: list[ScaleEvent]
     offload_fast: int
     offload_bulk: float
+    n_events: int = 0      # heap events processed (throughput accounting)
 
     def latencies(self) -> np.ndarray:
         return np.array([r.latency for r in self.completed if r.latency is not None])
@@ -156,26 +230,28 @@ class ClusterSimulator:
         self._seq = itertools.count()
         self.completed: list[Request] = []
         self.all_scale_events: list[ScaleEvent] = []
+        # per-arrival caches (hot path): home deployment per model name,
+        # desired-replicas gauge key per deployment key
+        self._home: dict[str, Deployment] = {}
+        self._gauge_key: dict[str, str] = {}
 
     # ------------------------------------------------------------------ #
     def _push(self, t: float, kind: int, payload: object) -> None:
         heapq.heappush(self._events, (t, kind, next(self._seq), payload))
 
     def _service_time(self, pool: _Pool) -> float:
-        dep = pool.dep
         lam_pool = pool.rate.rate(self._now)
-        n = max(pool.n_ready, 1)
-        lam_tilde = lam_pool / n
-        util = (lam_tilde * dep.model.r_demand + dep.instance.background) \
-            / dep.instance.r_max
+        n = pool._n_ready
+        lam_tilde = lam_pool / n if n > 1 else lam_pool
+        util = (lam_tilde * pool.svc_r_demand + pool.svc_background) \
+            / pool.svc_r_max
         util = min(max(util, 0.0), self.cfg.util_cap)
-        base = (dep.model.l_ref / dep.instance.speedup) \
-            * (1.0 + util ** self.cfg.gamma_runtime)
+        base = pool.svc_base * (1.0 + util ** self.cfg.gamma_runtime)
         jit = float(self.rng.lognormal(mean=0.0, sigma=self.cfg.jitter_sigma))
         return base * jit
 
     def _start_service(self, pool: _Pool, req: Request) -> None:
-        rep = pool.idle_replica()
+        rep = pool.pop_idle()
         assert rep is not None
         rep.busy = True
         req.start_service = self._now
@@ -191,10 +267,17 @@ class ClusterSimulator:
 
     # ------------------------------------------------------------------ #
     def _bind_deployment(self, arr: Arrival) -> Deployment:
-        """The deployment a request is nominally bound to (its home tier)."""
-        deps = self.cluster.for_model(arr.model)
-        edge = [d for d in deps if d.instance.tier == "edge"]
-        return (edge or deps)[0]
+        """The deployment a request is nominally bound to (its home tier).
+
+        The edge-first preference over a static catalogue is invariant, so
+        the lookup is cached per model name."""
+        dep = self._home.get(arr.model)
+        if dep is None:
+            deps = self.cluster.for_model(arr.model)
+            edge = [d for d in deps if d.instance.tier == "edge"]
+            dep = (edge or deps)[0]
+            self._home[arr.model] = dep
+        return dep
 
     def _export_for(self, dep: Deployment) -> None:
         """Event-driven custom-metric export (PM-HPA, §IV-D)."""
@@ -216,14 +299,26 @@ class ClusterSimulator:
             # export raises desired_replicas immediately; HPA enacts it on
             # its next 5 s reconcile (k8s semantics).
             for d in decision.scale_out:
-                key = self.metrics.desired_replicas_key(d.model.name,
-                                                        d.instance.name)
+                key = self._gauge_key.get(d.key)
+                if key is None:
+                    key = self.metrics.desired_replicas_key(d.model.name,
+                                                            d.instance.name)
+                    self._gauge_key[d.key] = key
                 cur = self.metrics.get_gauge(key, d.n_replicas)
                 self.metrics.set_gauge(key, min(max(cur, d.n_replicas + 1),
                                                 d.n_max))
-            self._export_for(dep)
-            if target.key != dep.key:
-                self._export_for(target)
+            # NOTE on the event-driven export (§IV-D): the paper exports
+            # the custom metric on every telemetry update. Here the HPA
+            # tick handler re-exports every deployment from its (just
+            # decayed) EWMA immediately before reconcile reads the
+            # gauges, so NO inter-tick gauge write is ever observable —
+            # neither a per-arrival export (dropped from this hot path:
+            # bit-identical on every golden trace, ~40% of the laimr
+            # event-loop cost) nor the Alg.1 line-19 bump above, which
+            # is kept only as the faithful transcription of 'scale out
+            # one replica NOW' and costs a dict lookup per scale-out
+            # decision. If reconcile ever stops re-exporting first, the
+            # bump (and the export policy) become load-bearing again.
         else:
             target = dep  # baseline: static binding, no offload
         req.assigned_instance = target.key
@@ -232,27 +327,28 @@ class ClusterSimulator:
     def _on_service_end(self, key: str, rid: int, req: Request) -> None:
         pool = self.pools[key]
         rep = pool.replicas.get(rid)
-        req.completion = self._now + pool.dep.instance.net_rtt
+        req.completion = self._now + pool.net_rtt
         self.completed.append(req)
         if self.cfg.mode == "baseline":
             self.reactive.observe(pool.dep, req.latency)
         if rep is None:
             return
-        rep.busy = False
         if rep.draining:
+            rep.busy = False
             del pool.replicas[rid]
             pool.sync_dep()
+        else:
+            pool.release(rep)
         if pool.queue and pool.idle_replica() is not None:
-            self._start_service(pool, pool.queue.pop(0))
+            self._start_service(pool, pool.queue.popleft())
 
     def _on_replica_ready(self, key: str) -> None:
         pool = self.pools[key]
         pool.pending_up = max(0, pool.pending_up - 1)
-        rid = next(pool._rid)
-        pool.replicas[rid] = _Replica(rid=rid)
+        pool.add_replica()
         pool.sync_dep()
         while pool.queue and pool.idle_replica() is not None:
-            self._start_service(pool, pool.queue.pop(0))
+            self._start_service(pool, pool.queue.popleft())
 
     def _apply_scale(self, ev: ScaleEvent) -> None:
         pool = self.pools[ev.deployment_key]
@@ -268,9 +364,7 @@ class ClusterSimulator:
             for r in victims[: current - ev.to_n]:
                 if pool.n_ready <= 1:
                     break
-                r.draining = True
-                if not r.busy:
-                    del pool.replicas[r.rid]
+                pool.mark_draining(r)
             pool.sync_dep()
         self.all_scale_events.append(ev)
 
@@ -297,15 +391,19 @@ class ClusterSimulator:
         self._push(self.cfg.hpa_period, _HPA_TICK, None)
         end = horizon if horizon is not None else \
             (arrivals[-1].t + 120.0 if arrivals else 0.0)
-        while self._events:
-            t, kind, _, payload = heapq.heappop(self._events)
+        events, heappop = self._events, heapq.heappop
+        on_arrival, on_service_end = self._on_arrival, self._on_service_end
+        n_events = 0
+        while events:
+            t, kind, _, payload = heappop(events)
             if t > end and kind == _HPA_TICK:
                 continue  # stop rescheduling ticks past the horizon
             self._now = t
+            n_events += 1
             if kind == _ARRIVAL:
-                self._on_arrival(payload)
+                on_arrival(payload)
             elif kind == _SERVICE_END:
-                self._on_service_end(*payload)
+                on_service_end(*payload)
             elif kind == _REPLICA_READY:
                 self._on_replica_ready(payload)
             elif kind == _HPA_TICK:
@@ -316,4 +414,5 @@ class ClusterSimulator:
             scale_events=self.all_scale_events,
             offload_fast=sum(t.offloaded_fast for t in tel.values()),
             offload_bulk=sum(t.offloaded_bulk for t in tel.values()),
+            n_events=n_events,
         )

@@ -93,13 +93,16 @@ class ServingEngine:
             {"embeddings": prompts}
         logits, cache = jax.jit(
             lambda p, bb: model.prefill(p, self.cfg, bb))(self.params, batch)
-        # move the prefilled cache into the engine slots (b == slots fast path)
+        # move the prefilled cache into the engine slots (b == slots fast
+        # path). NOTE: _merge_batch builds its index tuple explicitly —
+        # PEP-646 star-unpacking inside a subscript is a SyntaxError on
+        # Python 3.10, which this repo still supports.
         if b == self.slots:
             self.cache = cache
         else:
             self.cache = jax.tree.map(
-                lambda full, new: full.at[..., :b, *([slice(None)] * 0)].set(new)
-                if False else _merge_batch(full, new, b), self.cache, cache)
+                lambda full, new: _merge_batch(full, new, b),
+                self.cache, cache)
         first = jnp.argmax(logits, -1).astype(jnp.int32)
         self.current = jnp.zeros((self.slots,), jnp.int32).at[:b].set(first)
         self.pos = jnp.zeros((self.slots,), jnp.int32).at[:b].set(s)
@@ -111,11 +114,14 @@ class ServingEngine:
 
 
 def _merge_batch(full: jax.Array, new: jax.Array, b: int) -> jax.Array:
-    """Write `new` (batch b) into `full` along its batch axis (the axis
-    whose size differs)."""
-    for ax in range(full.ndim):
-        if full.shape[ax] != new.shape[ax]:
-            idx = [slice(None)] * full.ndim
-            idx[ax] = slice(0, b)
-            return full.at[tuple(idx)].set(new)
-    return new  # same shape: replace
+    """Write `new` into `full` at the leading corner.
+
+    A prefilled cache leaf can be smaller than the engine's along BOTH
+    the batch-slot axis (b < slots) and the cache-depth axis (prompt
+    length < max_len), so every differing axis is sliced to ``new``'s
+    extent — not just the first mismatch."""
+    if full.shape == new.shape:
+        return new
+    idx = tuple(slice(0, ns) if fs != ns else slice(None)
+                for fs, ns in zip(full.shape, new.shape))
+    return full.at[idx].set(new)

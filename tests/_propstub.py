@@ -1,0 +1,126 @@
+"""Property-testing shim: real ``hypothesis`` when installed, else a tiny
+seeded fallback so tier-1 collection never depends on an optional package.
+
+Usage in test modules (drop-in for the hypothesis imports)::
+
+    from _propstub import given, settings, st
+
+The fallback turns ``@given(...)`` into a ``pytest.mark.parametrize`` over
+deterministic example indices; each example seeds a ``random.Random`` from
+the test's qualified name + index and draws from the declared strategies.
+No shrinking, no adaptive edge-case search — just seeded coverage of the
+declared domains, which is what keeps the invariant tests meaningful on a
+bare interpreter. Install the ``property`` extra (see pyproject.toml) to
+get real hypothesis back; nothing in the test modules changes.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import inspect
+    import random
+    import zlib
+
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+    _MAX_EXAMPLES_CAP = 25  # keep the fallback suite fast
+
+    class _Strategy:
+        def draw(self, rng: random.Random):
+            raise NotImplementedError
+
+    class _Floats(_Strategy):
+        def __init__(self, lo: float, hi: float):
+            self.lo, self.hi = float(lo), float(hi)
+
+        def draw(self, rng):
+            # hit the bounds occasionally — cheap stand-in for hypothesis'
+            # boundary bias
+            r = rng.random()
+            if r < 0.05:
+                return self.lo
+            if r < 0.10:
+                return self.hi
+            return rng.uniform(self.lo, self.hi)
+
+    class _Integers(_Strategy):
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = int(lo), int(hi)
+
+        def draw(self, rng):
+            return rng.randint(self.lo, self.hi)
+
+    class _Lists(_Strategy):
+        def __init__(self, elem: _Strategy, min_size: int = 0,
+                     max_size: int = 10):
+            self.elem = elem
+            self.min_size = min_size
+            self.max_size = max_size if max_size is not None else min_size + 10
+
+        def draw(self, rng):
+            n = rng.randint(self.min_size, self.max_size)
+            return [self.elem.draw(rng) for _ in range(n)]
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, seq):
+            self.seq = list(seq)
+
+        def draw(self, rng):
+            return rng.choice(self.seq)
+
+    class st:  # noqa: N801 — mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10, **_kw):
+            return _Lists(elem, min_size, max_size)
+
+        @staticmethod
+        def sampled_from(seq):
+            return _SampledFrom(seq)
+
+    class settings:  # noqa: N801 — decorator that records max_examples
+        def __init__(self, max_examples: int = 10, **_kw):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._stub_max_examples = self.max_examples
+            return fn
+
+    def given(*strats: _Strategy):
+        """Parametrize over seeded example indices, drawing the declared
+        strategies inside the test body — the signature handed to pytest
+        keeps only the non-strategy parameters (e.g. ``self``) plus the
+        example index, so strategy parameters are never mistaken for
+        fixtures."""
+
+        def deco(fn):
+            n = min(getattr(fn, "_stub_max_examples", 10), _MAX_EXAMPLES_CAP)
+            base = zlib.adler32(fn.__qualname__.encode())
+
+            def wrapper(*args, _prop_example=0):
+                rng = random.Random(base * 100_003 + _prop_example)
+                fn(*args, *[s.draw(rng) for s in strats])
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            params = list(inspect.signature(fn).parameters.values())
+            kept = params[: len(params) - len(strats)]
+            wrapper.__signature__ = inspect.Signature(
+                kept + [inspect.Parameter(
+                    "_prop_example",
+                    inspect.Parameter.POSITIONAL_OR_KEYWORD)])
+            return pytest.mark.parametrize("_prop_example", range(n))(wrapper)
+
+        return deco

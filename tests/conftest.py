@@ -1,0 +1,19 @@
+"""Tier-1 test configuration.
+
+Markers
+-------
+``slow`` — kernel-sweep / integration tests that take minutes (Pallas
+interpret mode, dry-run lowering). The CI smoke target skips them:
+
+    PYTHONPATH=src python -m pytest -q -m "not slow"
+
+The full tier-1 command (ROADMAP.md) runs everything.
+"""
+import pytest  # noqa: F401  (kept for fixture/plugin extensions)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: multi-minute kernel/integration sweeps; deselect with "
+        "-m 'not slow'")

@@ -9,6 +9,9 @@ import pytest
 from repro.configs.base import ARCH_IDS, get_config, reduced
 from repro.models import model
 
+# Pallas-interpret / lowering sweeps run for minutes; CI smoke skips them.
+pytestmark = pytest.mark.slow
+
 B, S, T = 2, 32, 16
 
 

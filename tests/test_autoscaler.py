@@ -143,3 +143,29 @@ class TestReactive:
             ra.observe(dep, 0.05)
         evs = ra.reconcile(320.0)
         assert evs and evs[0].to_n == 3     # one step down, conservative
+
+
+class TestDesiredReplicasFastPath:
+    """The early-exit scan must pick the same N as the dense
+    g_fixed_replicas_np probe it replaced (first-feasible semantics)."""
+
+    def test_matches_dense_reference(self):
+        from repro.core.latency_model import g_fixed_replicas_np
+        deps = [
+            Deployment(YOLOV5M, PI4_EDGE, QualityClass.BALANCED, n_max=64),
+            Deployment(YOLOV5M, CLOUD, QualityClass.BALANCED, n_max=64),
+        ]
+        for dep in deps:
+            for tau in (0.9, 1.8, 3.0):
+                for lam in np.concatenate([np.linspace(0.01, 12, 40),
+                                           [50.0, 200.0, 1e4]]):
+                    lam = float(lam)
+                    ns = np.arange(1, 65)
+                    g = g_fixed_replicas_np(lam, ns, dep.model,
+                                            dep.instance, dep.gamma) \
+                        - dep.instance.net_rtt
+                    ok = g <= tau
+                    n_ref = int(ns[np.argmax(ok)]) if ok.any() else 64
+                    n_ref = max(1, min(n_ref, dep.n_max))
+                    assert desired_replicas(dep, lam, tau) == n_ref, \
+                        (dep.key, tau, lam)

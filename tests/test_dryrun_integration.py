@@ -7,6 +7,9 @@ import sys
 
 import pytest
 
+# Pallas-interpret / lowering sweeps run for minutes; CI smoke skips them.
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

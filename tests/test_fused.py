@@ -7,6 +7,9 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.fused import fused_attention, fused_decode_attention
 
+# Pallas-interpret / lowering sweeps run for minutes; CI smoke skips them.
+pytestmark = pytest.mark.slow
+
 
 def mk(b=2, s=256, h=4, hkv=2, d=32, seed=0):
     ks = jax.random.split(jax.random.PRNGKey(seed), 3)

@@ -11,6 +11,9 @@ from repro.kernels.flash_attention import flash_attention
 from repro.kernels.routing_score import build_erlang_table, routing_score
 from repro.kernels.ssd_scan import ssd_scan
 
+# Pallas-interpret / lowering sweeps run for minutes; CI smoke skips them.
+pytestmark = pytest.mark.slow
+
 
 def tol(dtype):
     return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 \

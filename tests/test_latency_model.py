@@ -1,8 +1,7 @@
 """Latency model (paper §III): power law, Eq. 15/17, calibration."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propstub import given, settings, st
 
 from repro.core import latency_model as lm
 

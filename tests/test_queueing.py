@@ -2,8 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propstub import given, settings, st
 
 from repro.core import queueing
 
@@ -130,3 +129,27 @@ class TestInverse:
             jnp.float32(lam), jnp.float32(mu), jnp.float32(tgt)))
         want = queueing.replicas_for_wait(lam, mu, tgt)
         assert got == want
+
+
+class TestScalarTwins:
+    """The simulator's per-event fast path must stay BIT-identical to the
+    numpy control-plane functions (same IEEE ops in the same order)."""
+
+    @given(st.floats(0.01, 60.0), st.integers(1, 64), st.floats(0.3, 3.0))
+    @settings(max_examples=60, deadline=None)
+    def test_mmc_wait_scalar_bit_identical(self, lam, c, mu):
+        want = float(queueing.mmc_wait_np(lam, np.array([c]), mu)[0])
+        got = queueing.mmc_wait_scalar(lam, c, mu)
+        assert got == want, (lam, c, mu)
+
+    def test_mmc_wait_scalar_edges(self):
+        assert queueing.mmc_wait_scalar(0.0, 4, 1.0) == 0.0
+        assert queueing.mmc_wait_scalar(-1.0, 4, 1.0) == 0.0
+        assert queueing.mmc_wait_scalar(5.0, 2, 1.0) == float("inf")
+
+    @given(st.floats(0.1, 30.0), st.integers(1, 48), st.floats(0.5, 2.0))
+    @settings(max_examples=40, deadline=None)
+    def test_erlang_b_scalar_bit_identical(self, lam, c, mu):
+        a = lam / mu
+        want = float(queueing.erlang_b_np(a, np.array([c]))[0])
+        assert queueing.erlang_b_scalar(a, c) == want

@@ -8,8 +8,9 @@ import pytest
 from repro.core.catalogue import Cluster, Deployment, paper_cluster
 from repro.core.latency_model import CLOUD, PI4_EDGE, YOLOV5M
 from repro.core.router import (BIG, Action, Router, RouterParams,
-                               score_instances, score_instances_np,
-                               select_instance)
+                               score_instance_scalar, score_instances,
+                               score_instances_batch, score_instances_np,
+                               select_instance, select_instance_batch)
 from repro.core.scheduler import QualityClass, Request
 
 
@@ -195,3 +196,87 @@ class TestRouteBest:
         req = mk_req(slo=1e-6)   # impossible SLO
         d = r.route_best(req, t_now=0.0)
         assert d.action is Action.OFFLOAD_FAST
+
+
+class TestScalarFastPath:
+    """score_instance_scalar is the per-arrival predictor inside the
+    simulator; it must be bit-identical to score_instances_np."""
+
+    def test_bit_identical_sweep(self):
+        rng = np.random.default_rng(3)
+        for _ in range(300):
+            lam = float(rng.uniform(0.0, 40.0))
+            alpha = float(rng.uniform(0.05, 1.5))
+            beta = float(rng.uniform(0.05, 3.0))
+            gamma = float(rng.uniform(0.5, 2.5))
+            mu = float(rng.uniform(0.3, 6.0))
+            n = float(rng.integers(1, 24))
+            rtt = float(rng.uniform(0.0, 1.0))
+            want = float(score_instances_np(
+                lam, [alpha], [beta], [gamma], [mu], [n], [rtt])[0])
+            got = score_instance_scalar(lam, alpha, beta, gamma, mu, n, rtt)
+            assert got == want, (lam, alpha, beta, gamma, mu, n, rtt)
+
+    def test_unstable_scores_big(self):
+        assert score_instance_scalar(100.0, 0.5, 1.0, 1.2, 1.0, 2.0,
+                                     0.0) == BIG
+
+
+class TestBatchScoring:
+    def _params(self, i, seed=0):
+        rng = np.random.default_rng(seed)
+        return dict(
+            alpha=jnp.asarray(rng.uniform(0.1, 1.0, i), jnp.float32),
+            beta=jnp.asarray(rng.uniform(0.1, 2.0, i), jnp.float32),
+            gamma=jnp.asarray(rng.uniform(0.9, 1.8, i), jnp.float32),
+            mu=jnp.asarray(rng.uniform(0.5, 3.0, i), jnp.float32),
+            n=jnp.asarray(rng.integers(1, 8, i), jnp.float32),
+            rtt=jnp.asarray(rng.uniform(0.0, 0.2, i), jnp.float32),
+        )
+
+    def test_rows_match_single_request_path(self):
+        p = self._params(5, seed=1)
+        lam = jnp.asarray(np.random.default_rng(2).uniform(0.0, 12.0, 16),
+                          jnp.float32)
+        g = score_instances_batch(lam, **p)
+        assert g.shape == (16, 5)
+        for r in range(16):
+            row = score_instances(jnp.broadcast_to(lam[r], (5,)), **p)
+            np.testing.assert_array_equal(np.asarray(g[r]), np.asarray(row))
+
+    def test_select_batch_matches_rowwise(self):
+        p = self._params(6, seed=3)
+        lam = jnp.asarray(np.random.default_rng(4).uniform(0.0, 10.0, 32),
+                          jnp.float32)
+        g = score_instances_batch(lam, **p)
+        slo = jnp.full((6,), 2.5, jnp.float32)
+        cost = jnp.asarray(np.random.default_rng(5).uniform(1, 3, 6),
+                           jnp.float32)
+        mask = jnp.ones((6,), bool)
+        idx, ok = select_instance_batch(g, slo, cost, mask)
+        for r in range(32):
+            i1, ok1 = select_instance(g[r], slo, cost, mask)
+            assert int(idx[r]) == int(i1)
+            assert bool(ok[r]) == bool(ok1)
+
+    def test_batch_agrees_with_kernel_oracle(self):
+        """The vmap path and the Pallas-kernel ref oracle rank candidates
+        identically up to the Erlang table-interpolation error."""
+        from repro.kernels import ref
+        from repro.kernels.routing_score import build_erlang_table
+        p = self._params(4, seed=7)
+        lam = jnp.asarray(np.random.default_rng(8).uniform(0.0, 8.0, 24),
+                          jnp.float32)
+        slo = jnp.full((4,), 3.0, jnp.float32)
+        cost = jnp.asarray([1.0, 1.5, 2.0, 2.5], jnp.float32)
+        table = build_erlang_table(np.asarray(p["mu"]), np.asarray(p["n"]),
+                                   t=257)
+        _, rg, rok = ref.routing_score(lam, p["alpha"], p["beta"],
+                                       p["gamma"], p["mu"], p["n"],
+                                       p["rtt"], slo, cost, table)
+        g = score_instances_batch(lam, **p)
+        idx, ok = select_instance_batch(g, slo, cost, jnp.ones(4, bool))
+        for r in range(24):
+            if bool(ok[r]) and bool(rok[r]):
+                gsel = float(g[r, int(idx[r])])
+                assert abs(float(rg[r]) - gsel) / max(gsel, 1e-6) < 0.05

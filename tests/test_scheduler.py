@@ -1,6 +1,5 @@
 """Quality-differentiated multi-queue scheduler (paper §IV-A)."""
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propstub import given, settings, st
 
 from repro.core.scheduler import MultiQueueScheduler, QualityClass, Request
 

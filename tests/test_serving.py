@@ -51,3 +51,37 @@ class TestServingEngine:
         prompts = jnp.ones((2, 8), jnp.int32)
         eng.generate(prompts, steps=2)
         assert int(eng.pos[0]) == 8 + 2 - 1
+
+
+class TestPartialBatchMerge:
+    def test_generate_with_fewer_prompts_than_slots(self):
+        """b < slots exercises _merge_batch: the prefilled cache is
+        smaller than the engine cache along BOTH the slot and the
+        cache-depth axes (regression: the one-axis merge broadcast-failed,
+        masked until the py3.10 SyntaxError on this path was fixed)."""
+        cfg, params = setup()
+        prompts = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                                     cfg.vocab_size)
+        eng = ServingEngine(cfg, params, slots=4, max_len=64)
+        out = eng.generate(prompts, steps=3)
+        assert out.tokens.shape == (2, 3)
+        assert np.isfinite(out.tokens).all()
+        assert list(eng.active[:2]) == [True, True]
+        assert eng.free_slots() == [2, 3]
+
+    def test_idle_slots_do_not_leak_into_active_decode(self):
+        """Active sequences must decode identically regardless of how
+        many idle slots share the batch: idle slots carry kv_pos = -1 and
+        must be masked out of attention entirely.
+
+        (Note the b == slots fast path is NOT comparable: it adopts the
+        prefill cache directly — an s-deep ring, max_len unused — so it
+        attends over a different cache geometry than the merged path.)"""
+        cfg, params = setup()
+        prompts = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0,
+                                     cfg.vocab_size)
+        four = ServingEngine(cfg, params, slots=4, max_len=64) \
+            .generate(prompts, steps=4)
+        eight = ServingEngine(cfg, params, slots=8, max_len=64) \
+            .generate(prompts, steps=4)
+        np.testing.assert_array_equal(four.tokens, eight.tokens)

@@ -15,11 +15,13 @@ from repro.launch import hlo_analysis
 
 
 def mesh16():
-    return AbstractMesh((16, 16), ("data", "model"))
+    # jax 0.4.37's AbstractMesh takes ((name, size), ...) pairs, not a
+    # bare shape tuple + names.
+    return AbstractMesh((("data", 16), ("model", 16)))
 
 
 def mesh_multipod():
-    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 
 
 class TestParamSpec:

@@ -1,0 +1,145 @@
+"""Seeded golden-trace regression + end-to-end simulator invariants.
+
+The golden digests pin the exact simulated latency distribution per seed.
+The fleet-scale fast path (O(1) idle free-list, deque FIFO, scalar
+Erlang/score/desired-replicas predictors) was verified bit-identical to
+the pre-refactor implementation when it landed; these digests keep every
+future 'optimisation' honest — a drift here means the simulated physics
+changed, not just the speed.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.catalogue import Cluster, Deployment, paper_cluster
+from repro.core.latency_model import CLOUD, PI4_EDGE, YOLOV5M
+from repro.core.scheduler import QualityClass
+from repro.core.simulator import ClusterSimulator, SimConfig
+from repro.core.workload import (bounded_pareto_bursts, diurnal_arrivals,
+                                 flash_crowd_arrivals, mixed_traffic,
+                                 mmpp_arrivals, poisson_arrivals,
+                                 ramp_arrivals)
+
+
+def two_tier() -> Cluster:
+    edge = dataclasses.replace(PI4_EDGE, net_rtt=0.05)
+    cloud = dataclasses.replace(CLOUD, net_rtt=0.086)
+    return Cluster([
+        Deployment(YOLOV5M, edge, QualityClass.BALANCED,
+                   n_replicas=2, n_max=6),
+        Deployment(YOLOV5M, cloud, QualityClass.BALANCED,
+                   n_replicas=2, n_max=16),
+    ])
+
+
+def trace_for(name: str):
+    if name == "ramp":
+        return ramp_arrivals([1, 2, 3, 4], 60.0, "yolov5m", seed=11)
+    return bounded_pareto_bursts(3.0, 120.0, "yolov5m", seed=11)
+
+
+# (trace, mode) -> exact digests of the seeded run (rel 1e-9: these are
+# deterministic float64 pipelines, approx only guards cross-libm noise).
+GOLDEN = {
+    ("ramp", "laimr"): dict(n=599, p50=0.5871768806577791,
+                            p99=1.271737008799826, offload_fast=281),
+    ("ramp", "baseline"): dict(n=599, p50=0.9240208248886006,
+                               p99=2.627375365238756, offload_fast=0),
+    ("burst", "laimr"): dict(n=626, p50=0.9304373036426412,
+                             p99=3.413968068519604, offload_fast=412),
+    ("burst", "baseline"): dict(n=626, p50=48.632737100185054,
+                                p99=60.98227057009135, offload_fast=0),
+}
+
+
+class TestGoldenTraces:
+    @pytest.mark.parametrize("trace,mode", sorted(GOLDEN))
+    def test_digest_stable(self, trace, mode):
+        arr = trace_for(trace)
+        sim = ClusterSimulator(two_tier(),
+                               SimConfig(mode=mode, seed=11, slo=1.0))
+        res = sim.run(arr, horizon=500.0)
+        want = GOLDEN[(trace, mode)]
+        s = res.summary()
+        assert int(s["n"]) == want["n"]
+        assert res.offload_fast == want["offload_fast"]
+        assert s["p50"] == pytest.approx(want["p50"], rel=1e-9)
+        assert s["p99"] == pytest.approx(want["p99"], rel=1e-9)
+
+    @pytest.mark.parametrize("trace,mode", sorted(GOLDEN))
+    def test_digest_repeatable_in_process(self, trace, mode):
+        arr = trace_for(trace)
+        runs = []
+        for _ in range(2):
+            sim = ClusterSimulator(two_tier(),
+                                   SimConfig(mode=mode, seed=11, slo=1.0))
+            runs.append(sim.run(arr, horizon=500.0).latencies())
+        np.testing.assert_array_equal(runs[0], runs[1])
+
+
+def scenario(name: str):
+    """The scenario matrix, sized so each case simulates in well under a
+    second but still exercises queueing + scaling + offload."""
+    if name == "poisson":
+        return two_tier(), poisson_arrivals(4.0, 60.0, "yolov5m", seed=5)
+    if name == "bursts":
+        return two_tier(), bounded_pareto_bursts(2.0, 60.0, "yolov5m",
+                                                 seed=5)
+    if name == "diurnal":
+        return two_tier(), diurnal_arrivals(3.0, 90.0, "yolov5m", seed=5,
+                                            amplitude=0.9, period=45.0)
+    if name == "mmpp":
+        return two_tier(), mmpp_arrivals([1.0, 8.0], 10.0, 80.0, "yolov5m",
+                                         seed=5)
+    if name == "flash":
+        return two_tier(), flash_crowd_arrivals(
+            1.0, 12.0, 90.0, "yolov5m", seed=5, t_start=30.0,
+            duration=20.0, ramp=5.0)
+    if name == "mixed":
+        return paper_cluster(), mixed_traffic(
+            {"efficientdet": 4.0, "yolov5m": 2.0, "faster_rcnn": 0.5},
+            60.0, seed=5)
+    raise KeyError(name)
+
+
+SCENARIOS = ["poisson", "bursts", "diurnal", "mmpp", "flash", "mixed"]
+
+
+class TestScenarioInvariants:
+    @pytest.mark.parametrize("name", SCENARIOS)
+    @pytest.mark.parametrize("mode", ["laimr", "baseline"])
+    def test_conservation_and_telemetry(self, name, mode):
+        cluster, arr = scenario(name)
+        assert arr, name
+        sim = ClusterSimulator(cluster, SimConfig(mode=mode, seed=5))
+        res = sim.run(arr, horizon=600.0)
+        # conservation: every arrival completes exactly once
+        assert len(res.completed) == len(arr)
+        ids = [r.req_id for r in res.completed]
+        assert len(set(ids)) == len(ids)
+        # latency decomposition: wait >= 0, service > 0, rtt >= 0
+        for r in res.completed:
+            assert r.latency is not None and r.latency > 0
+            assert r.start_service >= r.arrival - 1e-9
+            assert r.completion > r.start_service
+        # offload counters mirror router telemetry exactly
+        tel = sim.router.telemetry.values()
+        assert res.offload_fast == sum(t.offloaded_fast for t in tel)
+        assert res.offload_bulk == sum(t.offloaded_bulk for t in tel)
+        if mode == "baseline":
+            assert res.offload_fast == 0 and res.offload_bulk == 0
+        # scaling respects per-deployment caps
+        caps = {d.key: d.n_max for d in cluster}
+        for ev in res.scale_events:
+            assert ev.to_n <= caps[ev.deployment_key]
+
+    @pytest.mark.parametrize("name", SCENARIOS)
+    def test_generators_sorted_and_deterministic(self, name):
+        _, a = scenario(name)
+        _, b = scenario(name)
+        assert [x.t for x in a] == [x.t for x in b]
+        assert [x.model for x in a] == [x.model for x in b]
+        ts = [x.t for x in a]
+        assert ts == sorted(ts)
+        assert all(t >= 0.0 for t in ts)

@@ -124,3 +124,37 @@ class TestTailBehaviour:
         s = res.summary()
         assert s["p99"] >= s["p95"] >= s["p50"] > 0
         assert s["n"] == len(arr)
+
+
+class TestDrainCounterIdempotence:
+    def test_re_marking_busy_draining_victim_keeps_count(self):
+        """Scale-in can re-select a busy, already-draining replica as a
+        victim on a later reconcile; the ready-replica counter must not
+        be decremented twice (regression for the O(1) free-list refactor:
+        the seed's recount property was naturally idempotent)."""
+        from repro.core.autoscaler import ScaleEvent
+        from repro.core.simulator import _Pool
+
+        cl = two_tier(n_edge=4, edge_max=6)
+        sim = ClusterSimulator(cl, SimConfig(mode="laimr", seed=0))
+        sim._now = 0.0
+        pool = sim.pools["yolov5m@pi4-edge"]
+        # rids 2 and 3 are mid-service
+        for rid in (2, 3):
+            rep = pool.replicas[rid]
+            pool._idle.remove(rid)
+            rep.busy = True
+        assert pool.n_ready == 4
+        # first scale-in: busy rids 3, 2 are marked draining but stay
+        sim._apply_scale(ScaleEvent(0.0, pool.dep.key, 4, 2, "t"))
+        assert pool.n_ready == 2
+        assert pool.replicas[3].draining and pool.replicas[2].draining
+        # second scale-in while they still drain: the busy draining
+        # replica is re-selected as the victim (seed-faithful: it
+        # consumes the victim slot) and re-marking must be a no-op —
+        # the bug being regressed decremented the counter again,
+        # leaving n_ready == 1 while two replicas were actually ready.
+        sim._apply_scale(ScaleEvent(5.0, pool.dep.key, 4, 1, "t"))
+        ready = [r for r in pool.replicas.values() if not r.draining]
+        assert pool.n_ready == len(ready) == 2
+        assert pool.dep.n_replicas == 2

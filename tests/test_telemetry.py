@@ -1,7 +1,6 @@
 """In-memory telemetry: sliding window + EWMA (Algorithm 1 lines 1-6, 15)."""
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propstub import given, settings, st
 
 from repro.core.telemetry import Ewma, MetricsRegistry, ModelTelemetry, SlidingRate
 

@@ -1,8 +1,7 @@
 """Arrival-process generators (§V-B, §V-D)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propstub import given, settings, st
 
 from repro.core import workload
 
@@ -86,3 +85,87 @@ class TestRobotTrace:
     def test_aggregate_rate(self):
         arr = workload.robot_trace(10, 1.0, 100.0, "m", seed=8)
         assert len(arr) / 100.0 == pytest.approx(10.0, rel=0.1)
+
+
+class TestVectorisedFastPath:
+    def test_poisson_chunk_carry_matches_scalar_loop(self):
+        """The chunked vectorised generator must reproduce the naive
+        one-draw-at-a-time loop bit-for-bit (same stream, same rounding)."""
+        lam, horizon, seed = 7.0, 200.0, 13
+        rng = np.random.default_rng(seed)
+        t, want = 0.0, []
+        while True:
+            t += rng.exponential(1.0 / lam)
+            if t >= horizon:
+                break
+            want.append(t)
+        got = [a.t for a in workload.poisson_arrivals(lam, horizon, "m",
+                                                      seed=seed)]
+        assert got == want
+
+    def test_empty_edge_cases(self):
+        assert workload.poisson_arrivals(0.0, 10.0, "m") == []
+        assert workload.bounded_pareto_bursts(0.0, 10.0, "m") == []
+        assert workload.mixed_traffic({}, 10.0) == []
+
+
+class TestScenarioMatrix:
+    def test_diurnal_modulates_rate(self):
+        # peak half-period vs trough half-period of one sinusoid cycle
+        arr = workload.diurnal_arrivals(10.0, 600.0, "m", seed=0,
+                                        amplitude=0.9, period=600.0)
+        ts = np.array([a.t for a in arr])
+        peak = ((ts < 300.0).sum()) / 300.0
+        trough = ((ts >= 300.0).sum()) / 300.0
+        assert peak > 2.0 * trough
+        assert len(arr) / 600.0 == pytest.approx(10.0, rel=0.2)
+
+    def test_diurnal_deterministic_sorted(self):
+        a = workload.diurnal_arrivals(5.0, 120.0, "m", seed=3)
+        b = workload.diurnal_arrivals(5.0, 120.0, "m", seed=3)
+        assert [x.t for x in a] == [x.t for x in b]
+        assert [x.t for x in a] == sorted(x.t for x in a)
+
+    def test_mmpp_rate_between_state_rates(self):
+        arr = workload.mmpp_arrivals([1.0, 20.0], 25.0, 2000.0, "m", seed=1)
+        rate = len(arr) / 2000.0
+        assert 1.0 < rate < 20.0
+        ts = [a.t for a in arr]
+        assert ts == sorted(ts)
+
+    def test_mmpp_single_state_is_poisson_rate(self):
+        arr = workload.mmpp_arrivals([6.0], 50.0, 500.0, "m", seed=2)
+        assert len(arr) / 500.0 == pytest.approx(6.0, rel=0.15)
+
+    def test_mmpp_rejects_empty(self):
+        with pytest.raises(ValueError):
+            workload.mmpp_arrivals([], 10.0, 100.0, "m")
+
+    def test_flash_crowd_step(self):
+        arr = workload.flash_crowd_arrivals(2.0, 40.0, 300.0, "m", seed=0,
+                                            t_start=100.0, duration=50.0,
+                                            ramp=10.0)
+        ts = np.array([a.t for a in arr])
+        pre = ((ts < 100.0).sum()) / 100.0
+        peak = (((ts >= 110.0) & (ts < 160.0)).sum()) / 50.0
+        post = ((ts >= 160.0).sum()) / 140.0
+        assert peak == pytest.approx(40.0, rel=0.2)
+        assert pre == pytest.approx(2.0, rel=0.5)
+        assert post == pytest.approx(2.0, rel=0.5)
+
+    def test_mixed_traffic_per_model_rates(self):
+        arr = workload.mixed_traffic({"a": 6.0, "b": 2.0, "c": 0.5},
+                                     400.0, seed=0)
+        ts = [x.t for x in arr]
+        assert ts == sorted(ts)
+        by_model = {}
+        for x in arr:
+            by_model[x.model] = by_model.get(x.model, 0) + 1
+        assert by_model["a"] / 400.0 == pytest.approx(6.0, rel=0.15)
+        assert by_model["b"] / 400.0 == pytest.approx(2.0, rel=0.25)
+        assert by_model["c"] / 400.0 == pytest.approx(0.5, rel=0.5)
+
+    def test_mixed_traffic_deterministic(self):
+        a = workload.mixed_traffic({"x": 3.0, "y": 1.0}, 100.0, seed=9)
+        b = workload.mixed_traffic({"x": 3.0, "y": 1.0}, 100.0, seed=9)
+        assert [(p.t, p.model) for p in a] == [(p.t, p.model) for p in b]
