@@ -1,0 +1,130 @@
+"""Batched admission-window routing vs the scalar per-request loop.
+
+  PYTHONPATH=src python -m benchmarks.bench_batch_router \
+      [--batches 1,8,64,256] [--rounds 30] [--pallas]
+
+Measures routing decisions/sec through three paths on the same two-tier
+experiment cluster:
+
+  * ``route_best``   — the scalar per-request serving path this PR
+                       replaces: one jit scoring dispatch per request;
+  * ``scalar_np``    — the numpy float64 per-request reference loop
+                       (``route_window_scalar``): no jit dispatch, but
+                       still one Erlang evaluation per (request,
+                       candidate) pair in Python;
+  * ``batched``      — the admission-window loop: ONE
+                       ``score_instances_batch`` + ``select_instance_batch``
+                       call per window of R requests.
+
+The acceptance bar (ISSUE 2): batched >= 3x decisions/sec over the
+scalar per-request loop at batch 64. ``--pallas`` adds the Pallas kernel
+in interpret mode (semantics demo only — interpret mode is orders of
+magnitude slower than compiled TPU execution).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import experiment_cluster
+from repro.core.router import Router, RouterParams
+from repro.core.scheduler import QualityClass, Request
+from repro.serving.batch_router import (AdmissionConfig, BatchRouter,
+                                        route_window_scalar)
+
+
+def _mk_requests(n: int) -> list[Request]:
+    return [Request(model="yolov5m", quality=QualityClass.BALANCED,
+                    arrival=0.001 * k) for k in range(n)]
+
+
+def _time(fn, rounds: int, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        fn()
+    return (time.perf_counter() - t0) / rounds
+
+
+def main(print_csv: bool = True, batches=(1, 8, 64, 256),
+         rounds: int = 30, pallas: bool = False) -> dict:
+    cluster = experiment_cluster()
+    out: dict = {"batch": {}}
+
+    # scalar per-request loop (the replaced serving path)
+    router = Router(cluster, RouterParams())
+    reqs = _mk_requests(64)
+    tick = [0.0]
+
+    def scalar_route_best():
+        tick[0] += 1.0
+        for rq in reqs:
+            router.route_best(rq, tick[0])
+    dt = _time(scalar_route_best, max(rounds // 3, 5))
+    out["route_best_dps"] = len(reqs) / dt
+
+    # numpy scalar reference window
+    br_ref = BatchRouter(cluster)
+
+    def scalar_np():
+        route_window_scalar(br_ref, reqs, 1.0)
+    dt = _time(scalar_np, rounds)
+    out["scalar_np_dps"] = len(reqs) / dt
+
+    # batched admission windows
+    for b in batches:
+        br = BatchRouter(cluster, config=AdmissionConfig(max_batch=b))
+        window = _mk_requests(b)
+
+        def batched():
+            tick[0] += 1.0
+            for rq in window:
+                br.submit(rq, tick[0])
+            br.flush(tick[0])
+        dt = _time(batched, rounds)
+        out["batch"][b] = b / dt
+
+    if pallas:
+        br_p = BatchRouter(cluster, config=AdmissionConfig(
+            backend="pallas-interpret", max_batch=64, block_r=64))
+        window = _mk_requests(64)
+
+        def pallas_interp():
+            tick[0] += 1.0
+            for rq in window:
+                br_p.submit(rq, tick[0])
+            br_p.flush(tick[0])
+        dt = _time(pallas_interp, max(rounds // 10, 2))
+        out["pallas_interpret_dps"] = 64 / dt
+
+    if print_csv:
+        print("# batched admission-window routing vs scalar loops")
+        print("path,batch,decisions_per_s,speedup_vs_route_best")
+        base = out["route_best_dps"]
+        print(f"route_best,1,{base:.0f},1.00")
+        print(f"scalar_np,1,{out['scalar_np_dps']:.0f},"
+              f"{out['scalar_np_dps'] / base:.2f}")
+        for b, dps in out["batch"].items():
+            print(f"batched,{b},{dps:.0f},{dps / base:.2f}")
+        if "pallas_interpret_dps" in out:
+            print(f"pallas_interpret,64,{out['pallas_interpret_dps']:.0f},"
+                  f"{out['pallas_interpret_dps'] / base:.2f}")
+        b64 = out["batch"].get(64)
+        if b64 is not None:
+            ok = b64 >= 3.0 * base
+            print(f"# batched@64 speedup {b64 / base:.1f}x vs scalar "
+                  f"per-request loop (target >= 3x): {'PASS' if ok else 'FAIL'}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batches", default="1,8,64,256")
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--pallas", action="store_true")
+    args = ap.parse_args()
+    main(batches=[int(b) for b in args.batches.split(",")],
+         rounds=args.rounds, pallas=args.pallas)

@@ -12,6 +12,8 @@ from repro.core.scheduler import QualityClass
 from repro.core.simulator import ClusterSimulator, SimConfig
 from repro.core.workload import poisson_arrivals
 
+from benchmarks.common import finite_latencies, finite_row
+
 
 def main(print_csv: bool = True) -> list[dict]:
     rows = []
@@ -26,9 +28,16 @@ def main(print_csv: bool = True) -> list[dict]:
             arr = poisson_arrivals(lam, 300.0, "yolov5m", seed=seed)
             lats.append(sim.run(arr, horizon=500.0).latencies())
         lat = np.concatenate(lats)
-        rows.append({"lambda": lam, "mean": float(lat.mean()),
-                     "p95": float(np.percentile(lat, 95)),
-                     "p99": float(np.percentile(lat, 99))})
+        if not finite_latencies(lat, f"fig3 lambda={lam}"):
+            continue
+        row = {"lambda": lam, "mean": float(lat.mean()),
+               "p95": float(np.percentile(lat, 95)),
+               "p99": float(np.percentile(lat, 99))}
+        if finite_row(row, "fig3"):
+            rows.append(row)
+    if not rows:
+        print("# WARNING[fig3]: no finite rows to report")
+        return rows
     if print_csv:
         print("# Fig3: latency percentiles vs lambda (N=4)")
         print("lambda,mean,p95,p99")

@@ -17,6 +17,8 @@ import numpy as np
 from repro.core.latency_model import EFFICIENTDET, PI4_EDGE, YOLOV5M
 from repro.core.workload import poisson_arrivals
 
+from benchmarks.common import finite_latencies, finite_row
+
 SWITCH_PENALTY = 0.35   # s: model swap on a 3-CPU Pi-class node
 
 
@@ -66,13 +68,18 @@ def main(print_csv: bool = True) -> list[dict]:
                 res.setdefault(k, []).append(v)
         mono = np.concatenate(res["mono"])
         micro = np.concatenate(res["micro"])
-        rows.append({
+        if not (finite_latencies(mono, f"fig4 mono n={n}")
+                and finite_latencies(micro, f"fig4 micro n={n}")):
+            continue
+        row = {
             "n": n,
             "mono_mean": float(mono.mean()),
             "micro_mean": float(micro.mean()),
             "mono_p99": float(np.percentile(mono, 99)),
             "micro_p99": float(np.percentile(micro, 99)),
-        })
+        }
+        if finite_row(row, "fig4"):
+            rows.append(row)
     if print_csv:
         print("# Fig4: monolithic vs microservice (lambda=4)")
         print("N,mono_mean,micro_mean,mono_p99,micro_p99")

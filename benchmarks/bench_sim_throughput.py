@@ -23,6 +23,8 @@ import argparse
 import dataclasses
 import time
 
+import numpy as np
+
 from repro.core.catalogue import Cluster, Deployment, paper_cluster
 from repro.core.latency_model import CLOUD, PI4_EDGE, YOLOV5M
 from repro.core.scheduler import QualityClass
@@ -101,6 +103,11 @@ def main() -> None:
         res = sim.run(arr)
         dt = time.perf_counter() - t0
         s = res.summary()
+        # empty traces yield NaN percentiles — print them as 'nan' but
+        # warn loudly rather than letting NaN slip into derived tables
+        if not np.isfinite(s["p50"]):
+            print(f"# WARNING[sim_throughput]: {mode} completed no "
+                  "requests — percentiles undefined")
         print(f"{mode},{len(arr)},{len(res.completed)},{res.n_events},"
               f"{dt:.2f},{len(arr) / dt:.0f},{res.n_events / dt:.0f},"
               f"{s['p50']:.4f},{s['p99']:.4f}")

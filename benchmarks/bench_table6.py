@@ -31,9 +31,14 @@ def run(seeds=SEEDS) -> dict:
 
 
 def aggregate(stats) -> list[dict]:
+    from benchmarks.common import finite_row
     rows = []
     for lam in LAMBDAS:
         row = {"lambda": lam}
+        if not all(stats[mode][lam] for mode in ("laimr", "baseline")):
+            print(f"# WARNING[table6]: no completed requests at "
+                  f"lambda={lam} for at least one mode — row skipped")
+            continue
         for mode in ("laimr", "baseline"):
             runs = stats[mode][lam]
             for metric in ("p95", "p99", "iqr", "max", "std"):
@@ -44,12 +49,16 @@ def aggregate(stats) -> list[dict]:
             1.0 - row["laimr_p99"] / row["baseline_p99"])
         row["p95_reduction_pct"] = 100.0 * (
             1.0 - row["laimr_p95"] / row["baseline_p95"])
-        rows.append(row)
+        if finite_row(row, "table6"):
+            rows.append(row)
     return rows
 
 
 def main(print_csv: bool = True) -> list[dict]:
     rows = aggregate(run())
+    if not rows:
+        print("# WARNING[table6]: no finite rows to report")
+        return rows
     if print_csv:
         print("# Table VI reproduction (mean over seeds)")
         print("lambda,laimr_p95,base_p95,laimr_p99,base_p99,"

@@ -26,6 +26,35 @@ WARMUP = 60.0        # discarded at each level boundary (steady state only)
 LAMBDAS = [1, 2, 3, 4, 5, 6]
 
 
+def finite_row(row: dict, label: str) -> bool:
+    """Guard for benchmark aggregation rows.
+
+    ``SimResult.percentile``/``summary`` return NaN on empty traces (e.g.
+    a horizon short enough that no request completes in a segment), and
+    NaN silently propagates through means into the printed tables. Returns
+    True when every numeric value in ``row`` is finite; otherwise prints a
+    loud comment-line warning so the row can be skipped instead of
+    poisoning the table.
+    """
+    bad = [k for k, v in row.items()
+           if isinstance(v, (int, float, np.floating)) and not np.isfinite(v)]
+    if bad:
+        print(f"# WARNING[{label}]: skipping row with non-finite "
+              f"metrics {bad}: {row}")
+        return False
+    return True
+
+
+def finite_latencies(lat: np.ndarray, label: str) -> bool:
+    """True when ``lat`` is non-empty (percentiles well-defined); warns
+    and returns False otherwise."""
+    if np.asarray(lat).size == 0:
+        print(f"# WARNING[{label}]: empty latency trace — "
+              "percentiles undefined, skipping")
+        return False
+    return True
+
+
 def experiment_cluster(n_edge: int = 3, edge_max: int = 6,
                        n_cloud: int = 1, cloud_max: int = 2) -> Cluster:
     edge = dataclasses.replace(PI4_EDGE, net_rtt=1.0)

@@ -12,8 +12,8 @@ import argparse
 import os
 import time
 
-ALL = ("fig2", "table4", "fig3", "fig4", "table6", "router_us", "capacity",
-       "sim_throughput", "roofline")
+ALL = ("fig2", "table4", "fig3", "fig4", "table6", "router_us",
+       "batch_router", "capacity", "sim_throughput", "roofline")
 
 
 def main() -> None:
@@ -38,6 +38,8 @@ def main() -> None:
                 from benchmarks import bench_table6 as m
             elif name == "router_us":
                 from benchmarks import bench_router_us as m
+            elif name == "batch_router":
+                from benchmarks import bench_batch_router as m
             elif name == "capacity":
                 from benchmarks import bench_capacity as m
             elif name == "sim_throughput":

@@ -7,8 +7,8 @@ and Algorithm 1 + PM-HPA manage pod-slice replica groups.
 """
 import numpy as np
 
-from repro.core import (ClusterSimulator, Request, Router, RouterParams,
-                        SimConfig, bounded_pareto_bursts)
+from repro.core import (ClusterSimulator, Request, RouterParams, SimConfig,
+                        bounded_pareto_bursts)
 from repro.core.catalogue import tpu_catalogue
 from repro.core.scheduler import QualityClass
 
@@ -18,19 +18,29 @@ for d in cluster:
     print(f"  {d.key:42s} lane={d.quality.name:11s} "
           f"L_m={d.model.l_ref*1e3:8.1f} ms  mu={d.mu:9.2f} req/s")
 
-# §IV-B full selection: route requests of each quality class to the
-# latency-optimal feasible tier (cost tie-break = fewest chips burned)
-router = Router(cluster, RouterParams(x=3.0))
+# §IV-B full selection, batched: all 12 requests accumulate into ONE
+# admission window and are scored against the whole fleet table in a
+# single score_instances_batch call (this replaced the scalar
+# per-request route_best loop — see serving/batch_router.py).
+from repro.serving import AdmissionConfig, BatchRouter
+
+brouter = BatchRouter(cluster, params=RouterParams(x=3.0),
+                      config=AdmissionConfig(max_batch=12))
 rng = np.random.default_rng(0)
-print("\nrouting 12 requests (4 per lane):")
+reqs = []
 t = 0.0
 for q in QualityClass:
     for k in range(4):
         t += float(rng.exponential(0.05))
-        req = Request(model="any", quality=q, arrival=t, slo=2.0)
-        d = router.route_best(req, t)
-        print(f"  {q.name:11s} -> {d.target.key:42s} "
-              f"(predicted {d.predicted_latency*1e3:6.1f} ms)")
+        reqs.append(Request(model="any", quality=q, arrival=t, slo=2.0))
+decisions = []
+for req in reqs:
+    decisions.extend(brouter.submit(req, req.arrival) or [])
+decisions.extend(brouter.flush(t))
+print(f"\nrouting {len(reqs)} requests (4 per lane), batched windows:")
+for d in decisions:
+    print(f"  {d.req.quality.name:11s} -> {str(d.target_key):42s} "
+          f"[{d.outcome}] (predicted {d.predicted_latency*1e3:6.1f} ms)")
 
 # end-to-end: bursty traffic against the BALANCED lane with PM-HPA
 # scaling pod-slice replica groups (startup 30 s — real slice spin-up)

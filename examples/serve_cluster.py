@@ -6,6 +6,7 @@ latency numbers describe.
   PYTHONPATH=src python examples/serve_cluster.py
 """
 import time
+from collections import Counter
 
 import jax
 import jax.numpy as jnp
@@ -13,7 +14,9 @@ import numpy as np
 
 from repro.configs.base import get_config, reduced
 from repro.core import SimConfig, ClusterSimulator, robot_trace
+from repro.core.scheduler import QualityClass, Request
 from repro.models import model
+from repro.serving import AdmissionConfig, BatchRouter, SlotBank
 from repro.serving.engine import ServingEngine
 from benchmarks.common import experiment_cluster
 
@@ -27,6 +30,33 @@ out = engine.generate(prompts, steps=8)
 dt = time.time() - t0
 print(f"[data plane] generated {out.tokens.shape} tokens in {dt:.2f}s "
       f"({dt/8*1000:.0f} ms per batched decode step on CPU)")
+
+# --- batched admission: LA-IMR decisions feed real decode slots ------- #
+# Replaces the scalar per-request route_best loop: a burst of requests
+# accumulates into one admission window, is scored in ONE batched call,
+# and the winners take ServingEngine slots (the cloud tier is modelled
+# by a SlotBank — same admission surface, no second model instance).
+for i in range(engine.slots):           # release the demo generation
+    engine.release(i)
+cluster = experiment_cluster()
+brouter = BatchRouter(
+    cluster,
+    engines={"yolov5m@pi4-edge": engine, "yolov5m@cloud": SlotBank(16)},
+    config=AdmissionConfig(window=0.02, max_batch=8))
+decisions = []
+t = 0.0
+for k in range(24):
+    t += 0.002
+    got = brouter.submit(Request(model="yolov5m",
+                                 quality=QualityClass.BALANCED,
+                                 arrival=t), t)
+    if got:
+        decisions.extend(got)
+decisions.extend(brouter.flush(t + 0.1))
+tally = Counter(d.outcome for d in decisions)
+print(f"[admission] 24 requests in {brouter.flushes} batched flushes "
+      f"({brouter.scored_pairs} scored pairs): {dict(tally)}; "
+      f"edge slots in use: {engine.slots - engine.n_free()}/{engine.slots}")
 
 # --- control plane: 20-robot fleet, bursty capture -------------------- #
 arrivals = robot_trace(n_robots=8, period=2.0, horizon=240.0,

@@ -21,12 +21,13 @@ from repro.core.latency_model import (CLOUD, EFFICIENTDET, FASTER_RCNN,
                                       affine_power_law, calibrate,
                                       calibrate_from_table_iv,
                                       g_fixed_replicas, g_fixed_traffic)
-from repro.core.queueing import (erlang_c, mmc_wait, mmc_wait_np,
-                                 mmc_wait_scalar)
+from repro.core.queueing import (ErlangMemo, erlang_c, mmc_wait,
+                                 mmc_wait_np, mmc_wait_scalar)
 from repro.core.router import (Action, Decision, Router, RouterParams,
                                score_instance_scalar, score_instances,
                                score_instances_batch, select_instance,
-                               select_instance_batch)
+                               select_instance_batch,
+                               select_instance_scalar)
 from repro.core.scheduler import MultiQueueScheduler, QualityClass, Request
 from repro.core.simulator import ClusterSimulator, SimConfig, SimResult
 from repro.core.telemetry import Ewma, MetricsRegistry, SlidingRate
@@ -41,10 +42,11 @@ __all__ = [
     "paper_cluster", "CLOUD", "EFFICIENTDET", "FASTER_RCNN", "PI4_EDGE",
     "YOLOV5M", "CalibratedModel", "InstanceClass", "ModelProfile",
     "affine_power_law", "calibrate", "calibrate_from_table_iv",
-    "g_fixed_replicas", "g_fixed_traffic", "erlang_c", "mmc_wait",
-    "mmc_wait_np", "mmc_wait_scalar", "Action", "Decision", "Router",
-    "RouterParams", "score_instance_scalar", "score_instances",
+    "g_fixed_replicas", "g_fixed_traffic", "ErlangMemo", "erlang_c",
+    "mmc_wait", "mmc_wait_np", "mmc_wait_scalar", "Action", "Decision",
+    "Router", "RouterParams", "score_instance_scalar", "score_instances",
     "score_instances_batch", "select_instance", "select_instance_batch",
+    "select_instance_scalar",
     "MultiQueueScheduler", "QualityClass", "Request", "ClusterSimulator",
     "SimConfig", "SimResult", "Ewma", "MetricsRegistry", "SlidingRate",
     "Arrival", "bounded_pareto_bursts", "diurnal_arrivals",

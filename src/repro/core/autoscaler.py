@@ -120,6 +120,14 @@ class PMHPA:
         # per-deployment constants, cached off the per-arrival export path
         self._tau: dict[str, float] = {}
         self._metric_key: dict[str, str] = {}
+        # desired_replicas memo (event-batched control): the inverse-model
+        # scan is pure in (dep, lam_accum) — dep.n_max and the latency-law
+        # constants never change — so repeated EWMA values (IEEE fixed
+        # points under steady traffic) skip the O(N) Erlang scan entirely.
+        # Exact keys: hits return the exact uncached integer.
+        self._n_star_cache: dict[tuple[str, float], int] = {}
+
+    _N_STAR_CACHE_CAP = 1 << 16
 
     # -- custom-metric export (event-driven, §IV-D) --------------------- #
     def export(self, dep: Deployment, lam_accum: float) -> int:
@@ -129,12 +137,26 @@ class PMHPA:
             self._tau[dep.key] = tau
             self._metric_key[dep.key] = self.metrics.desired_replicas_key(
                 dep.model.name, dep.instance.name)
-        n_star = desired_replicas(dep, lam_accum, tau)
+        ckey = (dep.key, lam_accum)
+        n_star = self._n_star_cache.get(ckey)
+        if n_star is None:
+            n_star = desired_replicas(dep, lam_accum, tau)
+            if len(self._n_star_cache) >= self._N_STAR_CACHE_CAP:
+                self._n_star_cache.clear()
+            self._n_star_cache[ckey] = n_star
         # scale-in hysteresis: only shrink when the pool is genuinely idle
         if n_star < dep.n_replicas and dep.rho(lam_accum) >= self.rho_low:
             n_star = dep.n_replicas
         self.metrics.set_gauge(self._metric_key[dep.key], n_star)
         return n_star
+
+    def export_batch(self, pairs: "list[tuple[Deployment, float]]") -> list[int]:
+        """Batched custom-metric export for one HPA tick: one call for
+        all deployments (paired with ``Router.refresh_telemetry``)
+        instead of a per-deployment export interleave. Per-deployment
+        arithmetic is exactly :meth:`export`'s, so the batch is
+        bit-identical to the scalar loop."""
+        return [self.export(dep, lam_accum) for dep, lam_accum in pairs]
 
     # -- HPA reconciliation loop (every 5 s, §IV-D) --------------------- #
     def due(self, t_now: float) -> bool:

@@ -183,6 +183,70 @@ def mmc_wait_scalar(lam: float, c: int, mu: float) -> float:
     return cc / max(cmu - lam, 1e-30)
 
 
+class ErlangMemo:
+    """Memoised Erlang-C expected-wait lookups for the per-event control
+    plane (event-batched control, ROADMAP PR 2).
+
+    The discrete-event simulator evaluates the M/M/c wait twice per
+    arrival with heavily repeating arguments: the sliding-window rate is
+    quantised to multiples of 1/window, and the EWMA rate reaches IEEE
+    fixed points under steady traffic. Caching by exact key
+    ``(c, lam)`` therefore gets high hit rates while returning exactly
+    :func:`mmc_wait_scalar`'s values — control decisions stay
+    bit-identical to the uncached path (the golden digests in
+    tests/test_sim_golden.py enforce this).
+
+    ``rho_buckets=K`` switches to approximate keys ``(c, floor(rho*K))``
+    with the wait evaluated at the bucket's lower-edge rho — a physics
+    change (bounded by the bucket width), so it is gated behind
+    ``SimConfig.control_rho_buckets`` and OFF by default. Stability is
+    preserved exactly: rho >= 1 short-circuits to inf before bucketing,
+    and a stable rho < 1 always lands in a stable bucket
+    (floor(rho*K)/K <= rho < 1).
+
+    The cache is cleared wholesale at ``max_entries`` — deterministic,
+    and cheaper than LRU bookkeeping on a sub-microsecond hot path.
+    """
+
+    __slots__ = ("mu", "rho_buckets", "max_entries", "hits", "misses",
+                 "_cache")
+
+    def __init__(self, mu: float, rho_buckets: "int | None" = None,
+                 max_entries: int = 1 << 16):
+        self.mu = float(mu)
+        self.rho_buckets = rho_buckets
+        self.max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
+        self._cache: dict[tuple, float] = {}
+
+    def wait(self, lam: float, c: int) -> float:
+        """Expected M/M/c wait E[W_q](lam, c) at this memo's mu."""
+        if lam <= 0.0:
+            return 0.0
+        cmu = c * self.mu
+        if lam / cmu >= 1.0:
+            return float("inf")
+        if self.rho_buckets is None:
+            key = (c, lam)
+            lam_eval = lam
+        else:
+            b = int(lam / cmu * self.rho_buckets)
+            key = (c, b)
+            lam_eval = b / self.rho_buckets * cmu
+        cache = self._cache
+        q = cache.get(key)
+        if q is None:
+            self.misses += 1
+            q = mmc_wait_scalar(lam_eval, c, self.mu)
+            if len(cache) >= self.max_entries:
+                cache.clear()
+            cache[key] = q
+        else:
+            self.hits += 1
+        return q
+
+
 def replicas_for_wait(lam: float, mu: float, target_wait: float, max_c: int = MAX_SERVERS) -> int:
     """Smallest c such that E[W_q] <= target_wait.
 

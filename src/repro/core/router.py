@@ -97,18 +97,22 @@ def score_instances_np(lam: float, alpha, beta, gamma, mu, n, rtt) -> np.ndarray
 def score_instances_batch(lam: jax.Array, alpha: jax.Array, beta: jax.Array,
                           gamma: jax.Array, mu: jax.Array, n: jax.Array,
                           rtt: jax.Array) -> jax.Array:
-    """Batched scoring: ``lam`` is (R,) per-request aggregate-rate
-    estimates; deployment params are (I,). Returns the (R, I) predicted
-    latency matrix via ``jax.vmap`` over :func:`score_instances` — each
-    row is bit-identical to the single-request path. The Pallas kernel in
+    """Batched scoring: ``lam`` is either (R,) per-request aggregate-rate
+    estimates (each broadcast over every candidate) or an (R, I) matrix of
+    per-request, per-candidate rates (the admission-window form: each pool
+    is scored at its own arrival rate). Deployment params are (I,).
+    Returns the (R, I) predicted latency matrix via ``jax.vmap`` over
+    :func:`score_instances` — each row is bit-identical to the
+    single-request path. The Pallas kernel in
     ``repro.kernels.routing_score`` computes the same decision with a
     table-interpolated Erlang-C term (oracle: ``repro.kernels.ref``).
     """
     lam = jnp.asarray(lam, jnp.float32)
+    if lam.ndim == 1:
+        lam = jnp.broadcast_to(lam[:, None], (lam.shape[0], alpha.shape[0]))
 
     def one(lam_r: jax.Array) -> jax.Array:
-        return score_instances(jnp.broadcast_to(lam_r, alpha.shape),
-                               alpha, beta, gamma, mu, n, rtt)
+        return score_instances(lam_r, alpha, beta, gamma, mu, n, rtt)
 
     return jax.vmap(one)(lam)
 
@@ -118,13 +122,48 @@ def select_instance_batch(g: jax.Array, slo: jax.Array, cost: jax.Array,
                           candidate_mask: jax.Array
                           ) -> tuple[jax.Array, jax.Array]:
     """Row-wise :func:`select_instance` over a (R, I) score matrix.
-    Returns (idx (R,), feasible_any (R,))."""
-    return jax.vmap(select_instance, in_axes=(0, None, None, None))(
+
+    ``slo`` and ``candidate_mask`` are either (I,) — shared across rows —
+    or (R, I) — per-request SLO budgets / candidate lanes (the admission-
+    window form). Returns (idx (R,), feasible_any (R,))."""
+    slo = jnp.broadcast_to(jnp.asarray(slo, jnp.float32), g.shape)
+    candidate_mask = jnp.broadcast_to(candidate_mask, g.shape)
+    return jax.vmap(select_instance, in_axes=(0, 0, None, 0))(
         g, slo, cost, candidate_mask)
 
 
+def select_instance_scalar(g, slo, cost, candidate_mask) -> tuple[int, bool]:
+    """Scalar/numpy twin of :func:`select_instance` for the per-request
+    fallback loop — the PINNED decision-boundary semantics.
+
+    The jit path computes scores and comparisons in float32 while the
+    simulator's scalar predictor (:func:`score_instance_scalar`) runs
+    float64, so a request sitting exactly on the SLO cutoff (or two
+    candidates tied in latency) could route differently between the two
+    paths. The contract is: *selection happens in float32*, with the same
+    two-stage cost tie-break and the same ``near`` tolerance as
+    :func:`select_instance`. Callers feeding float64 scores must accept
+    the float32 rounding here — test_batch_router pins the equivalence on
+    boundary cases (exact SLO hit, exact ties, near-ties at the 1e-5
+    relative tolerance).
+    """
+    one = np.float32(1.0 + 1e-5)
+    eps = np.float32(1e-9)
+    g32 = np.asarray(g, np.float32)
+    slo32 = np.broadcast_to(np.asarray(slo, np.float32), g32.shape)
+    cost32 = np.asarray(cost, np.float32)
+    mask = np.broadcast_to(np.asarray(candidate_mask, bool), g32.shape)
+    feasible = (g32 <= slo32) & mask
+    g_masked = np.where(feasible, g32, np.float32(np.inf))
+    gmin = np.float32(g_masked.min()) if g_masked.size else np.float32(np.inf)
+    near = feasible & (g_masked <= gmin * one + eps)
+    idx = int(np.argmin(np.where(near, cost32, np.float32(np.inf))))
+    return idx, bool(feasible.any())
+
+
 def score_instance_scalar(lam: float, alpha: float, beta: float, gamma: float,
-                          mu: float, n: float, rtt: float) -> float:
+                          mu: float, n: float, rtt: float,
+                          q: Optional[float] = None) -> float:
     """Scalar fast path of :func:`score_instances_np` for ONE deployment.
 
     The discrete-event simulator calls the predictor twice per arrival;
@@ -132,12 +171,18 @@ def score_instance_scalar(lam: float, alpha: float, beta: float, gamma: float,
     BIT-IDENTICAL (``np.power`` on float64 scalars matches the array
     ufunc; Python ``**`` does not) and runs in ~1 us — test_router pins
     the equivalence over a parameter sweep.
+
+    ``q`` optionally supplies a precomputed M/M/c wait (e.g. from a
+    :class:`queueing.ErlangMemo`); every other float op stays shared, so
+    alternate queue models cannot drift from the pinned proc/stability
+    arithmetic. Default (None) evaluates ``mmc_wait_scalar`` inline.
     """
     nf = float(n)
     lam_tilde = lam / max(nf, 1.0)
     proc = alpha + beta * float(np.power(np.float64(max(lam_tilde, 0.0)),
                                          np.float64(gamma)))
-    q = queueing.mmc_wait_scalar(lam, int(n), mu)
+    if q is None:
+        q = queueing.mmc_wait_scalar(lam, int(n), mu)
     if not q < float("inf"):
         q = BIG
     g = proc + rtt + q
@@ -174,16 +219,30 @@ class RouterParams:
     slo_includes_rtt: bool = True  # paper's tau=1.8s budgets the ~1s RTT in
 
 
+_PREDICT_CACHE_CAP = 1 << 16  # wholesale-clear bound on the predict memo
+
+
 class Router:
     """Event-driven LA-IMR controller (Algorithm 1), one loop per instance."""
 
     def __init__(self, cluster: Cluster, params: RouterParams = RouterParams(),
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 rho_buckets: Optional[int] = None):
         self.cluster = cluster
         self.params = params
         self.metrics = metrics or MetricsRegistry()
         # per-deployment in-memory telemetry (the paper's in-process state)
         self.telemetry: dict[str, ModelTelemetry] = {}
+        # Event-batched control (ROADMAP PR 2): the scalar predictor is
+        # called twice per arrival with heavily repeating (n, lam) keys —
+        # sliding rates are quantised to 1/window and EWMAs hit IEEE
+        # fixed points — so g_mi is memoised per (dep, n, lam, rtt).
+        # Exact keys (default) return exactly score_instance_scalar's
+        # values; ``rho_buckets`` enables the approximate bucketed
+        # Erlang-C term (SimConfig.control_rho_buckets, default off).
+        self._rho_buckets = rho_buckets
+        self._pcache: dict[tuple, float] = {}
+        self._erlang: dict[str, queueing.ErlangMemo] = {}
 
     def tel(self, dep_key: str) -> ModelTelemetry:
         t = self.telemetry.get(dep_key)
@@ -218,10 +277,57 @@ class Router:
         RTT on top (§V-A4), so the Algorithm-1 guard must compare the
         *controllable* latency against tau, not the RTT-inflated total.
         Tier selection (route_best) keeps the RTT so cross-tier
-        comparisons stay honest."""
+        comparisons stay honest.
+
+        Memoised on (dep, n_replicas, lam, with_rtt): cache hits return
+        the exact float produced by the uncached path, so simulated
+        physics are bit-identical (golden digests pin this). The cache is
+        cleared wholesale at a size cap — deterministic, no LRU churn."""
+        key = (dep.key, dep.n_replicas, lam, with_rtt)
+        cache = self._pcache
+        g = cache.get(key)
+        if g is None:
+            rtt = dep.instance.net_rtt if with_rtt else 0.0
+            if self._rho_buckets is None:
+                g = score_instance_scalar(lam, dep.alpha, dep.beta,
+                                          dep.gamma, dep.mu,
+                                          dep.n_replicas, rtt)
+            else:
+                g = self._score_bucketed(dep, lam, rtt)
+            if len(cache) >= _PREDICT_CACHE_CAP:
+                cache.clear()
+            cache[key] = g
+        return g
+
+    def _score_bucketed(self, dep: Deployment, lam: float,
+                        rtt: float) -> float:
+        """score_instance_scalar with the Erlang-C term read from the
+        rho-bucketed :class:`queueing.ErlangMemo` — the approximate
+        event-batched control mode (gated, default off). The proc /
+        stability arithmetic is score_instance_scalar's own body (shared
+        via its ``q`` parameter); only the queueing term comes from the
+        bucket-representative rho."""
+        memo = self._erlang.get(dep.key)
+        if memo is None:
+            memo = queueing.ErlangMemo(dep.mu, rho_buckets=self._rho_buckets)
+            self._erlang[dep.key] = memo
         return score_instance_scalar(
             lam, dep.alpha, dep.beta, dep.gamma, dep.mu, dep.n_replicas,
-            dep.instance.net_rtt if with_rtt else 0.0)
+            rtt, q=memo.wait(lam, int(dep.n_replicas)))
+
+    def refresh_telemetry(self, t_now: float) -> list[tuple[Deployment, float]]:
+        """Event-batched control-plane refresh (one call per HPA tick):
+        decay every deployment's EWMA toward its current sliding rate and
+        return the (deployment, lam_accum) pairs for a batched custom-
+        metric export (:meth:`autoscaler.PMHPA.export_batch`). Replaces
+        the per-deployment update/export interleave in the simulator's
+        tick handler; the per-deployment float ops are unchanged, so the
+        refresh is bit-identical to the scalar loop it batches."""
+        out = []
+        for dep in self.cluster:
+            tel = self.tel(dep.key)
+            out.append((dep, tel.ewma.update(tel.sliding.rate(t_now))))
+        return out
 
     # ------------------------------------------------------------------ #
     def _control_pass(self, dep: Deployment, req: Request, t_now: float,

@@ -177,6 +177,13 @@ class SimConfig:
     baseline_lag: float = 60.0     # reactive up-stabilisation window (§I)
     util_cap: float = 4.0          # clamp on U to bound pathological service times
     slo: Optional[float] = None    # explicit tau_t (e.g. 1.8 s, §V-A4)
+    # Event-batched control (ROADMAP PR 2): None keeps the memoised
+    # control-plane predictors EXACT (bit-identical to the uncached
+    # scalar path — the golden digests hold). Setting K quantises the
+    # Erlang-C term of Algorithm 1's predictor to rho buckets of width
+    # 1/K, raising memo hit rates at the cost of (bounded) physics drift;
+    # golden tests only cover the default-off setting.
+    control_rho_buckets: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -212,14 +219,20 @@ class SimResult:
 class ClusterSimulator:
     """Seeded discrete-event simulation of one experiment run."""
 
-    def __init__(self, cluster: Cluster, config: SimConfig = SimConfig()):
+    def __init__(self, cluster: Cluster, config: Optional[SimConfig] = None):
+        # NOTE: the config default is constructed per instance. The old
+        # signature ``config: SimConfig = SimConfig()`` evaluated the
+        # default ONCE at import, so every no-config simulator shared (and
+        # could mutate) a single SimConfig — test_simulator pins the fix.
+        config = config or SimConfig()
         self.cluster = cluster
         self.cfg = config
         self.rng = np.random.default_rng(config.seed)
         self.metrics = MetricsRegistry()
         self.pools: dict[str, _Pool] = {d.key: _Pool(d) for d in cluster}
         self.scheduler = MultiQueueScheduler()
-        self.router = Router(cluster, config.router, self.metrics)
+        self.router = Router(cluster, config.router, self.metrics,
+                             rho_buckets=config.control_rho_buckets)
         self.pmhpa = PMHPA(cluster, self.metrics, reconcile_period=config.hpa_period,
                            x=config.router.x, rho_low=config.router.rho_low)
         self.reactive = ReactiveAutoscaler(cluster, slo_multiplier=config.router.x,
@@ -278,11 +291,6 @@ class ClusterSimulator:
             dep = (edge or deps)[0]
             self._home[arr.model] = dep
         return dep
-
-    def _export_for(self, dep: Deployment) -> None:
-        """Event-driven custom-metric export (PM-HPA, §IV-D)."""
-        tel = self.router.tel(dep.key)
-        self.pmhpa.export(dep, tel.ewma.value)
 
     def _on_arrival(self, arr: Arrival) -> None:
         dep = self._bind_deployment(arr)
@@ -370,12 +378,12 @@ class ClusterSimulator:
 
     def _on_hpa_tick(self) -> None:
         if self.cfg.mode == "laimr":
-            # decay idle telemetry so scale-in can trigger without traffic:
-            # the EWMA tracks the (decaying) sliding rate between arrivals.
-            for dep in self.cluster:
-                tel = self.router.tel(dep.key)
-                tel.ewma.update(tel.sliding.rate(self._now))
-                self._export_for(dep)
+            # Event-batched control: decay every deployment's EWMA toward
+            # its sliding rate (so scale-in can trigger without traffic)
+            # and export all custom metrics in ONE batched refresh per
+            # tick — same per-deployment float ops as the old interleaved
+            # loop, so the golden digests are unchanged.
+            self.pmhpa.export_batch(self.router.refresh_telemetry(self._now))
             events = self.pmhpa.reconcile(self._now)
         else:
             events = self.reactive.reconcile(self._now)

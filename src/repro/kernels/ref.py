@@ -168,7 +168,9 @@ def routing_score(lam: jax.Array, alpha: jax.Array, beta: jax.Array,
     """
     R = lam.shape[0]
     T = erlang_c_table.shape[1]
-    lam_ = lam[:, None].astype(jnp.float32)                     # (R, 1)
+    lam_ = lam.astype(jnp.float32)            # (R,) or per-candidate (R, I)
+    if lam_.ndim == 1:
+        lam_ = lam_[:, None]                                    # (R, 1)
     lam_tilde = lam_ / jnp.maximum(n[None, :], 1.0)
     proc = alpha[None, :] + beta[None, :] * jnp.power(
         jnp.maximum(lam_tilde, 0.0), gamma[None, :])

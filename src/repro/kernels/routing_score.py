@@ -36,7 +36,9 @@ BIG = 1e30
 def _kernel(lam_ref, alpha_ref, beta_ref, gamma_ref, mu_ref, n_ref,
             rtt_ref, slo_ref, cost_ref, table_ref,
             idx_ref, g_ref, ok_ref):
-    lam = lam_ref[...].astype(jnp.float32)[:, None]      # (R, 1)
+    lam = lam_ref[...].astype(jnp.float32)               # (R,) or (R, I)
+    if lam.ndim == 1:
+        lam = lam[:, None]                               # (R, 1) broadcast
     alpha = alpha_ref[...][None, :]                      # (1, I)
     beta = beta_ref[...][None, :]
     gamma = gamma_ref[...][None, :]
@@ -78,8 +80,11 @@ def _kernel(lam_ref, alpha_ref, beta_ref, gamma_ref, mu_ref, n_ref,
 def routing_score(lam, alpha, beta, gamma, mu, n, rtt, slo, cost,
                   erlang_c_table, block_r: int = 256,
                   interpret: bool = False):
-    """lam: (R,) per-request arrival-rate estimates; per-deployment params
-    (I,); erlang_c_table: (I, T) precomputed waits over a rho grid.
+    """lam: per-request arrival-rate estimates — (R,) to score every
+    candidate at the same aggregate rate, or (R, I) with a per-candidate
+    rate per request (the admission-window form, where each pool is
+    scored at its own observed rate). Per-deployment params (I,);
+    erlang_c_table: (I, T) precomputed waits over a rho grid.
     Returns (idx (R,), best_g (R,), feasible (R,))."""
     r = lam.shape[0]
     i, t = erlang_c_table.shape
@@ -87,12 +92,14 @@ def routing_score(lam, alpha, beta, gamma, mu, n, rtt, slo, cost,
     assert r % block_r == 0, (r, block_r)
     grid = (r // block_r,)
 
+    lam_spec = pl.BlockSpec((block_r,), lambda ir: (ir,)) if lam.ndim == 1 \
+        else pl.BlockSpec((block_r, i), lambda ir: (ir, 0))
     full = lambda _: (0,)
     return pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_r,), lambda ir: (ir,)),
+            lam_spec,
             pl.BlockSpec((i,), full), pl.BlockSpec((i,), full),
             pl.BlockSpec((i,), full), pl.BlockSpec((i,), full),
             pl.BlockSpec((i,), full), pl.BlockSpec((i,), full),

@@ -1,0 +1,14 @@
+"""Serving layer: the slot-batched generation engine (data plane) and
+the batched admission-window router that binds LA-IMR decisions to
+decode slots (control plane meets data plane)."""
+from repro.serving.batch_router import (ADMITTED, OFFLOADED, REJECTED,
+                                        AdmissionConfig, AdmissionDecision,
+                                        BatchRouter, SlotBank,
+                                        route_window_scalar)
+from repro.serving.engine import GenerationResult, ServingEngine
+
+__all__ = [
+    "ADMITTED", "OFFLOADED", "REJECTED", "AdmissionConfig",
+    "AdmissionDecision", "BatchRouter", "SlotBank", "route_window_scalar",
+    "GenerationResult", "ServingEngine",
+]

@@ -68,10 +68,23 @@ class ServingEngine:
     def free_slots(self) -> list[int]:
         return [i for i in range(self.slots) if not self.active[i]]
 
+    def n_free(self) -> int:
+        return int((~self.active).sum())
+
     def admit(self, slot: int, first_token: int, start_pos: int) -> None:
         self.active[slot] = True
         self.current = self.current.at[slot].set(first_token)
         self.pos = self.pos.at[slot].set(start_pos)
+
+    def admit_next(self, first_token: int = 0,
+                   start_pos: int = 0) -> Optional[int]:
+        """Occupy the first free slot (batch-router admission surface);
+        None when the decode batch is full."""
+        for i in range(self.slots):
+            if not self.active[i]:
+                self.admit(i, first_token, start_pos)
+                return i
+        return None
 
     def release(self, slot: int) -> None:
         self.active[slot] = False

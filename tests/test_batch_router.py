@@ -1,0 +1,330 @@
+"""Batched admission-window router: scalar/batched decision parity at
+the boundaries, conservation of the admission loop, backend agreement.
+
+These are part of the fast CI smoke set except the Pallas interpret-mode
+sweep, which is marked ``slow`` like every other interpret-mode test.
+"""
+import dataclasses
+import random
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _propstub import given, settings, st
+from repro.core.catalogue import Cluster, Deployment
+from repro.core.latency_model import CLOUD, PI4_EDGE, YOLOV5M
+from repro.core.router import (RouterParams, select_instance,
+                               select_instance_batch, select_instance_scalar)
+from repro.core.scheduler import QualityClass, Request
+from repro.serving.batch_router import (ADMITTED, OFFLOADED, REJECTED,
+                                        AdmissionConfig, BatchRouter,
+                                        SlotBank, route_window_scalar)
+
+
+def two_tier(n_edge: int = 2, n_cloud: int = 2) -> Cluster:
+    edge = dataclasses.replace(PI4_EDGE, net_rtt=0.05)
+    cloud = dataclasses.replace(CLOUD, net_rtt=0.086)
+    return Cluster([
+        Deployment(YOLOV5M, edge, QualityClass.BALANCED,
+                   n_replicas=n_edge, n_max=6),
+        Deployment(YOLOV5M, cloud, QualityClass.BALANCED,
+                   n_replicas=n_cloud, n_max=16),
+    ])
+
+
+def mk_reqs(n: int, slo=None) -> list[Request]:
+    return [Request(model="yolov5m", quality=QualityClass.BALANCED,
+                    arrival=0.001 * k, slo=slo) for k in range(n)]
+
+
+F32_UP = lambda x: float(np.nextafter(np.float32(x), np.float32(np.inf)))
+
+
+class TestDecisionBoundaryParity:
+    """The pinned float32 selection semantics (ISSUE 2 satellite):
+    identical scores must produce identical decisions through the jit
+    path (``select_instance``), the batched path, and the scalar numpy
+    twin (``select_instance_scalar``) — including exactly-on-boundary
+    inputs."""
+
+    CASES = [
+        # (g, slo, cost, expect_idx, expect_ok, label)
+        ([1.0, 2.0], [1.0, 1.0], [1.0, 1.0], 0, True, "exact-slo-hit"),
+        ([F32_UP(1.0), 2.0], [1.0, 2.0], [1.0, 1.0], 1, True,
+         "one-ulp-above-slo"),
+        ([0.5, 0.5], [1.0, 1.0], [3.0, 1.0], 1, True, "exact-tie-cost"),
+        ([0.5, 0.5, 0.5], [1.0] * 3, [2.0, 2.0, 2.0], 0, True,
+         "exact-tie-equal-cost-first"),
+        # within the 1e-5 relative near-tolerance -> cheaper candidate
+        ([1.0, 1.0 + 5e-6], [2.0, 2.0], [2.0, 1.0], 1, True,
+         "near-tie-within-tolerance"),
+        # outside the tolerance -> latency winner regardless of cost
+        ([1.0, 1.0 + 5e-5], [2.0, 2.0], [2.0, 1.0], 0, True,
+         "near-tie-outside-tolerance"),
+        ([3.0, 4.0], [1.0, 1.0], [1.0, 1.0], None, False,
+         "all-infeasible"),
+        ([0.0, 1.0], [1.0, 1.0], [5.0, 1.0], 0, True, "zero-latency"),
+    ]
+
+    @pytest.mark.parametrize("g,slo,cost,want_idx,want_ok,label",
+                             CASES, ids=[c[-1] for c in CASES])
+    def test_scalar_matches_jit(self, g, slo, cost, want_idx, want_ok,
+                                label):
+        g32 = np.asarray(g, np.float32)
+        slo32 = np.asarray(slo, np.float32)
+        cost32 = np.asarray(cost, np.float32)
+        mask = np.ones(len(g), bool)
+        ji, jok = select_instance(jnp.asarray(g32), jnp.asarray(slo32),
+                                  jnp.asarray(cost32), jnp.asarray(mask))
+        si, sok = select_instance_scalar(g32, slo32, cost32, mask)
+        assert bool(jok) == sok == want_ok, label
+        if want_ok:
+            assert int(ji) == si == want_idx, label
+
+    @pytest.mark.parametrize("g,slo,cost,want_idx,want_ok,label",
+                             CASES, ids=[c[-1] for c in CASES])
+    def test_batched_rows_match_scalar(self, g, slo, cost, want_idx,
+                                       want_ok, label):
+        g32 = np.asarray(g, np.float32)
+        rows = jnp.asarray(np.stack([g32, g32]))
+        idx, ok = select_instance_batch(rows, jnp.asarray(slo, jnp.float32),
+                                        jnp.asarray(cost, jnp.float32),
+                                        jnp.ones(len(g), bool))
+        si, sok = select_instance_scalar(g32, np.asarray(slo, np.float32),
+                                         np.asarray(cost, np.float32),
+                                         np.ones(len(g), bool))
+        for r in range(2):
+            assert bool(ok[r]) == sok == want_ok, label
+            if want_ok:
+                assert int(idx[r]) == si == want_idx, label
+
+    def test_float64_scores_cast_before_comparison(self):
+        """A float64 score a half-ulp above the float32 SLO must round
+        DOWN to the cutoff and stay feasible — the pinned fix for the
+        f64-scalar vs f32-batched divergence: cast first, then compare."""
+        slo = np.float32(1.0)
+        g64 = np.float64(1.0) + 1e-9          # > slo in float64
+        assert g64 > float(slo)
+        idx, ok = select_instance_scalar(
+            np.array([g64, 2.0]), np.array([slo, slo]),
+            np.array([1.0, 1.0], np.float32), np.ones(2, bool))
+        assert ok and idx == 0
+
+    def test_respects_candidate_mask(self):
+        g = np.asarray([0.1, 0.2], np.float32)
+        slo = np.asarray([1.0, 1.0], np.float32)
+        cost = np.asarray([1.0, 1.0], np.float32)
+        mask = np.array([False, True])
+        ji, jok = select_instance(jnp.asarray(g), jnp.asarray(slo),
+                                  jnp.asarray(cost), jnp.asarray(mask))
+        si, sok = select_instance_scalar(g, slo, cost, mask)
+        assert bool(jok) and sok and int(ji) == si == 1
+
+    def test_per_row_slo_and_mask_batch(self):
+        """(R, I)-shaped SLO/mask rows select independently per row."""
+        g = jnp.asarray([[0.5, 0.4], [0.5, 0.4]], jnp.float32)
+        slo = jnp.asarray([[1.0, 1.0], [1.0, 0.1]], jnp.float32)
+        mask = jnp.asarray([[True, True], [True, True]])
+        cost = jnp.asarray([1.0, 1.0], jnp.float32)
+        idx, ok = select_instance_batch(g, slo, cost, mask)
+        assert int(idx[0]) == 1 and bool(ok[0])
+        assert int(idx[1]) == 0 and bool(ok[1])   # row 2's cloud SLO cut
+
+
+class TestWindowParity:
+    """End-to-end window: the batched flush and the scalar per-request
+    reference loop agree on every decision for seeded random windows."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    @pytest.mark.parametrize("r", [1, 7, 32])
+    def test_batched_matches_scalar_loop(self, seed, r):
+        cl = two_tier()
+        br = BatchRouter(cl)
+        rng = np.random.default_rng(seed)
+        reqs = mk_reqs(r)
+        # warm telemetry with some arrivals so rates are non-trivial
+        t = 0.0
+        for _ in range(int(rng.integers(0, 20))):
+            t += float(rng.exponential(0.05))
+            br.router.tel(br._deps[int(rng.integers(0, 2))].key) \
+              .on_arrival(t)
+        t_now = t + 0.05
+        s_idx, s_ok = route_window_scalar(br, reqs, t_now)
+        lam = br._lam_matrix(reqs, t_now)
+        idx, ok, _, _ = br._score_select(lam, br._slo_rows(reqs),
+                                         br._mask_rows(reqs))
+        np.testing.assert_array_equal(np.asarray(ok), s_ok)
+        np.testing.assert_array_equal(np.asarray(idx)[s_ok], s_idx[s_ok])
+
+    def test_single_request_window_matches_route_best_target(self):
+        """R == 1 reduces to route_best's rate + 1/window semantics."""
+        cl = two_tier()
+        br = BatchRouter(cl)
+        req = mk_reqs(1)[0]
+        decs = br.submit(req, 0.0) or br.flush(0.0)
+        assert len(decs) == 1
+        ref = BatchRouter(cl)   # fresh telemetry
+        d = ref.router.route_best(mk_reqs(1)[0], 0.0)
+        assert decs[0].target_key == d.target.key
+
+
+class TestAdmissionConservation:
+    """Property: over any shuffled arrival window, admitted + offloaded
+    + rejected == arrivals, and admissions never exceed engine slots."""
+
+    @settings(max_examples=20)
+    @given(st.integers(1, 60), st.integers(0, 8), st.integers(0, 8),
+           st.integers(0, 10_000))
+    def test_conservation_and_slot_cap(self, n_req, edge_slots,
+                                       cloud_slots, seed):
+        cl = two_tier()
+        engines = {}
+        if edge_slots:
+            engines["yolov5m@pi4-edge"] = SlotBank(edge_slots)
+        if cloud_slots:
+            engines["yolov5m@cloud"] = SlotBank(cloud_slots)
+        br = BatchRouter(cl, engines=engines,
+                         config=AdmissionConfig(max_batch=16, window=0.02))
+        reqs = mk_reqs(n_req)
+        random.Random(seed).shuffle(reqs)
+        decs = []
+        t = 0.0
+        for rq in reqs:
+            t += 0.001
+            out = br.submit(rq, t)
+            if out:
+                decs.extend(out)
+        decs.extend(br.flush(t + 1.0))
+        assert br.pending() == 0
+        by = {ADMITTED: 0, OFFLOADED: 0, REJECTED: 0}
+        for d in decs:
+            by[d.outcome] += 1
+        assert sum(by.values()) == len(decs) == n_req
+        # engine-backed targets never exceed their slots
+        used: dict[str, int] = {}
+        for d in decs:
+            if d.slot is not None:
+                used[d.target_key] = used.get(d.target_key, 0) + 1
+        for key, count in used.items():
+            assert count <= engines[key].slots, (key, count)
+        # every slot-bound decision refers to a registered engine
+        for d in decs:
+            if d.outcome == REJECTED:
+                assert d.target_key is None and d.slot is None
+
+    def test_admissions_stop_exactly_at_capacity(self):
+        cl = two_tier()
+        bank = SlotBank(4)
+        # single-engine cluster: bind only the cloud (the edge admits
+        # freely in pure routing mode, so pin everything to one lane)
+        br = BatchRouter(cl, engines={"yolov5m@pi4-edge": SlotBank(0),
+                                      "yolov5m@cloud": bank},
+                         config=AdmissionConfig(max_batch=64))
+        for rq in mk_reqs(32):
+            br.submit(rq, rq.arrival)
+        decs = br.flush(0.1)
+        assert sum(1 for d in decs if d.slot is not None) <= 4
+        assert bank.n_free() == 0   # 32 >> 4 requests exhaust the bank
+
+
+class TestOverflowFallback:
+    def test_full_primary_falls_back_to_feasible_alternate(self):
+        """Winner's engine full + another SLO-feasible candidate with
+        free slots -> ADMITTED at the alternate, not offloaded/rejected."""
+        cl = two_tier()
+        br = BatchRouter(cl, engines={"yolov5m@pi4-edge": SlotBank(4),
+                                      "yolov5m@cloud": SlotBank(0)},
+                         config=AdmissionConfig(max_batch=64))
+        br.submit(mk_reqs(1)[0], 0.0)
+        (dec,) = br.flush(0.0)
+        # at lam = 1 the cloud wins on latency but has no slots; the edge
+        # is feasible (g ~ 0.98 < tau ~ 1.69) and must absorb the request
+        assert dec.outcome == ADMITTED
+        assert dec.target_key == "yolov5m@pi4-edge"
+        assert dec.req.offloaded is False
+
+    def test_single_tier_infeasible_is_not_marked_offloaded(self):
+        """route_best parity: with no upstream tier, an SLO-infeasible
+        request binds to the cheapest candidate with req.offloaded False
+        (it never left its tier)."""
+        cloud = dataclasses.replace(CLOUD, net_rtt=0.086)
+        cl = Cluster([Deployment(YOLOV5M, cloud, QualityClass.BALANCED,
+                                 n_replicas=2, n_max=4)])
+        br = BatchRouter(cl, config=AdmissionConfig(max_batch=8))
+        req = mk_reqs(1, slo=1e-6)[0]
+        br.submit(req, 0.0)
+        (dec,) = br.flush(0.0)
+        assert dec.outcome == ADMITTED
+        assert dec.target_key == "yolov5m@cloud"
+        assert dec.req.offloaded is False
+        # the scalar path this replaces agrees
+        ref = BatchRouter(cl)
+        d = ref.router.route_best(mk_reqs(1, slo=1e-6)[0], 0.0)
+        assert d.target.key == "yolov5m@cloud"
+        assert d.predicted_latency > 0
+
+
+class TestEngineIntegration:
+    def test_slotbank_matches_engine_surface(self):
+        """SlotBank and ServingEngine expose the same admission calls
+        (free_slots / n_free / admit_next / release) with the same
+        semantics; the router is agnostic to which it drives."""
+        bank = SlotBank(3)
+        assert bank.free_slots() == [0, 1, 2] and bank.n_free() == 3
+        assert bank.admit_next() == 0
+        assert bank.admit_next() == 1
+        bank.release(0)
+        assert bank.free_slots() == [0, 2]
+        assert bank.admit_next() == 0
+        assert bank.admit_next() == 2
+        assert bank.admit_next() is None
+        assert bank.n_free() == 0
+
+
+@pytest.mark.slow
+class TestPallasBackendParity:
+    """Interpret-mode Pallas sweep (slow, like the other kernel tests):
+    the kernel-backed flush must reach the same outcomes as the vmap
+    flush when no per-request SLO/lane restriction forces a fallback."""
+
+    @pytest.mark.parametrize("r", [4, 16, 64])
+    def test_backend_outcomes_match(self, r):
+        cl = two_tier()
+        decs = {}
+        for backend in ("vmap", "pallas-interpret"):
+            br = BatchRouter(cl, config=AdmissionConfig(
+                backend=backend, max_batch=r + 1, block_r=16))
+            for rq in mk_reqs(r):
+                br.submit(rq, rq.arrival)
+            decs[backend] = br.flush(0.1)
+        for dv, dp in zip(decs["vmap"], decs["pallas-interpret"]):
+            assert dv.outcome == dp.outcome
+            assert dv.target_key == dp.target_key
+
+    def test_backend_outcomes_match_with_engines(self):
+        """The kernel path returns no (R, I) score row; its engine-full
+        overflow must re-score the row and reach the same feasible
+        alternate as the vmap path (regression: it used to cascade
+        straight upstream, flipping ADMITTED to OFFLOADED)."""
+        outcomes = {}
+        for backend in ("vmap", "pallas-interpret"):
+            cl = two_tier()
+            br = BatchRouter(cl, engines={"yolov5m@pi4-edge": SlotBank(4),
+                                          "yolov5m@cloud": SlotBank(1)},
+                             config=AdmissionConfig(
+                                 backend=backend, max_batch=8, block_r=4))
+            for rq in mk_reqs(4):
+                br.submit(rq, rq.arrival)
+            outcomes[backend] = [(d.outcome, d.target_key)
+                                 for d in br.flush(0.1)]
+        assert outcomes["vmap"] == outcomes["pallas-interpret"]
+
+    def test_explicit_slo_falls_back_to_vmap(self):
+        cl = two_tier()
+        br = BatchRouter(cl, config=AdmissionConfig(
+            backend="pallas-interpret", max_batch=8))
+        for rq in mk_reqs(4, slo=5.0):
+            br.submit(rq, rq.arrival)
+        decs = br.flush(0.1)
+        assert len(decs) == 4   # fallback path still decides everything

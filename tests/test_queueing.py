@@ -153,3 +153,49 @@ class TestScalarTwins:
         a = lam / mu
         want = float(queueing.erlang_b_np(a, np.array([c]))[0])
         assert queueing.erlang_b_scalar(a, c) == want
+
+
+class TestErlangMemo:
+    """Event-batched control cache: exact mode must be bit-identical to
+    mmc_wait_scalar; bucketed mode must preserve stability and bound the
+    approximation by the bucket width."""
+
+    @given(st.floats(0.01, 40.0), st.integers(1, 32), st.floats(0.3, 3.0))
+    @settings(max_examples=40, deadline=None)
+    def test_exact_mode_bit_identical(self, lam, c, mu):
+        memo = queueing.ErlangMemo(mu)
+        want = queueing.mmc_wait_scalar(lam, c, mu)
+        assert memo.wait(lam, c) == want
+        # second call returns the same float; stable rho goes through the
+        # cache (unstable short-circuits to inf without caching)
+        assert memo.wait(lam, c) == want
+        if lam / (c * mu) < 1.0:
+            assert memo.hits >= 1
+
+    def test_exact_mode_edges(self):
+        memo = queueing.ErlangMemo(1.0)
+        assert memo.wait(0.0, 4) == 0.0
+        assert memo.wait(-2.0, 4) == 0.0
+        assert memo.wait(5.0, 2) == float("inf")
+
+    def test_bucketed_mode_preserves_stability(self):
+        memo = queueing.ErlangMemo(1.0, rho_buckets=16)
+        # stable rho just under 1 must stay finite (bucket floors down)
+        assert memo.wait(1.99, 2) < float("inf")
+        # unstable exactly at/above 1 short-circuits to inf
+        assert memo.wait(2.0, 2) == float("inf")
+
+    def test_bucketed_mode_shares_entries(self):
+        memo = queueing.ErlangMemo(1.0, rho_buckets=8)
+        a = memo.wait(1.0, 2)     # rho = 0.5  -> bucket 4
+        b = memo.wait(1.05, 2)    # rho = .525 -> bucket 4 (shared entry)
+        assert a == b
+        assert memo.misses == 1 and memo.hits == 1
+
+    def test_cache_cap_clears_wholesale(self):
+        memo = queueing.ErlangMemo(1.0, max_entries=4)
+        for k in range(10):
+            memo.wait(0.1 + 0.01 * k, 2)
+        assert len(memo._cache) <= 4
+        # values after a clear are still exact
+        assert memo.wait(0.17, 2) == queueing.mmc_wait_scalar(0.17, 2, 1.0)

@@ -280,3 +280,53 @@ class TestBatchScoring:
             if bool(ok[r]) and bool(rok[r]):
                 gsel = float(g[r, int(idx[r])])
                 assert abs(float(rg[r]) - gsel) / max(gsel, 1e-6) < 0.05
+
+
+class TestPredictMemo:
+    """Event-batched control: Router.predict memoises the scalar
+    predictor; hits must return the exact uncached float (golden digests
+    depend on it) and the key must include the replica count."""
+
+    def test_memo_bit_identical_to_uncached(self):
+        cl = two_tier(n_edge=2)
+        r = Router(cl, RouterParams())
+        dep = cl["yolov5m@pi4-edge"]
+        for lam in (0.0, 0.5, 1.0, 3.7, 10.0):
+            want = score_instance_scalar(
+                lam, dep.alpha, dep.beta, dep.gamma, dep.mu,
+                dep.n_replicas, dep.instance.net_rtt)
+            assert r.predict(dep, lam) == want          # miss
+            assert r.predict(dep, lam) == want          # hit
+            want_nortt = score_instance_scalar(
+                lam, dep.alpha, dep.beta, dep.gamma, dep.mu,
+                dep.n_replicas, 0.0)
+            assert r.predict(dep, lam, with_rtt=False) == want_nortt
+
+    def test_memo_keyed_on_replica_count(self):
+        cl = two_tier(n_edge=2)
+        r = Router(cl, RouterParams())
+        dep = cl["yolov5m@pi4-edge"]
+        g2 = r.predict(dep, 2.0)
+        dep.n_replicas = 4          # scale event
+        g4 = r.predict(dep, 2.0)
+        assert g4 != g2             # not served from the n=2 entry
+        assert g4 == score_instance_scalar(
+            2.0, dep.alpha, dep.beta, dep.gamma, dep.mu, 4,
+            dep.instance.net_rtt)
+
+    def test_bucketed_mode_close_but_gated(self):
+        """rho-bucketed Erlang (SimConfig.control_rho_buckets) is an
+        approximation: same proc term, queue term within the value at
+        the neighbouring bucket edges."""
+        cl = two_tier(n_edge=2)
+        exact = Router(cl, RouterParams())
+        approx = Router(cl, RouterParams(), rho_buckets=256)
+        for lam in (0.3, 1.1, 2.2):
+            ge = exact.predict(cl["yolov5m@pi4-edge"], lam)
+            ga = approx.predict(cl["yolov5m@pi4-edge"], lam)
+            assert ga <= ge or abs(ga - ge) / ge < 0.25
+        # stability must be preserved exactly in both modes
+        dep = cl["yolov5m@pi4-edge"]
+        lam_unstable = dep.n_replicas * dep.mu * 1.01
+        assert exact.predict(dep, lam_unstable) == BIG
+        assert approx.predict(dep, lam_unstable) == BIG

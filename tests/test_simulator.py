@@ -158,3 +158,32 @@ class TestDrainCounterIdempotence:
         ready = [r for r in pool.replicas.values() if not r.draining]
         assert pool.n_ready == len(ready) == 2
         assert pool.dep.n_replicas == 2
+
+
+class TestDefaultConfigNotShared:
+    def test_two_default_simulators_do_not_alias_config(self):
+        """Regression: ``config: SimConfig = SimConfig()`` evaluated the
+        default ONCE at import, so every no-config simulator shared one
+        mutable SimConfig — mutating one (e.g. flipping mode) silently
+        reconfigured every other default-constructed simulator."""
+        a = ClusterSimulator(two_tier())
+        b = ClusterSimulator(two_tier())
+        assert a.cfg is not b.cfg
+        a.cfg.mode = "baseline"
+        a.cfg.seed = 123
+        assert b.cfg.mode == "laimr"
+        assert b.cfg.seed == 0
+
+    def test_explicit_config_still_used(self):
+        cfg = SimConfig(mode="baseline", seed=7)
+        sim = ClusterSimulator(two_tier(), cfg)
+        assert sim.cfg is cfg
+
+    def test_memo_state_not_shared_between_sims(self):
+        """The event-batched control memos (predict cache, desired-
+        replicas cache) are per-instance, not module-level: two sims over
+        different traffic must not read each other's cached decisions."""
+        a = ClusterSimulator(two_tier())
+        b = ClusterSimulator(two_tier())
+        assert a.router._pcache is not b.router._pcache
+        assert a.pmhpa._n_star_cache is not b.pmhpa._n_star_cache
