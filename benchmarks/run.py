@@ -13,7 +13,8 @@ import os
 import time
 
 ALL = ("fig2", "table4", "fig3", "fig4", "table6", "router_us",
-       "batch_router", "capacity", "sim_throughput", "roofline")
+       "batch_router", "window_sweep", "capacity", "sim_throughput",
+       "roofline")
 
 
 def main() -> None:
@@ -40,6 +41,8 @@ def main() -> None:
                 from benchmarks import bench_router_us as m
             elif name == "batch_router":
                 from benchmarks import bench_batch_router as m
+            elif name == "window_sweep":
+                from benchmarks import bench_window_sweep as m
             elif name == "capacity":
                 from benchmarks import bench_capacity as m
             elif name == "sim_throughput":

@@ -37,6 +37,9 @@ decisions = []
 for req in reqs:
     decisions.extend(brouter.submit(req, req.arrival) or [])
 decisions.extend(brouter.flush(t))
+# Since ISSUE 3 the flush decides in quality-priority order: the
+# LOW_LATENCY lane first, then BALANCED, then PRECISE (FIFO within
+# each) — the paper's multi-queue dispatch applied inside the window.
 print(f"\nrouting {len(reqs)} requests (4 per lane), batched windows:")
 for d in decisions:
     print(f"  {d.req.quality.name:11s} -> {str(d.target_key):42s} "

@@ -5,8 +5,13 @@ latency numbers describe.
 
   PYTHONPATH=src python examples/serve_cluster.py
 """
+import os
+import sys
 import time
 from collections import Counter
+
+# the experiment cluster lives in benchmarks/ at the repo root
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import jax
 import jax.numpy as jnp
@@ -71,3 +76,18 @@ for mode in ("laimr", "baseline"):
     print(f"[{mode:8s}] p95={s['p95']:.2f}s p99={s['p99']:.2f}s "
           f"max={s['max']:.2f}s offloads={res.offload_fast} "
           f"scale_events={len(res.scale_events)}")
+
+# --- unified control plane (ISSUE 3): the SAME vectorised policy the
+# BatchRouter above used now drives the discrete-event simulator —
+# arrivals accumulate into admission windows and each window is one
+# batched score+select through repro.control.ControlPlane.
+sim = ClusterSimulator(experiment_cluster(),
+                       SimConfig(mode="laimr", seed=1, slo=1.8,
+                                 jitter_sigma=0.2,
+                                 admission_window=0.1))
+res = sim.run(arrivals, horizon=400.0)
+s = res.summary()
+print(f"[windowed] p95={s['p95']:.2f}s p99={s['p99']:.2f}s "
+      f"offloads={res.offload_fast} in {sim.plane.flushes} flushes "
+      f"({sim.plane.scored_pairs} scored pairs) — one control plane, "
+      "two adapters")

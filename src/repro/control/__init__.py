@@ -1,0 +1,28 @@
+"""Unified LA-IMR control plane (ISSUE 3): one routing/admission core
+driving both the live serving engine and the discrete-event simulator.
+
+Layers:
+
+* :mod:`repro.control.policy`    — batched scoring/selection over the
+  candidate table (vmap / Pallas), f32-pinned decision boundaries, the
+  float64 scalar reference loop;
+* :mod:`repro.control.admission` — window accumulation with
+  quality-class priority ordering, outcomes, slot providers;
+* :mod:`repro.control.plane`     — :class:`ControlPlane`, composing the
+  two with the engine-slot binding cascade and the PM-HPA tick refresh.
+
+Adapters: ``repro.serving.batch_router.BatchRouter`` (live engine) and
+``repro.core.simulator.ClusterSimulator`` with
+``SimConfig.admission_window > 0`` (discrete-event simulation).
+"""
+from repro.control.admission import (ADMITTED, OFFLOADED, REJECTED,
+                                     AdmissionConfig, AdmissionDecision,
+                                     AdmissionQueue, SlotBank)
+from repro.control.plane import ControlPlane, hpa_refresh
+from repro.control.policy import CandidateTable, RoutingPolicy
+
+__all__ = [
+    "ADMITTED", "OFFLOADED", "REJECTED", "AdmissionConfig",
+    "AdmissionDecision", "AdmissionQueue", "SlotBank", "ControlPlane",
+    "hpa_refresh", "CandidateTable", "RoutingPolicy",
+]

@@ -1,0 +1,150 @@
+"""Admission-window state: pending buffer, outcomes, slot providers.
+
+This module owns the *bookkeeping* half of the shared control plane
+(ISSUE 3): which requests are waiting for a decision, in what order a
+closed window is decided, and what the three terminal outcomes of a
+decision are. The *scoring* half lives in :mod:`repro.control.policy`;
+:class:`repro.control.plane.ControlPlane` composes the two.
+
+Window ordering (quality-class multi-queue, paper §IV-A)
+--------------------------------------------------------
+A window may mix quality classes. The paper's multi-queue scheduler
+gives LOW_LATENCY strict dispatch priority over BALANCED over PRECISE,
+so a flushed window is decided in **lane-priority order with per-lane
+FIFO** — the exact :class:`~repro.core.scheduler.MultiQueueScheduler`
+semantics, which :class:`AdmissionQueue` reuses verbatim as its pending
+buffer. Within a single-quality window this reduces to arrival order
+(stable), so the PR-2 serving behaviour is unchanged.
+
+Conservation contract (property-tested)
+---------------------------------------
+Every submitted request resolves to exactly one outcome:
+
+* ``ADMITTED``  — bound to a free slot of its target's engine (or to the
+  target itself when no engine is registered: pure routing mode);
+* ``OFFLOADED`` — sent to the upstream tier, either because no candidate
+  was SLO-feasible (``route_best`` semantics) or because the feasible
+  target's engine was full;
+* ``REJECTED``  — no feasible engine slot anywhere.
+
+``admitted + offloaded + rejected == arrivals`` and a flush never admits
+past the registered engines' free slots.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.scheduler import MultiQueueScheduler, Request
+
+ADMITTED = "admitted"
+OFFLOADED = "offloaded"
+REJECTED = "rejected"
+
+
+@dataclasses.dataclass
+class AdmissionConfig:
+    """Knobs of the admission-window loop (shared by every adapter).
+
+    ``window`` is the batching horizon in seconds: a pending request is
+    held at most this long before its window is flushed (larger window =
+    more amortisation, more decision staleness). ``max_batch`` flushes
+    early under burst so the decision matrix stays bounded. ``backend``
+    selects the scoring path: ``"vmap"`` (jit ``score_instances_batch``,
+    the default and the semantics reference), ``"pallas"`` (TPU kernel),
+    or ``"pallas-interpret"`` (same kernel, interpret mode — CPU-correct
+    but slow; used by tests). The Pallas paths take per-request SLO rows
+    and lane masks natively (folded into the kernel's (R, I) SLO input),
+    so explicit ``req.slo`` / restricted lanes no longer force a vmap
+    fallback.
+    """
+
+    window: float = 0.05
+    max_batch: int = 256
+    backend: str = "vmap"
+    block_r: int = 256
+    erlang_table_size: int = 65
+
+
+@dataclasses.dataclass
+class AdmissionDecision:
+    req: Request
+    outcome: str                    # ADMITTED | OFFLOADED | REJECTED
+    target_key: Optional[str]       # deployment the request was bound to
+    slot: Optional[int] = None      # engine slot (None in pure routing mode)
+    predicted_latency: float = 0.0
+
+
+class AdmissionQueue:
+    """Pending-window buffer with quality-class priority ordering.
+
+    Requests accumulate in a :class:`MultiQueueScheduler` (strict
+    priority, per-lane FIFO). :meth:`push` reports whether the window
+    must flush (age > ``window`` or ``max_batch`` pending);
+    :meth:`drain` empties the buffer in decision order.
+    """
+
+    def __init__(self, window: float, max_batch: int):
+        self.window = float(window)
+        self.max_batch = int(max_batch)
+        self._sched = MultiQueueScheduler()
+        self._opened: Optional[float] = None
+        self._n = 0    # pending count, tracked off the submit hot path
+
+    @property
+    def opened_at(self) -> Optional[float]:
+        """Time the current window opened (None when empty)."""
+        return self._opened
+
+    def pending(self) -> int:
+        return self._n
+
+    def push(self, req: Request, t_now: float) -> bool:
+        """Buffer ``req``; True when the window is due for a flush."""
+        if self._opened is None:
+            self._opened = t_now
+        self._sched.enqueue(req)
+        self._n += 1
+        return (self._n >= self.max_batch
+                or t_now - self._opened >= self.window)
+
+    def drain(self) -> list[Request]:
+        """Close the window: all pending requests, LOW_LATENCY lane
+        first, FIFO within each lane."""
+        self._opened = None
+        self._n = 0
+        return list(self._sched.drain())
+
+
+class SlotBank:
+    """Minimal slot tracker with ``ServingEngine``'s admission surface.
+
+    The control plane only needs ``free_slots`` / ``admit_next`` /
+    ``release``; binding a real :class:`~repro.serving.engine.ServingEngine`
+    gives the same interface backed by actual decode slots, while this
+    class models replica capacity in simulations and property tests
+    without instantiating model parameters.
+    """
+
+    def __init__(self, slots: int):
+        self.slots = slots
+        self.active = np.zeros((slots,), bool)
+
+    def free_slots(self) -> list[int]:
+        return [i for i in range(self.slots) if not self.active[i]]
+
+    def n_free(self) -> int:
+        return int((~self.active).sum())
+
+    def admit_next(self, first_token: int = 0,
+                   start_pos: int = 0) -> Optional[int]:
+        for i in range(self.slots):
+            if not self.active[i]:
+                self.active[i] = True
+                return i
+        return None
+
+    def release(self, slot: int) -> None:
+        self.active[slot] = False

@@ -1,0 +1,201 @@
+"""The unified LA-IMR control plane (ISSUE 3 tentpole).
+
+:class:`ControlPlane` composes the shared decision core:
+
+* :class:`~repro.control.policy.RoutingPolicy` — batched scoring +
+  selection over the (request x candidate) matrix (one vmap/Pallas call
+  per window);
+* :class:`~repro.control.admission.AdmissionQueue` — window
+  accumulation with quality-class priority ordering;
+* the engine-slot binding cascade (winner -> feasible alternates ->
+  upstream tier -> reject) with the conservation contract
+  ``admitted + offloaded + rejected == arrivals``;
+* the PM-HPA coupling: :func:`hpa_refresh` pairs one batched telemetry
+  decay/export with each reconcile tick.
+
+Both the live serving engine (``repro.serving.batch_router.BatchRouter``
+is a back-compat alias over this class) and the discrete-event simulator
+(``SimConfig.admission_window > 0``) are thin adapters over this one
+object — the paper's "one calibrated model drives routing AND capacity
+planning" made literal.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.control.admission import (ADMITTED, OFFLOADED, REJECTED,
+                                     AdmissionConfig, AdmissionDecision,
+                                     AdmissionQueue)
+from repro.control.policy import RoutingPolicy
+from repro.core.autoscaler import PMHPA
+from repro.core.catalogue import Cluster, Deployment
+from repro.core.router import Router, RouterParams
+from repro.core.scheduler import Request
+
+
+def hpa_refresh(router: Router, pmhpa: PMHPA, t_now: float) -> list[int]:
+    """One event-batched control-plane refresh per HPA tick: decay every
+    deployment's EWMA toward its sliding rate and export all PM-HPA
+    custom metrics in one batch, immediately before reconcile reads the
+    gauges. The per-deployment float ops equal the old interleaved loop,
+    so simulator golden digests are unchanged. Returns the exported
+    desired-replica counts."""
+    return pmhpa.export_batch(router.refresh_telemetry(t_now))
+
+
+class ControlPlane:
+    """Admission-window batcher over the LA-IMR routing decision.
+
+    Composes a :class:`Router` (telemetry, SLO budgets, upstream
+    topology) and replaces its per-request ``route_best`` dispatch with
+    one batched scoring + selection call per window. ``engines`` maps
+    deployment keys to slot providers
+    (:class:`~repro.control.admission.SlotBank` or a real
+    ``ServingEngine``); deployments without an engine admit without slot
+    accounting (pure routing mode — the discrete-event simulator runs
+    this way, modelling queueing in its own replica pools).
+    """
+
+    def __init__(self, cluster: Cluster,
+                 params: Optional[RouterParams] = None,
+                 engines: Optional[dict] = None,
+                 config: Optional[AdmissionConfig] = None,
+                 router: Optional[Router] = None):
+        self.cluster = cluster
+        self.router = router or Router(cluster, params or RouterParams())
+        self.cfg = config or AdmissionConfig()
+        self.engines = engines if engines is not None else {}
+        self.policy = RoutingPolicy(cluster, self.router, self.cfg)
+        self.queue = AdmissionQueue(self.cfg.window, self.cfg.max_batch)
+        self.flushes = 0
+        self.scored_pairs = 0
+
+    # ------------------------------------------------------------------ #
+    def pending(self) -> int:
+        return self.queue.pending()
+
+    def window_opened_at(self) -> Optional[float]:
+        return self.queue.opened_at
+
+    def submit(self, req: Request,
+               t_now: float) -> Optional[list[AdmissionDecision]]:
+        """Queue a request; flush and return decisions when the window
+        closes (age > ``window`` or ``max_batch`` pending), else None."""
+        if self.queue.push(req, t_now):
+            return self.flush(t_now)
+        return None
+
+    # ------------------------------------------------------------------ #
+    def _take_slot(self, dep: Deployment) -> tuple[bool, Optional[int]]:
+        """(has capacity, slot) at ``dep`` — deployments without a
+        registered engine always have capacity (pure routing mode)."""
+        eng = self.engines.get(dep.key)
+        if eng is None:
+            return True, None
+        slot = eng.admit_next()
+        return slot is not None, slot
+
+    def _settle(self, req: Request, dep: Deployment, slot: Optional[int],
+                t_now: float, predicted: float,
+                offload: bool) -> AdmissionDecision:
+        tel = self.router.tel(dep.key)
+        tel.on_arrival(t_now)
+        req.assigned_instance = dep.key
+        req.offloaded = offload
+        if offload:
+            tel.offloaded_fast += 1
+        return AdmissionDecision(req, OFFLOADED if offload else ADMITTED,
+                                 dep.key, slot=slot,
+                                 predicted_latency=predicted)
+
+    def _bind(self, req: Request, dep: Deployment, t_now: float,
+              predicted: float, *, offload: bool) -> AdmissionDecision:
+        """Try the engine slot at ``dep``; cascade upstream; reject when
+        every tier in the chain is saturated."""
+        got, slot = self._take_slot(dep)
+        if not got:
+            up = self.cluster.upstream_of(dep)
+            if up is not None and up.key != dep.key:
+                return self._bind(req, up, t_now, predicted, offload=True)
+            req.assigned_instance = None
+            return AdmissionDecision(req, REJECTED, None,
+                                     predicted_latency=predicted)
+        return self._settle(req, dep, slot, t_now, predicted, offload)
+
+    def flush(self, t_now: float) -> list[AdmissionDecision]:
+        """Close the window: one batched decision over all pending
+        requests — LOW_LATENCY lane first, FIFO within each lane —
+        feeding engine slots."""
+        reqs = self.queue.drain()
+        if not reqs:
+            return []
+        pol = self.policy
+        lam = pol.lam_matrix(reqs, t_now)
+        slo = pol.slo_rows(reqs)
+        mask = pol.mask_rows(reqs)
+        idx, ok, g_best, g = pol.score_select(lam, slo, mask)
+        self.flushes += 1
+        self.scored_pairs += lam.shape[0] * lam.shape[1]
+
+        deps, cost = pol.deps, pol.table.cost
+        out: list[AdmissionDecision] = []
+        for r, req in enumerate(reqs):
+            pred = float(g_best[r]) if g_best is not None \
+                else float(g[r, int(idx[r])])
+            if bool(ok[r]):
+                out.append(self._place_feasible(req, r, int(idx[r]), lam,
+                                                slo, mask, g, pred, t_now))
+            else:
+                # route_best semantics: nothing feasible -> offload to
+                # the upstream of the cheapest candidate IN THE REQUEST'S
+                # LANE (or that candidate itself at the top tier; in that
+                # case route_best leaves req.offloaded False — the
+                # request never left its tier).
+                lane = np.flatnonzero(mask[r])
+                ci = int(lane[np.argmin(cost[lane])])
+                cheapest = deps[ci]
+                up = self.cluster.upstream_of(cheapest) or cheapest
+                pred = float(np.min(g[r])) if g is not None else pred
+                out.append(self._bind(req, up, t_now, pred,
+                                      offload=up.key != cheapest.key))
+        return out
+
+    def _place_feasible(self, req: Request, r: int, primary: int,
+                        lam: np.ndarray, slo: np.ndarray, mask: np.ndarray,
+                        g: Optional[np.ndarray], pred: float,
+                        t_now: float) -> AdmissionDecision:
+        """Bind a feasible request: the §IV-B winner first; if its engine
+        is full, the next-best FEASIBLE candidates in latency order; then
+        the upstream tier; reject only when all of those are saturated.
+
+        The fallback order is computed lazily — only when the primary's
+        slot grab fails — so pure-routing windows (no engines) and
+        uncontended flushes never pay for it. The Pallas backend returns
+        no (R, I) score row; the overflow path re-scores the single row
+        through the vmap scorer (rare, and only when engines exist)."""
+        deps = self.policy.deps
+        got, slot = self._take_slot(deps[primary])
+        if got:
+            return self._settle(req, deps[primary], slot, t_now,
+                                pred, offload=False)
+        g_row = g[r] if g is not None else self.policy.score_row(lam[r])
+        feas = np.flatnonzero((g_row <= slo[r]) & mask[r])
+        feas = feas[np.argsort(g_row[feas], kind="stable")]
+        tried = [primary]
+        for i in (int(i) for i in feas if int(i) != primary):
+            got, slot = self._take_slot(deps[i])
+            tried.append(i)
+            if got:
+                # any candidate here is SLO-feasible, so landing on an
+                # alternate is still an admission, not an offload.
+                return self._settle(req, deps[i], slot, t_now,
+                                    float(g_row[i]), offload=False)
+        up = self.cluster.upstream_of(deps[primary])
+        if up is not None and up.key not in \
+                (deps[i].key for i in tried):
+            return self._bind(req, up, t_now, pred, offload=True)
+        req.assigned_instance = None
+        return AdmissionDecision(req, REJECTED, None,
+                                 predicted_latency=pred)

@@ -28,6 +28,16 @@ Two controller modes:
 * ``baseline`` — static binding (no offload) + reactive latency-threshold
                  autoscaler with its 60-120 s decision lag.
 
+Unified control plane (ISSUE 3): with ``SimConfig.admission_window > 0``
+the laimr mode stops deciding per arrival and instead accumulates
+arrivals into admission windows routed through the SAME vectorised
+:class:`repro.control.plane.ControlPlane` the serving engine uses —
+one batched score+select per window, quality-priority ordering,
+route_best offload semantics. ``admission_window == 0`` (default) keeps
+the scalar per-arrival path bit-identical to the golden digests;
+``benchmarks/bench_window_sweep.py`` measures the tail-latency cost of
+window width under burst.
+
 Fleet-scale fast path: the event loop is O(log n) per event — O(1)
 idle-replica free-list per pool, deque FIFOs, cached per-pool service
 constants, memoised home-tier binding, and scalar bit-identical twins of
@@ -58,7 +68,8 @@ from repro.core.workload import Arrival
 Mode = Literal["laimr", "baseline"]
 
 # event kinds, ordered for deterministic tie-breaking
-_ARRIVAL, _SERVICE_END, _REPLICA_READY, _HPA_TICK = 0, 1, 2, 3
+_ARRIVAL, _SERVICE_END, _REPLICA_READY, _HPA_TICK, _WINDOW_FLUSH = \
+    0, 1, 2, 3, 4
 
 
 @dataclasses.dataclass
@@ -184,6 +195,19 @@ class SimConfig:
     # 1/K, raising memo hit rates at the cost of (bounded) physics drift;
     # golden tests only cover the default-off setting.
     control_rho_buckets: Optional[int] = None
+    # Unified control plane (ISSUE 3): admission_window > 0 accumulates
+    # laimr arrivals into windows and routes each window through the
+    # SAME vectorised ControlPlane the serving engine uses (one batched
+    # score+select per window, quality-priority ordering, route_best
+    # offload semantics). 0.0 (default) keeps the scalar per-arrival
+    # Algorithm-1 path — bit-identical to the golden digests. In window
+    # mode the Alg.1 line-19 per-arrival gauge bump disappears; scaling
+    # runs entirely off the HPA tick's batched telemetry refresh (which
+    # is also what the tick reconcile reads in scalar mode — see the
+    # export-policy NOTE in _on_arrival). Ignored in baseline mode.
+    admission_window: float = 0.0
+    admission_max_batch: int = 256
+    admission_backend: str = "vmap"
 
 
 @dataclasses.dataclass
@@ -233,6 +257,25 @@ class ClusterSimulator:
         self.scheduler = MultiQueueScheduler()
         self.router = Router(cluster, config.router, self.metrics,
                              rho_buckets=config.control_rho_buckets)
+        # Unified control plane: in window mode the simulator is a thin
+        # adapter over the same ControlPlane the serving engine drives
+        # (pure routing mode — queueing lives in the pools, so no
+        # engines are registered and no decision can be REJECTED).
+        # Imported lazily: repro.control composes objects from
+        # repro.core, so a module-level import here would be circular.
+        from repro.control.plane import hpa_refresh
+        self._hpa_refresh = hpa_refresh
+        self.plane = None
+        if config.mode == "laimr" and config.admission_window > 0.0:
+            from repro.control.admission import AdmissionConfig
+            from repro.control.plane import ControlPlane
+            self.plane = ControlPlane(
+                cluster, router=self.router,
+                config=AdmissionConfig(
+                    window=config.admission_window,
+                    max_batch=config.admission_max_batch,
+                    backend=config.admission_backend))
+        self._win_seq = 0
         self.pmhpa = PMHPA(cluster, self.metrics, reconcile_period=config.hpa_period,
                            x=config.router.x, rho_low=config.router.rho_low)
         self.reactive = ReactiveAutoscaler(cluster, slo_multiplier=config.router.x,
@@ -296,6 +339,9 @@ class ClusterSimulator:
         dep = self._bind_deployment(arr)
         req = Request(model=arr.model, quality=dep.quality, arrival=self._now,
                       slo=self.slo_override)
+        if self.plane is not None:
+            self._submit_windowed(req)
+            return
         if self.cfg.mode == "laimr":
             decision = self.router.on_request(req, dep, self._now)
             target = decision.target or dep
@@ -331,6 +377,37 @@ class ClusterSimulator:
             target = dep  # baseline: static binding, no offload
         req.assigned_instance = target.key
         self._enqueue(self.pools[target.key], req)
+
+    # -- unified-control-plane window mode (ISSUE 3) -------------------- #
+    def _submit_windowed(self, req: Request) -> None:
+        """Admission-window adapter: buffer the arrival in the shared
+        ControlPlane; when the plane closes the window (max_batch), or
+        when this arrival opens a fresh window, schedule/handle the
+        flush. The flush event carries a window sequence number so a
+        window already closed by max_batch cannot be flushed twice."""
+        plane = self.plane
+        opened = plane.pending() == 0
+        decisions = plane.submit(req, self._now)
+        if decisions is not None:
+            self._enqueue_decisions(decisions)
+        elif opened:
+            self._win_seq += 1
+            self._push(self._now + self.cfg.admission_window,
+                       _WINDOW_FLUSH, self._win_seq)
+
+    def _on_window_flush(self, win_id: int) -> None:
+        plane = self.plane
+        if win_id != self._win_seq or plane.pending() == 0:
+            return
+        self._enqueue_decisions(plane.flush(self._now))
+
+    def _enqueue_decisions(self, decisions: list) -> None:
+        """Hand routed requests to their pools. The plane runs in pure
+        routing mode here (no engines), so every decision carries a
+        target; queueing, service and RTT then emerge from the event
+        loop exactly as in scalar mode."""
+        for dec in decisions:
+            self._enqueue(self.pools[dec.target_key], dec.req)
 
     def _on_service_end(self, key: str, rid: int, req: Request) -> None:
         pool = self.pools[key]
@@ -378,12 +455,15 @@ class ClusterSimulator:
 
     def _on_hpa_tick(self) -> None:
         if self.cfg.mode == "laimr":
-            # Event-batched control: decay every deployment's EWMA toward
-            # its sliding rate (so scale-in can trigger without traffic)
-            # and export all custom metrics in ONE batched refresh per
-            # tick — same per-deployment float ops as the old interleaved
-            # loop, so the golden digests are unchanged.
-            self.pmhpa.export_batch(self.router.refresh_telemetry(self._now))
+            # Event-batched control, owned by the unified control plane
+            # (repro.control.plane.hpa_refresh): decay every deployment's
+            # EWMA toward its sliding rate (so scale-in can trigger
+            # without traffic) and export all custom metrics in ONE
+            # batched refresh per tick — same per-deployment float ops as
+            # the old interleaved loop, so the golden digests are
+            # unchanged. This is the PM-HPA half of the shared plane and
+            # runs identically in scalar and window mode.
+            self._hpa_refresh(self.router, self.pmhpa, self._now)
             events = self.pmhpa.reconcile(self._now)
         else:
             events = self.reactive.reconcile(self._now)
@@ -416,6 +496,8 @@ class ClusterSimulator:
                 self._on_replica_ready(payload)
             elif kind == _HPA_TICK:
                 self._on_hpa_tick()
+            elif kind == _WINDOW_FLUSH:
+                self._on_window_flush(payload)
         tel = self.router.telemetry
         return SimResult(
             completed=self.completed,

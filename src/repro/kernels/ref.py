@@ -163,6 +163,8 @@ def routing_score(lam: jax.Array, alpha: jax.Array, beta: jax.Array,
     the in-memory table of paper §IV-B step ii), mask infeasible
     (g > slo or rho >= 1), and return (best index, best g, feasible?).
 
+    slo is (I,) — budgets shared across requests — or (R, I) per-request
+    rows (explicit ``req.slo`` / quality-lane exclusions as slo = -1).
     erlang_c_table: (I, T) — per-deployment expected wait at rho grid
     points rho = linspace(0, 1, T) (last entries may be large/BIG).
     """
@@ -171,6 +173,9 @@ def routing_score(lam: jax.Array, alpha: jax.Array, beta: jax.Array,
     lam_ = lam.astype(jnp.float32)            # (R,) or per-candidate (R, I)
     if lam_.ndim == 1:
         lam_ = lam_[:, None]                                    # (R, 1)
+    slo_ = slo.astype(jnp.float32)
+    if slo_.ndim == 1:
+        slo_ = slo_[None, :]                                    # (1, I)
     lam_tilde = lam_ / jnp.maximum(n[None, :], 1.0)
     proc = alpha[None, :] + beta[None, :] * jnp.power(
         jnp.maximum(lam_tilde, 0.0), gamma[None, :])
@@ -185,7 +190,7 @@ def routing_score(lam: jax.Array, alpha: jax.Array, beta: jax.Array,
     q_hi = jax.vmap(lambda l_row: tbl[jnp.arange(tbl.shape[0]), l_row + 1])(lo)
     q = q_lo * (1 - frac) + q_hi * frac
     g = proc + rtt[None, :] + q
-    feasible = (rho < 1.0) & (g <= slo[None, :])
+    feasible = (rho < 1.0) & (g <= slo_)
     g_masked = jnp.where(feasible, g, jnp.inf)
     gmin = jnp.min(g_masked, axis=1, keepdims=True)
     near = feasible & (g_masked <= gmin * (1.0 + 1e-5) + 1e-9)

@@ -45,7 +45,9 @@ def _kernel(lam_ref, alpha_ref, beta_ref, gamma_ref, mu_ref, n_ref,
     mu = mu_ref[...][None, :]
     n = n_ref[...][None, :]
     rtt = rtt_ref[...][None, :]
-    slo = slo_ref[...][None, :]
+    slo = slo_ref[...]                                   # (I,) or (R, I)
+    if slo.ndim == 1:
+        slo = slo[None, :]                               # shared budget rows
     cost = cost_ref[...][None, :]
     table = table_ref[...]                               # (I, T)
     t = table.shape[1]
@@ -83,7 +85,11 @@ def routing_score(lam, alpha, beta, gamma, mu, n, rtt, slo, cost,
     """lam: per-request arrival-rate estimates — (R,) to score every
     candidate at the same aggregate rate, or (R, I) with a per-candidate
     rate per request (the admission-window form, where each pool is
-    scored at its own observed rate). Per-deployment params (I,);
+    scored at its own observed rate). slo: per-deployment budgets (I,)
+    shared across requests, or per-request rows (R, I) — the explicit
+    ``req.slo`` / quality-lane form (a lane exclusion is slo = -1: g is
+    non-negative, so the candidate is infeasible exactly like the vmap
+    path's candidate mask). Other per-deployment params (I,);
     erlang_c_table: (I, T) precomputed waits over a rho grid.
     Returns (idx (R,), best_g (R,), feasible (R,))."""
     r = lam.shape[0]
@@ -95,6 +101,8 @@ def routing_score(lam, alpha, beta, gamma, mu, n, rtt, slo, cost,
     lam_spec = pl.BlockSpec((block_r,), lambda ir: (ir,)) if lam.ndim == 1 \
         else pl.BlockSpec((block_r, i), lambda ir: (ir, 0))
     full = lambda _: (0,)
+    slo_spec = pl.BlockSpec((i,), full) if slo.ndim == 1 \
+        else pl.BlockSpec((block_r, i), lambda ir: (ir, 0))
     return pl.pallas_call(
         _kernel,
         grid=grid,
@@ -103,7 +111,7 @@ def routing_score(lam, alpha, beta, gamma, mu, n, rtt, slo, cost,
             pl.BlockSpec((i,), full), pl.BlockSpec((i,), full),
             pl.BlockSpec((i,), full), pl.BlockSpec((i,), full),
             pl.BlockSpec((i,), full), pl.BlockSpec((i,), full),
-            pl.BlockSpec((i,), full), pl.BlockSpec((i,), full),
+            slo_spec, pl.BlockSpec((i,), full),
             pl.BlockSpec((i, t), lambda ir: (0, 0)),
         ],
         out_specs=[

@@ -1,6 +1,7 @@
 """Serving layer: the slot-batched generation engine (data plane) and
-the batched admission-window router that binds LA-IMR decisions to
-decode slots (control plane meets data plane)."""
+the serving adapter of the unified control plane (``BatchRouter`` is a
+thin subclass of :class:`repro.control.plane.ControlPlane` binding
+LA-IMR window decisions to decode slots)."""
 from repro.serving.batch_router import (ADMITTED, OFFLOADED, REJECTED,
                                         AdmissionConfig, AdmissionDecision,
                                         BatchRouter, SlotBank,

@@ -1,424 +1,65 @@
-"""Batched serving-router admission loop (ROADMAP PR 2 tentpole).
+"""Serving adapter over the unified control plane (ISSUE 3).
 
-The paper's §IV-B hot path is a *per-request* decision: score every
-candidate deployment, SLO-filter, argmin with cost tie-break. The
-serving engine previously ran it one request at a time through
-``Router.route_best`` — two jit dispatches per request, which caps the
-router at a few thousand decisions/s regardless of how fast the scoring
-math is. This module amortises that dispatch the way SafeTail-style
-schedulers do: arrivals accumulate into an **admission window** and the
-whole window is scored against the whole candidate table in ONE
-``score_instances_batch`` call (or one Pallas ``routing_score`` kernel
-launch), then the SLO filter + two-stage cost tie-break runs vectorised
-(``select_instance_batch``) and the winners are bound to
-``ServingEngine`` decode slots.
+PR 2 introduced the batched admission-window loop here; ISSUE 3 moved
+its decision core into :mod:`repro.control` so the live serving engine
+and the discrete-event simulator route through literally the same
+policy object. :class:`BatchRouter` is now a thin back-compat adapter:
+it *is* a :class:`~repro.control.plane.ControlPlane` (same constructor,
+same ``submit``/``flush``/conservation contract, same engine-slot
+binding), plus the PR-2 era private surface (``_deps``,
+``_lam_matrix``, ``_score_select``, ...) that tests and benchmarks
+pinned, delegating to the shared :class:`RoutingPolicy`.
 
-Admission-window semantics
---------------------------
-Within a window of R requests the pool arrival rates are read ONCE at
-flush time; request r (0-based position in arrival order) is scored at
-
-    lam[r, i] = rate_i(t_flush) + (r + 1) / window_width
-
-i.e. each request sees the window's earlier arrivals as additional load,
-uniformly smeared over all candidates (their destinations are unknown at
-scoring time). For R == 1 this reduces exactly to ``route_best``'s
-``rate + 1/window`` self-contribution. Telemetry is updated *after* the
-batch decision, once per request, at the chosen target — the same
-amortisation every event-batched scheduler makes.
-
-Slot accounting (conservation contract, property-tested)
---------------------------------------------------------
-Every submitted request resolves to exactly one outcome:
-
-* ``admitted``  — bound to a free slot of its target's engine (or to the
-  target itself when no engine is registered for it: pure routing mode);
-* ``offloaded`` — sent to the upstream tier, either because no candidate
-  was SLO-feasible (``route_best`` semantics) or because the feasible
-  target's engine was full. When nothing is feasible AND the lane's
-  cheapest candidate has no upstream, the request is bound there as
-  ``admitted`` with ``req.offloaded`` False — matching ``route_best``,
-  whose offload flag is ``upstream is not cheapest``;
-* ``rejected``  — no feasible engine slot anywhere (target and upstream
-  both saturated).
-
-``admitted + offloaded + rejected == arrivals`` and a flush never admits
-past the registered engines' free slots.
-
-Scalar/batched decision-boundary contract
------------------------------------------
-The scalar control-plane predictor (``score_instance_scalar``) runs
-float64 while the batched/jit/Pallas paths run float32, so a request
-sitting exactly on the SLO cutoff — or two candidates tied in latency —
-could route differently between paths. The pinned semantics: *selection
-happens in float32* with the two-stage cost tie-break and the 1e-5
-relative ``near`` tolerance of ``select_instance``. The scalar reference
-loop here (:func:`route_window_scalar`) therefore casts its float64
-scores to float32 before filtering/tie-breaking (via
-``select_instance_scalar``); tests/test_batch_router.py pins the
-boundary cases.
+Semantics (admission windows, the f32-pinned decision boundary, the
+conservation contract) are documented where they now live:
+``repro/control/policy.py`` and ``repro/control/admission.py``.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
-
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.catalogue import Cluster, Deployment
-from repro.core.router import (Router, RouterParams, score_instance_scalar,
-                               score_instances_batch, select_instance_batch,
-                               select_instance_scalar)
+from repro.control.admission import (ADMITTED, OFFLOADED, REJECTED,
+                                     AdmissionConfig, AdmissionDecision,
+                                     SlotBank)
+from repro.control.plane import ControlPlane
 from repro.core.scheduler import Request
 
-ADMITTED = "admitted"
-OFFLOADED = "offloaded"
-REJECTED = "rejected"
+__all__ = [
+    "ADMITTED", "OFFLOADED", "REJECTED", "AdmissionConfig",
+    "AdmissionDecision", "BatchRouter", "SlotBank", "route_window_scalar",
+]
 
 
-@dataclasses.dataclass
-class AdmissionConfig:
-    """Knobs of the admission-window loop.
+class BatchRouter(ControlPlane):
+    """The live serving engine's admission loop — a named adapter over
+    :class:`ControlPlane` keeping the PR-2 private attribute surface for
+    tests/benchmarks. All behaviour lives in the shared plane."""
 
-    ``window`` is the batching horizon in seconds: a pending request is
-    held at most this long before its window is flushed (larger window =
-    more amortisation, more decision staleness). ``max_batch`` flushes
-    early under burst so the decision matrix stays bounded. ``backend``
-    selects the scoring path: ``"vmap"`` (jit ``score_instances_batch``,
-    the default and the semantics reference), ``"pallas"`` (TPU kernel),
-    or ``"pallas-interpret"`` (same kernel, interpret mode — CPU-correct
-    but slow; used by tests). The Pallas paths fall back to vmap when a
-    request carries an explicit per-request SLO or a restricted candidate
-    lane, which the kernel's (I,)-shaped SLO cannot express.
-    """
+    @property
+    def _deps(self):
+        return self.policy.deps
 
-    window: float = 0.05
-    max_batch: int = 256
-    backend: str = "vmap"
-    block_r: int = 256
-    erlang_table_size: int = 65
+    def _n(self) -> np.ndarray:
+        return self.policy.table.n()
 
-
-@dataclasses.dataclass
-class AdmissionDecision:
-    req: Request
-    outcome: str                    # ADMITTED | OFFLOADED | REJECTED
-    target_key: Optional[str]       # deployment the request was bound to
-    slot: Optional[int] = None      # engine slot (None in pure routing mode)
-    predicted_latency: float = 0.0
-
-
-class SlotBank:
-    """Minimal slot tracker with ``ServingEngine``'s admission surface.
-
-    The batch router only needs ``free_slots`` / ``admit_next`` /
-    ``release``; binding a real :class:`~repro.serving.engine.ServingEngine`
-    gives the same interface backed by actual decode slots, while this
-    class models replica capacity in simulations and property tests
-    without instantiating model parameters.
-    """
-
-    def __init__(self, slots: int):
-        self.slots = slots
-        self.active = np.zeros((slots,), bool)
-
-    def free_slots(self) -> list[int]:
-        return [i for i in range(self.slots) if not self.active[i]]
-
-    def n_free(self) -> int:
-        return int((~self.active).sum())
-
-    def admit_next(self, first_token: int = 0,
-                   start_pos: int = 0) -> Optional[int]:
-        for i in range(self.slots):
-            if not self.active[i]:
-                self.active[i] = True
-                return i
-        return None
-
-    def release(self, slot: int) -> None:
-        self.active[slot] = False
-
-
-class BatchRouter:
-    """Admission-window batcher over the LA-IMR routing decision.
-
-    Composes a :class:`Router` (telemetry, SLO budgets, upstream
-    topology) and replaces its per-request ``route_best`` dispatch with
-    one batched scoring + selection call per window. ``engines`` maps
-    deployment keys to slot providers (:class:`SlotBank` or a real
-    ``ServingEngine``); deployments without an engine admit without slot
-    accounting (pure routing mode).
-    """
-
-    def __init__(self, cluster: Cluster,
-                 params: Optional[RouterParams] = None,
-                 engines: Optional[dict] = None,
-                 config: Optional[AdmissionConfig] = None,
-                 router: Optional[Router] = None):
-        self.cluster = cluster
-        self.router = router or Router(cluster, params or RouterParams())
-        self.cfg = config or AdmissionConfig()
-        self.engines = engines if engines is not None else {}
-        self._pending: list[Request] = []
-        self._window_open: Optional[float] = None
-        # static candidate table (per-flush n_replicas refresh)
-        self._deps: list[Deployment] = list(cluster)
-        self._alpha = np.array([d.alpha for d in self._deps], np.float32)
-        self._beta = np.array([d.beta for d in self._deps], np.float32)
-        self._gamma = np.array([d.gamma for d in self._deps], np.float32)
-        self._mu = np.array([d.mu for d in self._deps], np.float32)
-        self._rtt = np.array([d.instance.net_rtt for d in self._deps],
-                             np.float32)
-        self._cost = np.array([d.instance.cost for d in self._deps],
-                              np.float32)
-        # dep-derived SLO budgets tau_m (x * L_m [+ rtt]) — fixed per
-        # cluster+params; per-request slo overrides patch rows at flush.
-        _probe = Request(model="", quality=self._deps[0].quality, arrival=0.0)
-        self._tau = np.array(
-            [self.router.slo_budget(d, _probe) for d in self._deps],
-            np.float32)
-        # quality-lane candidate masks; empty lanes fall back to all
-        # candidates (route_best's `for_quality(q) or list(cluster)`)
-        self._lane_mask: dict = {}
-        for d in self._deps:
-            q = d.quality
-            if q not in self._lane_mask:
-                m = np.array([dd.quality == q for dd in self._deps])
-                self._lane_mask[q] = m if m.any() else np.ones(len(self._deps), bool)
-        self._all_mask = np.ones(len(self._deps), bool)
-        # Pallas-path Erlang table, rebuilt only when replica counts move
-        self._table = None
-        self._table_key: Optional[tuple] = None
-        self.flushes = 0
-        self.scored_pairs = 0
-
-    # ------------------------------------------------------------------ #
-    def pending(self) -> int:
-        return len(self._pending)
-
-    def submit(self, req: Request,
-               t_now: float) -> Optional[list[AdmissionDecision]]:
-        """Queue a request; flush and return decisions when the window
-        closes (age > ``window`` or ``max_batch`` pending), else None."""
-        if self._window_open is None:
-            self._window_open = t_now
-        self._pending.append(req)
-        if (len(self._pending) >= self.cfg.max_batch
-                or t_now - self._window_open >= self.cfg.window):
-            return self.flush(t_now)
-        return None
-
-    # ------------------------------------------------------------------ #
     def _lam_matrix(self, reqs: list[Request], t_now: float) -> np.ndarray:
-        """(R, I) per-request, per-candidate rate estimates (module doc)."""
-        rates = np.array(
-            [self.router.tel(d.key).sliding.rate(t_now) for d in self._deps],
-            np.float32)
-        r = len(reqs)
-        self_load = (np.arange(1, r + 1, dtype=np.float32)
-                     / np.float32(self.router.params.window))
-        return rates[None, :] + self_load[:, None]
-
-    def _mask_rows(self, reqs: list[Request]) -> np.ndarray:
-        masks = [self._lane_mask.get(rq.quality, self._all_mask)
-                 for rq in reqs]
-        return np.stack(masks, axis=0)
+        return self.policy.lam_matrix(reqs, t_now)
 
     def _slo_rows(self, reqs: list[Request]) -> np.ndarray:
-        slo = np.broadcast_to(self._tau, (len(reqs), len(self._deps))).copy()
-        for r, rq in enumerate(reqs):
-            if rq.slo is not None:
-                slo[r, :] = np.float32(rq.slo)
-        return slo
+        return self.policy.slo_rows(reqs)
+
+    def _mask_rows(self, reqs: list[Request]) -> np.ndarray:
+        return self.policy.mask_rows(reqs)
 
     def _score_select(self, lam: np.ndarray, slo: np.ndarray,
                       mask: np.ndarray):
-        """One batched score+select over the (R, I) decision matrix.
-        Returns (idx (R,), ok (R,), g (R, I) or best-g (R,))."""
-        backend = self.cfg.backend
-        uniform_slo = bool((slo == self._tau[None, :]).all())
-        if backend in ("pallas", "pallas-interpret") and uniform_slo \
-                and bool(mask.all()):
-            idx, g_best, ok = self._pallas_select(lam)
-            return idx, ok, g_best, None
-        g = score_instances_batch(
-            jnp.asarray(lam), jnp.asarray(self._alpha),
-            jnp.asarray(self._beta), jnp.asarray(self._gamma),
-            jnp.asarray(self._mu), jnp.asarray(self._n()),
-            jnp.asarray(self._rtt))
-        idx, ok = select_instance_batch(g, jnp.asarray(slo),
-                                        jnp.asarray(self._cost),
-                                        jnp.asarray(mask))
-        return np.asarray(idx), np.asarray(ok), None, np.asarray(g)
-
-    def _n(self) -> np.ndarray:
-        return np.array([d.n_replicas for d in self._deps], np.float32)
-
-    def _pallas_select(self, lam: np.ndarray):
-        from repro.kernels.routing_score import (build_erlang_table,
-                                                 routing_score)
-        n = self._n()
-        key = tuple(int(x) for x in n)
-        if self._table_key != key:
-            self._table = build_erlang_table(self._mu, n.astype(np.int64),
-                                             t=self.cfg.erlang_table_size)
-            self._table_key = key
-        r = lam.shape[0]
-        block = min(self.cfg.block_r, r)
-        pad = (-r) % block
-        if pad:
-            lam = np.concatenate(
-                [lam, np.zeros((pad, lam.shape[1]), lam.dtype)], axis=0)
-        idx, g_best, ok = routing_score(
-            jnp.asarray(lam, jnp.float32), jnp.asarray(self._alpha),
-            jnp.asarray(self._beta), jnp.asarray(self._gamma),
-            jnp.asarray(self._mu), jnp.asarray(n), jnp.asarray(self._rtt),
-            jnp.asarray(self._tau), jnp.asarray(self._cost), self._table,
-            block_r=block,
-            interpret=(self.cfg.backend == "pallas-interpret"))
-        return (np.asarray(idx)[:r], np.asarray(g_best)[:r],
-                np.asarray(ok)[:r])
-
-    # ------------------------------------------------------------------ #
-    def _take_slot(self, dep: Deployment) -> tuple[bool, Optional[int]]:
-        """(has capacity, slot) at ``dep`` — deployments without a
-        registered engine always have capacity (pure routing mode)."""
-        eng = self.engines.get(dep.key)
-        if eng is None:
-            return True, None
-        slot = eng.admit_next()
-        return slot is not None, slot
-
-    def _settle(self, req: Request, dep: Deployment, slot: Optional[int],
-                t_now: float, predicted: float,
-                offload: bool) -> AdmissionDecision:
-        tel = self.router.tel(dep.key)
-        tel.on_arrival(t_now)
-        req.assigned_instance = dep.key
-        req.offloaded = offload
-        if offload:
-            tel.offloaded_fast += 1
-        return AdmissionDecision(req, OFFLOADED if offload else ADMITTED,
-                                 dep.key, slot=slot,
-                                 predicted_latency=predicted)
-
-    def _bind(self, req: Request, dep: Deployment, t_now: float,
-              predicted: float, *, offload: bool) -> AdmissionDecision:
-        """Try the engine slot at ``dep``; cascade upstream; reject when
-        every tier in the chain is saturated."""
-        got, slot = self._take_slot(dep)
-        if not got:
-            up = self.cluster.upstream_of(dep)
-            if up is not None and up.key != dep.key:
-                return self._bind(req, up, t_now, predicted, offload=True)
-            req.assigned_instance = None
-            return AdmissionDecision(req, REJECTED, None,
-                                     predicted_latency=predicted)
-        return self._settle(req, dep, slot, t_now, predicted, offload)
-
-    def flush(self, t_now: float) -> list[AdmissionDecision]:
-        """Close the window: one batched decision over all pending
-        requests, in arrival order, feeding engine slots."""
-        reqs, self._pending = self._pending, []
-        self._window_open = None
-        if not reqs:
-            return []
-        lam = self._lam_matrix(reqs, t_now)
-        slo = self._slo_rows(reqs)
-        mask = self._mask_rows(reqs)
-        idx, ok, g_best, g = self._score_select(lam, slo, mask)
-        self.flushes += 1
-        self.scored_pairs += lam.shape[0] * lam.shape[1]
-
-        out: list[AdmissionDecision] = []
-        for r, req in enumerate(reqs):
-            pred = float(g_best[r]) if g_best is not None \
-                else float(g[r, int(idx[r])])
-            if bool(ok[r]):
-                out.append(self._place_feasible(req, r, int(idx[r]), lam,
-                                                slo, mask, g, pred, t_now))
-            else:
-                # route_best semantics: nothing feasible -> offload to
-                # the upstream of the cheapest candidate IN THE REQUEST'S
-                # LANE (or that candidate itself at the top tier; in that
-                # case route_best leaves req.offloaded False — the
-                # request never left its tier).
-                lane = np.flatnonzero(mask[r])
-                ci = int(lane[np.argmin(self._cost[lane])])
-                cheapest = self._deps[ci]
-                up = self.cluster.upstream_of(cheapest) or cheapest
-                pred = float(np.min(g[r])) if g is not None else pred
-                out.append(self._bind(req, up, t_now, pred,
-                                      offload=up.key != cheapest.key))
-        return out
-
-    def _place_feasible(self, req: Request, r: int, primary: int,
-                        lam: np.ndarray, slo: np.ndarray, mask: np.ndarray,
-                        g: Optional[np.ndarray], pred: float,
-                        t_now: float) -> AdmissionDecision:
-        """Bind a feasible request: the §IV-B winner first; if its engine
-        is full, the next-best FEASIBLE candidates in latency order; then
-        the upstream tier; reject only when all of those are saturated.
-
-        The fallback order is computed lazily — only when the primary's
-        slot grab fails — so pure-routing windows (no engines) and
-        uncontended flushes never pay for it. The Pallas backend returns
-        no (R, I) score row; the overflow path re-scores the single row
-        through the vmap scorer (rare, and only when engines exist)."""
-        got, slot = self._take_slot(self._deps[primary])
-        if got:
-            return self._settle(req, self._deps[primary], slot, t_now,
-                                pred, offload=False)
-        g_row = g[r] if g is not None else np.asarray(score_instances_batch(
-            jnp.asarray(lam[r:r + 1]), jnp.asarray(self._alpha),
-            jnp.asarray(self._beta), jnp.asarray(self._gamma),
-            jnp.asarray(self._mu), jnp.asarray(self._n()),
-            jnp.asarray(self._rtt)))[0]
-        feas = np.flatnonzero((g_row <= slo[r]) & mask[r])
-        feas = feas[np.argsort(g_row[feas], kind="stable")]
-        tried = [primary]
-        for i in (int(i) for i in feas if int(i) != primary):
-            got, slot = self._take_slot(self._deps[i])
-            tried.append(i)
-            if got:
-                # any candidate here is SLO-feasible, so landing on an
-                # alternate is still an admission, not an offload.
-                return self._settle(req, self._deps[i], slot, t_now,
-                                    float(g_row[i]), offload=False)
-        up = self.cluster.upstream_of(self._deps[primary])
-        if up is not None and up.key not in \
-                (self._deps[i].key for i in tried):
-            return self._bind(req, up, t_now, pred, offload=True)
-        req.assigned_instance = None
-        return AdmissionDecision(req, REJECTED, None,
-                                 predicted_latency=pred)
+        return self.policy.score_select(lam, slo, mask)
 
 
-def route_window_scalar(batch_router: BatchRouter, reqs: list[Request],
+def route_window_scalar(batch_router: ControlPlane, reqs: list[Request],
                         t_now: float) -> tuple[np.ndarray, np.ndarray]:
-    """Scalar per-request reference for one admission window.
-
-    Scores each (request, candidate) pair with the float64 control-plane
-    predictor (``score_instance_scalar``) and selects with the pinned
-    float32 two-stage tie-break (``select_instance_scalar``) — the
-    decision-boundary contract in the module docstring. Reads telemetry
-    without mutating it. Returns (idx (R,), ok (R,)); used by the parity
-    tests and as the scalar baseline in ``bench_batch_router``.
-    """
-    br = batch_router
-    lam = br._lam_matrix(reqs, t_now)
-    slo = br._slo_rows(reqs)
-    mask = br._mask_rows(reqs)
-    deps = br._deps
-    idxs = np.zeros(len(reqs), np.int64)
-    oks = np.zeros(len(reqs), bool)
-    for r in range(len(reqs)):
-        g64 = [score_instance_scalar(float(lam[r, i]), d.alpha, d.beta,
-                                     d.gamma, d.mu, d.n_replicas,
-                                     d.instance.net_rtt)
-               for i, d in enumerate(deps)]
-        idxs[r], oks[r] = select_instance_scalar(
-            np.asarray(g64, np.float32), slo[r], br._cost, mask[r])
-    return idxs, oks
+    """Scalar per-request reference for one admission window (see
+    :meth:`repro.control.policy.RoutingPolicy.route_window_scalar`);
+    used by the parity tests and as the scalar baseline in
+    ``bench_batch_router``."""
+    return batch_router.policy.route_window_scalar(reqs, t_now)

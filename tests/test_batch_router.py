@@ -320,11 +320,33 @@ class TestPallasBackendParity:
                                  for d in br.flush(0.1)]
         assert outcomes["vmap"] == outcomes["pallas-interpret"]
 
-    def test_explicit_slo_falls_back_to_vmap(self):
-        cl = two_tier()
-        br = BatchRouter(cl, config=AdmissionConfig(
-            backend="pallas-interpret", max_batch=8))
-        for rq in mk_reqs(4, slo=5.0):
-            br.submit(rq, rq.arrival)
-        decs = br.flush(0.1)
-        assert len(decs) == 4   # fallback path still decides everything
+    def test_explicit_slo_routes_through_kernel_rows(self):
+        """Per-request SLOs are native kernel inputs now (the ROADMAP
+        vmap-fallback item): the kernel path must decide them, agree
+        with the vmap path, and actually run the kernel (flush counters
+        prove no fallback)."""
+        outcomes = {}
+        for backend in ("vmap", "pallas-interpret"):
+            cl = two_tier()
+            br = BatchRouter(cl, config=AdmissionConfig(
+                backend=backend, max_batch=8, block_r=4))
+            for rq in mk_reqs(4, slo=5.0):
+                br.submit(rq, rq.arrival)
+            decs = br.flush(0.1)
+            assert len(decs) == 4
+            outcomes[backend] = [(d.outcome, d.target_key) for d in decs]
+        assert outcomes["vmap"] == outcomes["pallas-interpret"]
+
+    def test_tight_explicit_slo_offloads_identically(self):
+        """An infeasible per-request SLO (slo ~ 0) exercises the
+        not-ok branch through the kernel path too."""
+        outcomes = {}
+        for backend in ("vmap", "pallas-interpret"):
+            cl = two_tier()
+            br = BatchRouter(cl, config=AdmissionConfig(
+                backend=backend, max_batch=8, block_r=4))
+            for rq in mk_reqs(4, slo=1e-6):
+                br.submit(rq, rq.arrival)
+            outcomes[backend] = [(d.outcome, d.target_key)
+                                 for d in br.flush(0.1)]
+        assert outcomes["vmap"] == outcomes["pallas-interpret"]

@@ -210,6 +210,40 @@ class TestRoutingScore:
         np.testing.assert_allclose(np.asarray(gg)[feas],
                                    np.asarray(rg)[feas], rtol=1e-4)
 
+    @pytest.mark.parametrize("i,r", [(3, 64), (6, 128)])
+    def test_matches_ref_per_request_slo_rows(self, i, r):
+        """(R, I) SLO rows (explicit req.slo / lane exclusions as -1)
+        route identically through the kernel and the ref oracle — the
+        ROADMAP open item that used to force a vmap fallback."""
+        lam, p, table = self._setup(i, r, seed=100 + i)
+        rng = np.random.default_rng(100 + i)
+        slo_rows = rng.uniform(0.5, 4.0, (r, i)).astype(np.float32)
+        # a sprinkling of lane exclusions: slo = -1 marks the candidate
+        # infeasible for that request (g >= 0 always)
+        slo_rows[rng.uniform(size=(r, i)) < 0.2] = -1.0
+        p = dict(p, slo=jnp.asarray(slo_rows))
+        gi, gg, gok = routing_score(lam, *p.values(), table, block_r=32,
+                                    interpret=True)
+        ri, rg, rok = ref.routing_score(lam, *p.values(), table)
+        assert bool(jnp.all(gok == rok))
+        feas = np.asarray(rok)
+        assert feas.any() and not feas.all()   # both regimes exercised
+        np.testing.assert_array_equal(np.asarray(gi)[feas],
+                                      np.asarray(ri)[feas])
+        np.testing.assert_allclose(np.asarray(gg)[feas],
+                                   np.asarray(rg)[feas], rtol=1e-4)
+
+    def test_per_request_rows_match_shared_slo(self):
+        """Broadcasting the shared (I,) budget into identical (R, I)
+        rows must not change any decision."""
+        lam, p, table = self._setup(4, 64, seed=3)
+        i1, g1, ok1 = ref.routing_score(lam, *p.values(), table)
+        rows = jnp.broadcast_to(p["slo"][None, :], (64, 4))
+        p2 = dict(p, slo=rows)
+        i2, g2, ok2 = ref.routing_score(lam, *p2.values(), table)
+        assert bool(jnp.all(ok1 == ok2)) and bool(jnp.all(i1 == i2))
+        np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+
     def test_matches_router_scalar_path(self):
         """Kernel ref agrees with the (numpy) router used by the
         simulator, up to the table-interpolation error."""
