@@ -28,7 +28,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import experiment_cluster
+from benchmarks.common import experiment_cluster, write_bench_json
 from repro.core.router import Router, RouterParams
 from repro.core.scheduler import QualityClass, Request
 from repro.serving.batch_router import (AdmissionConfig, BatchRouter,
@@ -117,6 +117,12 @@ def main(print_csv: bool = True, batches=(1, 8, 64, 256),
             ok = b64 >= 3.0 * base
             print(f"# batched@64 speedup {b64 / base:.1f}x vs scalar "
                   f"per-request loop (target >= 3x): {'PASS' if ok else 'FAIL'}")
+    write_bench_json("batch_router", {
+        "route_best_dps": out["route_best_dps"],
+        "scalar_np_dps": out["scalar_np_dps"],
+        "batch": {str(b): dps for b, dps in out["batch"].items()},
+        "pallas_interpret_dps": out.get("pallas_interpret_dps"),
+    })
     return out
 
 

@@ -1,0 +1,125 @@
+"""Policy x burst-scenario x window-width P99 matrix (ISSUE 4).
+
+  PYTHONPATH=src python -m benchmarks.bench_policy_matrix \
+      [--smoke] [--policies route_best,guarded_alg1,safetail] \
+      [--windows 0.05,0.2] [--seed 7]
+
+The pluggable policy layer lets the SAME discrete-event substrate answer
+the paper-adjacent question the ROADMAP kept open: which *decision rule*
+inside the control loop cuts the tail? Every registered strategy runs
+under every burst scenario of the window sweep —
+
+  * ``flash``  — flash-crowd step (PM-HPA scale-out race);
+  * ``mmpp``   — Markov-modulated Poisson (correlated burstiness);
+  * ``pareto`` — bounded-Pareto burst intensities (heavy-tailed spikes);
+
+at each admission-window width, reporting completions, P50/P99 latency,
+offload rate and duplicate rate (SafeTail redundancy). The generalised
+conservation contract — every arrival completes exactly once, plane
+outcomes ``admitted + offloaded + rejected == arrivals`` with duplicates
+ledgered separately — is ENFORCED in every cell; a violation aborts the
+bench. ``--smoke`` shrinks to one width and a short horizon for CI.
+
+Results are also written to ``BENCH_policy_matrix.json``
+(:func:`benchmarks.common.write_bench_json`) and uploaded as a CI
+artifact, so the policy P99 trajectory is captured per-PR.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.bench_window_sweep import scenarios
+from benchmarks.common import experiment_cluster, finite_row, \
+    write_bench_json
+from repro.core.simulator import ClusterSimulator, SimConfig
+
+SLO = 1.8
+POLICIES = ("route_best", "guarded_alg1", "safetail")
+WINDOWS = (0.05, 0.2)
+SMOKE_WINDOWS = (0.1,)
+
+
+def run_cell(arrivals: list, policy: str, window: float, seed: int,
+             redundancy: int = 2) -> dict:
+    sim = ClusterSimulator(
+        experiment_cluster(),
+        SimConfig(mode="laimr", seed=seed, slo=SLO, jitter_sigma=0.2,
+                  admission_window=window, policy=policy,
+                  redundancy=redundancy))
+    res = sim.run(arrivals, horizon=None)
+    n_arr = len(arrivals)
+    # generalised conservation, enforced per cell
+    if len(res.completed) != n_arr:
+        raise SystemExit(
+            f"policy matrix BROKE CONSERVATION: {policy}@{window}: "
+            f"{len(res.completed)} completed != {n_arr} arrivals")
+    sim.plane.check_conservation()
+    if sim.plane.decided != n_arr:
+        raise SystemExit(
+            f"policy matrix BROKE CONSERVATION: {policy}@{window}: "
+            f"{sim.plane.decided} decided != {n_arr} arrivals")
+    s = res.summary()
+    out = sim.plane.outcomes
+    return {
+        "n": int(s["n"]) if s["n"] == s["n"] else 0,
+        "p50": s["p50"], "p99": s["p99"],
+        "offload_rate": out["offloaded"] / n_arr,
+        "duplicate_rate": res.duplicates / n_arr,
+        "dup_cancelled": res.dup_cancelled,
+        "flushes": sim.plane.flushes,
+    }
+
+
+def main(print_csv: bool = True, smoke: bool = False, policies=None,
+         windows=None, seed: int = 7) -> dict:
+    horizon = 60.0 if smoke else 240.0
+    pols = tuple(policies) if policies is not None else POLICIES
+    widths = tuple(windows) if windows is not None else \
+        (SMOKE_WINDOWS if smoke else WINDOWS)
+    traces = scenarios(horizon, seed)
+    out: dict = {}
+    rows = []
+    if print_csv:
+        print("# policy x burst scenario x admission-window width "
+              "(laimr, unified control plane; conservation enforced "
+              "per cell)")
+        print("policy,scenario,window_s,n,p50_s,p99_s,offload_rate,"
+              "duplicate_rate,flushes")
+    for pol in pols:
+        for name, arr in traces.items():
+            for w in widths:
+                row = run_cell(arr, pol, w, seed)
+                out[(pol, name, w)] = row
+                rows.append({"policy": pol, "scenario": name,
+                             "window": w, **row})
+                if not finite_row(row, f"policy_matrix:{pol}:{name}@{w}"):
+                    continue
+                if print_csv:
+                    print(f"{pol},{name},{w},{row['n']},{row['p50']:.4f},"
+                          f"{row['p99']:.4f},{row['offload_rate']:.3f},"
+                          f"{row['duplicate_rate']:.3f},{row['flushes']}")
+    if print_csv:
+        print(f"# {len(pols)} policies x {len(traces)} bursty scenarios "
+              f"x {len(widths)} widths; conservation held in every cell")
+    write_bench_json("policy_matrix", {
+        "slo": SLO, "seed": seed, "horizon": horizon, "smoke": smoke,
+        "rows": rows})
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short horizon + one width (CI)")
+    ap.add_argument("--policies", default=None,
+                    help="comma-separated registry names")
+    ap.add_argument("--windows", default=None,
+                    help="comma-separated window widths in seconds")
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+    main(smoke=args.smoke,
+         policies=[p.strip() for p in args.policies.split(",")]
+         if args.policies else None,
+         windows=[float(w) for w in args.windows.split(",")]
+         if args.windows else None,
+         seed=args.seed)

@@ -26,7 +26,8 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import experiment_cluster, finite_row
+from benchmarks.common import experiment_cluster, finite_row, \
+    write_bench_json
 from repro.core.simulator import ClusterSimulator, SimConfig
 from repro.core.workload import (bounded_pareto_bursts, flash_crowd_arrivals,
                                  mmpp_arrivals)
@@ -93,6 +94,10 @@ def main(print_csv: bool = True, smoke: bool = False, windows=None,
     if print_csv:
         print(f"# {len(traces)} bursty scenarios x {len(widths)} widths; "
               "conservation held in every cell")
+    write_bench_json("window_sweep", {
+        "slo": SLO, "seed": seed, "horizon": horizon, "smoke": smoke,
+        "rows": [{"scenario": name, "window": w, **row}
+                 for (name, w), row in out.items()]})
     return out
 
 

@@ -55,6 +55,41 @@ def finite_latencies(lat: np.ndarray, label: str) -> bool:
     return True
 
 
+def write_bench_json(name: str, payload, outdir: str = None) -> str:
+    """Persist a benchmark's result rows as ``BENCH_<name>.json``.
+
+    CI uploads these as workflow artifacts so the perf trajectory is
+    captured per-PR; locally they land in ``results/bench`` (override
+    with ``BENCH_JSON_DIR``). ``payload`` must be JSON-serialisable —
+    benches pass a dict of metadata + a list of row dicts. Non-finite
+    floats (the NaN-percentile empty-trace case ``finite_row`` warns
+    about) are scrubbed to null: ``json.dump`` would otherwise emit
+    literal ``NaN``, which strict parsers reject wholesale.
+    """
+    import json
+    import os
+
+    def scrub(v):
+        if isinstance(v, dict):
+            return {k: scrub(x) for k, x in v.items()}
+        if isinstance(v, (list, tuple)):
+            return [scrub(x) for x in v]
+        if isinstance(v, (float, np.floating)):
+            return float(v) if np.isfinite(v) else None
+        if isinstance(v, (int, np.integer)):
+            return int(v)
+        return v
+
+    outdir = outdir or os.environ.get("BENCH_JSON_DIR", "results/bench")
+    os.makedirs(outdir, exist_ok=True)
+    path = os.path.join(outdir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(scrub(payload), f, indent=2, sort_keys=True,
+                  allow_nan=False, default=float)
+    print(f"# wrote {path}")
+    return path
+
+
 def experiment_cluster(n_edge: int = 3, edge_max: int = 6,
                        n_cloud: int = 1, cloud_max: int = 2) -> Cluster:
     edge = dataclasses.replace(PI4_EDGE, net_rtt=1.0)

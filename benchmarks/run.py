@@ -13,8 +13,8 @@ import os
 import time
 
 ALL = ("fig2", "table4", "fig3", "fig4", "table6", "router_us",
-       "batch_router", "window_sweep", "capacity", "sim_throughput",
-       "roofline")
+       "batch_router", "window_sweep", "policy_matrix", "capacity",
+       "sim_throughput", "roofline")
 
 
 def main() -> None:
@@ -43,6 +43,8 @@ def main() -> None:
                 from benchmarks import bench_batch_router as m
             elif name == "window_sweep":
                 from benchmarks import bench_window_sweep as m
+            elif name == "policy_matrix":
+                from benchmarks import bench_policy_matrix as m
             elif name == "capacity":
                 from benchmarks import bench_capacity as m
             elif name == "sim_throughput":

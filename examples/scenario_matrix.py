@@ -1,6 +1,7 @@
 """Scenario matrix: LA-IMR vs the reactive baseline across arrival regimes.
 
-  PYTHONPATH=src python examples/scenario_matrix.py [--horizon 240]
+  PYTHONPATH=src python examples/scenario_matrix.py [--horizon 240] \
+      [--policy guarded_alg1] [--window 0.1]
 
 Runs the same two-tier cluster under every generator in the workload
 scenario matrix — the paper's Poisson/ramp/bounded-Pareto regimes plus
@@ -8,6 +9,11 @@ the diurnal, MMPP, flash-crowd and multi-model mixes motivated by
 SafeTail (arXiv:2408.17171) and hybrid autoscaling (arXiv:2512.14290) —
 and prints per-scenario P50/P99 and offload counts for both controller
 modes. Every trace is seeded: rerunning reproduces the table exactly.
+
+``--policy`` (with ``--window`` > 0) routes the laimr mode through the
+unified control plane's admission windows using any strategy from the
+:mod:`repro.control.policies` registry; the default keeps the scalar
+per-arrival Algorithm-1 path (window 0).
 """
 from __future__ import annotations
 
@@ -68,8 +74,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--horizon", type=float, default=240.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policy", default="route_best",
+                    help="routing strategy for the windowed laimr mode "
+                         "(route_best / guarded_alg1 / safetail)")
+    ap.add_argument("--window", type=float, default=0.0,
+                    help="admission-window width in seconds; 0 keeps "
+                         "the scalar per-arrival Algorithm-1 path")
     args = ap.parse_args()
 
+    lane = args.policy if args.window > 0 else "scalar alg1"
+    print(f"# laimr mode: {lane} (window={args.window})")
     print(f"{'scenario':<9} {'n':>6}  "
           f"{'laimr p50/p99':>16}  {'base p50/p99':>16}  "
           f"{'offl':>5}  {'p99 delta':>9}")
@@ -77,8 +91,11 @@ def main() -> None:
     for name, (make_cluster, trace) in scenarios.items():
         row = {}
         for mode in ("laimr", "baseline"):
-            sim = ClusterSimulator(make_cluster(),
-                                   SimConfig(mode=mode, seed=args.seed))
+            sim = ClusterSimulator(
+                make_cluster(),
+                SimConfig(mode=mode, seed=args.seed,
+                          admission_window=args.window,
+                          policy=args.policy))
             res = sim.run(trace)
             row[mode] = (res.summary(), res.offload_fast)
         (sl, offl), (sb, _) = row["laimr"], row["baseline"]

@@ -3,8 +3,15 @@ bursty robot-fleet trace, with a REAL (reduced) transformer served by a
 slot-batched engine for the edge tier — the data plane the catalogue's
 latency numbers describe.
 
-  PYTHONPATH=src python examples/serve_cluster.py
+  PYTHONPATH=src python examples/serve_cluster.py \
+      [--policy route_best|guarded_alg1|safetail]
+
+``--policy`` picks the routing strategy (ISSUE 4 policy registry) for
+BOTH adapters below: the live BatchRouter/FleetPlane admission loop and
+the windowed discrete-event simulation — one policy object semantics,
+three execution substrates.
 """
+import argparse
 import os
 import sys
 import time
@@ -21,9 +28,16 @@ from repro.configs.base import get_config, reduced
 from repro.core import SimConfig, ClusterSimulator, robot_trace
 from repro.core.scheduler import QualityClass, Request
 from repro.models import model
-from repro.serving import AdmissionConfig, BatchRouter, SlotBank
+from repro.serving import (AdmissionConfig, BatchRouter, FleetPlane,
+                           SlotBank)
 from repro.serving.engine import ServingEngine
 from benchmarks.common import experiment_cluster
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--policy", default="route_best",
+                help="routing strategy from the repro.control.policies "
+                     "registry (route_best / guarded_alg1 / safetail)")
+args = ap.parse_args()
 
 # --- data plane: measure a real reduced-model decode step ------------- #
 cfg = reduced(get_config("stablelm_3b"))
@@ -47,7 +61,7 @@ cluster = experiment_cluster()
 brouter = BatchRouter(
     cluster,
     engines={"yolov5m@pi4-edge": engine, "yolov5m@cloud": SlotBank(16)},
-    config=AdmissionConfig(window=0.02, max_batch=8))
+    config=AdmissionConfig(window=0.02, max_batch=8, policy=args.policy))
 decisions = []
 t = 0.0
 for k in range(24):
@@ -58,10 +72,50 @@ for k in range(24):
     if got:
         decisions.extend(got)
 decisions.extend(brouter.flush(t + 0.1))
+brouter.check_conservation()
 tally = Counter(d.outcome for d in decisions)
-print(f"[admission] 24 requests in {brouter.flushes} batched flushes "
-      f"({brouter.scored_pairs} scored pairs): {dict(tally)}; "
-      f"edge slots in use: {engine.slots - engine.n_free()}/{engine.slots}")
+print(f"[admission] 24 requests via {args.policy!r} in {brouter.flushes} "
+      f"batched flushes ({brouter.scored_pairs} scored pairs): "
+      f"{dict(tally)}; edge slots in use: "
+      f"{engine.slots - engine.n_free()}/{engine.slots}")
+
+# completion pass — the part a serving loop owes the plane: when a
+# request's first copy finishes, first_completion() cancels its
+# redundancy group (releasing the losers' slots exactly once — under
+# --policy safetail skipping this leaks duplicate slots), then the
+# caller frees the winner's own slot.
+cancelled = 0
+for d in decisions:
+    if d.slot is None or d.dup_of is not None:
+        continue
+    cancelled += len(brouter.first_completion(d.req.req_id))
+    brouter.engines[d.target_key].release(d.slot)
+print(f"[complete]  all admissions completed: {cancelled} duplicate(s) "
+      f"cancelled, edge slots back to {engine.n_free()}/{engine.slots}")
+
+# --- fleet plane: the SAME policy fronts multiple pods per tier ------- #
+# (ISSUE 4) slot-aware spillover: pod 0 fills first, overflow spills to
+# pod 1, and the policy object never learns pods exist.
+fleet = FleetPlane(
+    experiment_cluster(),
+    pods={"yolov5m@pi4-edge": [SlotBank(4), SlotBank(4)],
+          "yolov5m@cloud": [SlotBank(8), SlotBank(8)]},
+    policy=args.policy,
+    config=AdmissionConfig(window=0.02, max_batch=8))
+t = 0.0
+fdecs = []
+for k in range(24):
+    t += 0.002
+    got = fleet.submit(Request(model="yolov5m",
+                               quality=QualityClass.BALANCED,
+                               arrival=t), t)
+    if got:
+        fdecs.extend(got)
+fdecs.extend(fleet.flush(t + 0.1))
+fleet.check_conservation()
+print(f"[fleet]     24 requests across pods: "
+      f"{dict(Counter(d.outcome for d in fdecs))}; occupancy "
+      f"{fleet.fleet_stats()}")
 
 # --- control plane: 20-robot fleet, bursty capture -------------------- #
 arrivals = robot_trace(n_robots=8, period=2.0, horizon=240.0,
@@ -77,17 +131,19 @@ for mode in ("laimr", "baseline"):
           f"max={s['max']:.2f}s offloads={res.offload_fast} "
           f"scale_events={len(res.scale_events)}")
 
-# --- unified control plane (ISSUE 3): the SAME vectorised policy the
-# BatchRouter above used now drives the discrete-event simulator —
-# arrivals accumulate into admission windows and each window is one
-# batched score+select through repro.control.ControlPlane.
+# --- unified control plane (ISSUE 3/4): the SAME policy the adapters
+# above used now drives the discrete-event simulator — arrivals
+# accumulate into admission windows and each window is one batched
+# decide() through repro.control.ControlPlane.
 sim = ClusterSimulator(experiment_cluster(),
                        SimConfig(mode="laimr", seed=1, slo=1.8,
                                  jitter_sigma=0.2,
-                                 admission_window=0.1))
+                                 admission_window=0.1,
+                                 policy=args.policy))
 res = sim.run(arrivals, horizon=400.0)
 s = res.summary()
-print(f"[windowed] p95={s['p95']:.2f}s p99={s['p99']:.2f}s "
+extra = f" duplicates={res.duplicates}" if res.duplicates else ""
+print(f"[windowed:{args.policy}] p95={s['p95']:.2f}s p99={s['p99']:.2f}s "
       f"offloads={res.offload_fast} in {sim.plane.flushes} flushes "
-      f"({sim.plane.scored_pairs} scored pairs) — one control plane, "
-      "two adapters")
+      f"({sim.plane.scored_pairs} scored pairs){extra} — one control "
+      "plane, three adapters")

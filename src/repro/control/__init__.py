@@ -1,28 +1,45 @@
-"""Unified LA-IMR control plane (ISSUE 3): one routing/admission core
-driving both the live serving engine and the discrete-event simulator.
+"""Unified LA-IMR control plane: one routing/admission core driving the
+live serving engine, the multi-pod fleet plane, and the discrete-event
+simulator (ISSUE 3; policy-strategy layer ISSUE 4).
 
 Layers:
 
-* :mod:`repro.control.policy`    — batched scoring/selection over the
-  candidate table (vmap / Pallas), f32-pinned decision boundaries, the
-  float64 scalar reference loop;
+* :mod:`repro.control.policies`  — the pluggable strategy registry
+  (``route_best`` / ``guarded_alg1`` / ``safetail``) over a shared base:
+  batched scoring/selection on the candidate table (vmap / Pallas),
+  f32-pinned decision boundaries, the float64 scalar reference loop;
 * :mod:`repro.control.admission` — window accumulation with
-  quality-class priority ordering, outcomes, slot providers;
+  quality-class priority ordering, outcomes (duplicates tracked
+  separately), hardened slot providers;
 * :mod:`repro.control.plane`     — :class:`ControlPlane`, composing the
-  two with the engine-slot binding cascade and the PM-HPA tick refresh.
+  two with the engine-slot binding cascade, the generalised conservation
+  contract, first-completion cancellation and the PM-HPA tick refresh;
+* :mod:`repro.control.fleet`     — :class:`FleetPlane` /
+  :class:`PodGroup`: several pods per deployment behind the same plane.
 
 Adapters: ``repro.serving.batch_router.BatchRouter`` (live engine) and
 ``repro.core.simulator.ClusterSimulator`` with
-``SimConfig.admission_window > 0`` (discrete-event simulation).
+``SimConfig.admission_window > 0`` (discrete-event simulation;
+``SimConfig.policy`` picks the strategy).
 """
-from repro.control.admission import (ADMITTED, OFFLOADED, REJECTED,
-                                     AdmissionConfig, AdmissionDecision,
-                                     AdmissionQueue, SlotBank)
+from repro.control.admission import (ADMITTED, DUPLICATE, OFFLOADED,
+                                     REJECTED, AdmissionConfig,
+                                     AdmissionDecision, AdmissionQueue,
+                                     SlotBank)
+from repro.control.fleet import FleetPlane, PodGroup
 from repro.control.plane import ControlPlane, hpa_refresh
-from repro.control.policy import CandidateTable, RoutingPolicy
+from repro.control.policies import (POLICIES, GuardedAlgorithm1Policy,
+                                    RouteBestPolicy, RoutingPolicy,
+                                    RoutingPolicyBase,
+                                    SafeTailRedundantPolicy, WindowDecision,
+                                    get_policy, make_policy)
+from repro.control.policies.base import CandidateTable
 
 __all__ = [
-    "ADMITTED", "OFFLOADED", "REJECTED", "AdmissionConfig",
+    "ADMITTED", "DUPLICATE", "OFFLOADED", "REJECTED", "AdmissionConfig",
     "AdmissionDecision", "AdmissionQueue", "SlotBank", "ControlPlane",
-    "hpa_refresh", "CandidateTable", "RoutingPolicy",
+    "FleetPlane", "PodGroup", "hpa_refresh", "CandidateTable",
+    "POLICIES", "GuardedAlgorithm1Policy", "RouteBestPolicy",
+    "RoutingPolicy", "RoutingPolicyBase", "SafeTailRedundantPolicy",
+    "WindowDecision", "get_policy", "make_policy",
 ]

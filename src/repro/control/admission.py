@@ -16,19 +16,25 @@ semantics, which :class:`AdmissionQueue` reuses verbatim as its pending
 buffer. Within a single-quality window this reduces to arrival order
 (stable), so the PR-2 serving behaviour is unchanged.
 
-Conservation contract (property-tested)
----------------------------------------
-Every submitted request resolves to exactly one outcome:
+Conservation contract (property-tested, generalised for redundancy)
+-------------------------------------------------------------------
+Every submitted request resolves to exactly one *primary* outcome:
 
 * ``ADMITTED``  — bound to a free slot of its target's engine (or to the
   target itself when no engine is registered: pure routing mode);
 * ``OFFLOADED`` — sent to the upstream tier, either because no candidate
-  was SLO-feasible (``route_best`` semantics) or because the feasible
+  was SLO-feasible (``route_best`` semantics), because the policy's
+  per-request guard fired (``guarded_alg1``), or because the feasible
   target's engine was full;
 * ``REJECTED``  — no feasible engine slot anywhere.
 
 ``admitted + offloaded + rejected == arrivals`` and a flush never admits
-past the registered engines' free slots.
+past the registered engines' free slots. Redundant-dispatch policies
+(``safetail``) additionally emit ``DUPLICATE`` decisions — opportunistic
+extra copies that occupy real slots but are accounted SEPARATELY: they
+never enter the primary triple, and first-completion cancellation
+releases their slots (double release is a loud error, never silent
+slot-count drift).
 """
 from __future__ import annotations
 
@@ -42,6 +48,7 @@ from repro.core.scheduler import MultiQueueScheduler, Request
 ADMITTED = "admitted"
 OFFLOADED = "offloaded"
 REJECTED = "rejected"
+DUPLICATE = "duplicate"
 
 
 @dataclasses.dataclass
@@ -59,6 +66,12 @@ class AdmissionConfig:
     and lane masks natively (folded into the kernel's (R, I) SLO input),
     so explicit ``req.slo`` / restricted lanes no longer force a vmap
     fallback.
+
+    ``policy`` names the routing strategy in the
+    :mod:`repro.control.policies` registry (``route_best`` /
+    ``guarded_alg1`` / ``safetail``); ``redundancy`` is the TOTAL copy
+    count (primary included) a redundant-dispatch policy may fan a
+    request out to — single-dispatch policies ignore it.
     """
 
     window: float = 0.05
@@ -66,15 +79,20 @@ class AdmissionConfig:
     backend: str = "vmap"
     block_r: int = 256
     erlang_table_size: int = 65
+    policy: str = "route_best"
+    redundancy: int = 2
 
 
 @dataclasses.dataclass
 class AdmissionDecision:
     req: Request
-    outcome: str                    # ADMITTED | OFFLOADED | REJECTED
-    target_key: Optional[str]       # deployment the request was bound to
-    slot: Optional[int] = None      # engine slot (None in pure routing mode)
+    outcome: str                # ADMITTED | OFFLOADED | REJECTED | DUPLICATE
+    target_key: Optional[str]   # deployment the request was bound to
+    slot: Optional[int] = None  # engine slot (None in pure routing mode)
     predicted_latency: float = 0.0
+    # redundant dispatch: req_id of the primary this decision duplicates
+    # (DUPLICATE outcomes only; the primary's own decision has None)
+    dup_of: Optional[int] = None
 
 
 class AdmissionQueue:
@@ -126,6 +144,12 @@ class SlotBank:
     gives the same interface backed by actual decode slots, while this
     class models replica capacity in simulations and property tests
     without instantiating model parameters.
+
+    Releases are HARDENED for redundant dispatch: first-completion
+    cancellation means a slot can have two would-be releasers (the
+    completing copy's owner and the cancellation path), and silently
+    tolerating the second release would drift the free-slot count one
+    admission high forever. Double release raises instead.
     """
 
     def __init__(self, slots: int):
@@ -147,4 +171,12 @@ class SlotBank:
         return None
 
     def release(self, slot: int) -> None:
+        if not 0 <= slot < self.slots:
+            raise IndexError(f"SlotBank.release({slot}): no such slot "
+                             f"(0..{self.slots - 1})")
+        if not self.active[slot]:
+            raise RuntimeError(
+                f"SlotBank.release({slot}): slot already free — double "
+                "release (e.g. of a cancelled duplicate) would silently "
+                "drift the slot count")
         self.active[slot] = False

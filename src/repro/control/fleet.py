@@ -1,0 +1,97 @@
+"""Multi-pod fleet plane: one policy object fronting several pods.
+
+The ROADMAP's multi-pod open item: the sharding rules existed but
+nothing fronted SEVERAL ``ServingEngine`` pods per deployment with one
+admission loop. :class:`PodGroup` aggregates any number of slot
+providers (``ServingEngine``, :class:`~repro.control.admission.SlotBank`,
+mixed) behind the exact single-engine admission surface
+(``free_slots`` / ``n_free`` / ``admit_next`` / ``release``), so
+:class:`FleetPlane` is a *thin* :class:`~repro.control.plane.ControlPlane`
+subclass — the same :mod:`repro.control.policies` strategy object drives
+single-pod serving, multi-pod serving, and the discrete-event simulator
+without knowing pods exist.
+
+Spillover is slot-aware and deterministic: ``admit_next`` fills pods in
+declaration order, spilling to the next pod only when the current one is
+full (first-fit keeps decode batches dense on the leading pods, which is
+what continuous batching wants). Slot ids are globalised —
+``global = pod_base + local`` with cumulative bases — so the plane's
+binding cascade, duplicate cancellation and the hardened double-release
+guard all work unchanged across pods.
+"""
+from __future__ import annotations
+
+import bisect
+from typing import Optional, Sequence
+
+from repro.control.plane import ControlPlane
+
+
+class PodGroup:
+    """Several slot providers behind one engine surface (global slots)."""
+
+    def __init__(self, pods: Sequence):
+        if not pods:
+            raise ValueError("PodGroup needs at least one pod")
+        self.pods = list(pods)
+        self.bases: list[int] = []
+        total = 0
+        for p in self.pods:
+            self.bases.append(total)
+            total += int(p.slots)
+        self.slots = total      # mirrors the single-engine surface
+
+    # ---- surface shared with ServingEngine / SlotBank ----------------- #
+    def n_free(self) -> int:
+        return sum(p.n_free() for p in self.pods)
+
+    def free_slots(self) -> list[int]:
+        return [base + s for p, base in zip(self.pods, self.bases)
+                for s in p.free_slots()]
+
+    def admit_next(self, first_token: int = 0,
+                   start_pos: int = 0) -> Optional[int]:
+        """First-fit spillover: the first pod with a free slot wins."""
+        for p, base in zip(self.pods, self.bases):
+            slot = p.admit_next(first_token, start_pos)
+            if slot is not None:
+                return base + slot
+        return None
+
+    def release(self, slot: int) -> None:
+        pod_i, local = self.locate(slot)
+        self.pods[pod_i].release(local)
+
+    # ---- pod-aware helpers -------------------------------------------- #
+    def locate(self, slot: int) -> tuple[int, int]:
+        """Global slot id -> (pod index, local slot id)."""
+        if not 0 <= slot < self.slots:
+            raise IndexError(f"PodGroup slot {slot} out of range "
+                             f"(0..{self.slots - 1})")
+        pod_i = bisect.bisect_right(self.bases, slot) - 1
+        return pod_i, slot - self.bases[pod_i]
+
+    def stats(self) -> list[tuple[int, int]]:
+        """Per-pod (slots in use, slots total) — spillover telemetry."""
+        return [(p.slots - p.n_free(), p.slots) for p in self.pods]
+
+
+class FleetPlane(ControlPlane):
+    """A :class:`ControlPlane` whose deployments are backed by pod
+    FLEETS: ``pods`` maps deployment keys to lists of slot providers,
+    each list wrapped in a :class:`PodGroup`. Everything else — policy,
+    admission windows, conservation, duplicates — is the shared plane.
+    """
+
+    def __init__(self, cluster, pods: dict[str, Sequence], **kwargs):
+        if "engines" in kwargs:
+            raise TypeError("FleetPlane takes `pods`, not `engines`")
+        groups = {key: PodGroup(pod_list) for key, pod_list in pods.items()}
+        super().__init__(cluster, engines=groups, **kwargs)
+
+    def pod_group(self, dep_key: str) -> PodGroup:
+        return self.engines[dep_key]
+
+    def fleet_stats(self) -> dict[str, list[tuple[int, int]]]:
+        """deployment key -> per-pod (in use, total) occupancy."""
+        return {key: grp.stats() for key, grp in self.engines.items()}

@@ -1,23 +1,31 @@
-"""The unified LA-IMR control plane (ISSUE 3 tentpole).
+"""The unified LA-IMR control plane (ISSUE 3; policy layer ISSUE 4).
 
 :class:`ControlPlane` composes the shared decision core:
 
-* :class:`~repro.control.policy.RoutingPolicy` — batched scoring +
-  selection over the (request x candidate) matrix (one vmap/Pallas call
-  per window);
+* a :class:`~repro.control.policies.base.RoutingPolicyBase` strategy —
+  batched scoring + selection over the (request x candidate) matrix (one
+  vmap/Pallas call per window). Which *decision rule* runs is pluggable
+  (``route_best`` / ``guarded_alg1`` / ``safetail`` — the
+  :mod:`repro.control.policies` registry); the plane owns everything
+  strategy-independent;
 * :class:`~repro.control.admission.AdmissionQueue` — window
   accumulation with quality-class priority ordering;
 * the engine-slot binding cascade (winner -> feasible alternates ->
-  upstream tier -> reject) with the conservation contract
-  ``admitted + offloaded + rejected == arrivals``;
+  upstream tier -> reject) with the generalised conservation contract
+  ``admitted + offloaded + rejected == arrivals`` (``duplicate``
+  outcomes from redundant-dispatch policies are accounted separately —
+  see :meth:`check_conservation`);
+* first-completion cancellation for redundant dispatch
+  (:meth:`first_completion`) — the losers' engine slots are released
+  exactly once (double release is a loud error in the slot providers);
 * the PM-HPA coupling: :func:`hpa_refresh` pairs one batched telemetry
   decay/export with each reconcile tick.
 
-Both the live serving engine (``repro.serving.batch_router.BatchRouter``
-is a back-compat alias over this class) and the discrete-event simulator
-(``SimConfig.admission_window > 0``) are thin adapters over this one
-object — the paper's "one calibrated model drives routing AND capacity
-planning" made literal.
+The live serving engine (``repro.serving.batch_router.BatchRouter``),
+the multi-pod :class:`~repro.control.fleet.FleetPlane`, and the
+discrete-event simulator (``SimConfig.admission_window > 0``) are thin
+adapters over this one object — the paper's "one calibrated model
+drives routing AND capacity planning" made literal.
 """
 from __future__ import annotations
 
@@ -25,10 +33,9 @@ from typing import Optional
 
 import numpy as np
 
-from repro.control.admission import (ADMITTED, OFFLOADED, REJECTED,
-                                     AdmissionConfig, AdmissionDecision,
-                                     AdmissionQueue)
-from repro.control.policy import RoutingPolicy
+from repro.control.admission import (ADMITTED, DUPLICATE, OFFLOADED,
+                                     REJECTED, AdmissionConfig,
+                                     AdmissionDecision, AdmissionQueue)
 from repro.core.autoscaler import PMHPA
 from repro.core.catalogue import Cluster, Deployment
 from repro.core.router import Router, RouterParams
@@ -46,31 +53,49 @@ def hpa_refresh(router: Router, pmhpa: PMHPA, t_now: float) -> list[int]:
 
 
 class ControlPlane:
-    """Admission-window batcher over the LA-IMR routing decision.
+    """Admission-window batcher over a pluggable LA-IMR routing policy.
 
     Composes a :class:`Router` (telemetry, SLO budgets, upstream
     topology) and replaces its per-request ``route_best`` dispatch with
-    one batched scoring + selection call per window. ``engines`` maps
-    deployment keys to slot providers
-    (:class:`~repro.control.admission.SlotBank` or a real
-    ``ServingEngine``); deployments without an engine admit without slot
-    accounting (pure routing mode — the discrete-event simulator runs
-    this way, modelling queueing in its own replica pools).
+    one batched policy decision per window. ``engines`` maps deployment
+    keys to slot providers
+    (:class:`~repro.control.admission.SlotBank`, a real
+    ``ServingEngine``, or a :class:`~repro.control.fleet.PodGroup`
+    fronting several pods); deployments without an engine admit without
+    slot accounting (pure routing mode — the discrete-event simulator
+    runs this way, modelling queueing in its own replica pools).
+
+    ``policy`` picks the strategy: a registry name, a strategy class, an
+    instance, or None for ``config.policy`` (default ``route_best``).
     """
 
     def __init__(self, cluster: Cluster,
                  params: Optional[RouterParams] = None,
                  engines: Optional[dict] = None,
                  config: Optional[AdmissionConfig] = None,
-                 router: Optional[Router] = None):
+                 router: Optional[Router] = None,
+                 policy=None):
+        # imported here: repro.control.policies imports admission, and
+        # module-level cross-imports would cycle through __init__.
+        from repro.control.policies import make_policy
         self.cluster = cluster
         self.router = router or Router(cluster, params or RouterParams())
         self.cfg = config or AdmissionConfig()
         self.engines = engines if engines is not None else {}
-        self.policy = RoutingPolicy(cluster, self.router, self.cfg)
+        self.policy = make_policy(policy, cluster, self.router, self.cfg)
         self.queue = AdmissionQueue(self.cfg.window, self.cfg.max_batch)
         self.flushes = 0
         self.scored_pairs = 0
+        # generalised conservation ledger (see check_conservation)
+        self.decided = 0
+        self.outcomes = {ADMITTED: 0, OFFLOADED: 0, REJECTED: 0,
+                         DUPLICATE: 0}
+        self.dup_dispatched = 0
+        self.dup_cancelled = 0
+        # redundant-dispatch groups with live engine slots, keyed by the
+        # primary's req_id; _dup_member maps every copy's req_id to it.
+        self._dup_groups: dict[int, list[AdmissionDecision]] = {}
+        self._dup_member: dict[int, int] = {}
 
     # ------------------------------------------------------------------ #
     def pending(self) -> int:
@@ -86,6 +111,21 @@ class ControlPlane:
         if self.queue.push(req, t_now):
             return self.flush(t_now)
         return None
+
+    def check_conservation(self) -> None:
+        """Assert the generalised conservation contract over everything
+        this plane has decided: every drained request got exactly one
+        primary outcome, with duplicates ledgered separately."""
+        triple = (self.outcomes[ADMITTED] + self.outcomes[OFFLOADED]
+                  + self.outcomes[REJECTED])
+        if triple != self.decided:
+            raise AssertionError(
+                f"conservation broken: admitted+offloaded+rejected == "
+                f"{triple} != {self.decided} decided ({self.outcomes})")
+        if self.outcomes[DUPLICATE] != self.dup_dispatched:
+            raise AssertionError(
+                f"duplicate ledger drifted: {self.outcomes[DUPLICATE]} "
+                f"outcomes != {self.dup_dispatched} dispatched")
 
     # ------------------------------------------------------------------ #
     def _take_slot(self, dep: Deployment) -> tuple[bool, Optional[int]]:
@@ -125,41 +165,42 @@ class ControlPlane:
         return self._settle(req, dep, slot, t_now, predicted, offload)
 
     def flush(self, t_now: float) -> list[AdmissionDecision]:
-        """Close the window: one batched decision over all pending
-        requests — LOW_LATENCY lane first, FIFO within each lane —
-        feeding engine slots."""
+        """Close the window: one batched policy decision over all
+        pending requests — LOW_LATENCY lane first, FIFO within each
+        lane — feeding engine slots. Redundant-dispatch policies append
+        DUPLICATE decisions directly after their primaries."""
         reqs = self.queue.drain()
         if not reqs:
             return []
         pol = self.policy
-        lam = pol.lam_matrix(reqs, t_now)
-        slo = pol.slo_rows(reqs)
-        mask = pol.mask_rows(reqs)
-        idx, ok, g_best, g = pol.score_select(lam, slo, mask)
+        dec = pol.decide(reqs, t_now)
         self.flushes += 1
-        self.scored_pairs += lam.shape[0] * lam.shape[1]
+        self.scored_pairs += dec.lam.shape[0] * dec.lam.shape[1]
+        self.decided += len(reqs)
 
-        deps, cost = pol.deps, pol.table.cost
+        deps = pol.deps
         out: list[AdmissionDecision] = []
         for r, req in enumerate(reqs):
-            pred = float(g_best[r]) if g_best is not None \
-                else float(g[r, int(idx[r])])
-            if bool(ok[r]):
-                out.append(self._place_feasible(req, r, int(idx[r]), lam,
-                                                slo, mask, g, pred, t_now))
+            pred = float(dec.predicted[r])
+            if bool(dec.feasible[r]):
+                d = self._place_feasible(req, r, int(dec.primary[r]),
+                                         dec.lam, dec.slo, dec.mask,
+                                         dec.g, pred, t_now)
             else:
-                # route_best semantics: nothing feasible -> offload to
-                # the upstream of the cheapest candidate IN THE REQUEST'S
-                # LANE (or that candidate itself at the top tier; in that
-                # case route_best leaves req.offloaded False — the
-                # request never left its tier).
-                lane = np.flatnonzero(mask[r])
-                ci = int(lane[np.argmin(cost[lane])])
-                cheapest = deps[ci]
-                up = self.cluster.upstream_of(cheapest) or cheapest
-                pred = float(np.min(g[r])) if g is not None else pred
-                out.append(self._bind(req, up, t_now, pred,
-                                      offload=up.key != cheapest.key))
+                d = self._bind(req, deps[int(dec.primary[r])], t_now,
+                               pred, offload=bool(dec.offload[r]))
+            out.append(d)
+            self.outcomes[d.outcome] += 1
+            dups = dec.dup_row(r)
+            if dups and d.outcome != REJECTED:
+                placed = self._dispatch_duplicates(req, d, dups,
+                                                   dec.g, r, t_now)
+                # ledgered at EMISSION; _dispatch_duplicates counts at
+                # the slot grab — check_conservation compares the two
+                # independent tallies.
+                for d2 in placed:
+                    self.outcomes[d2.outcome] += 1
+                out.extend(placed)
         return out
 
     def _place_feasible(self, req: Request, r: int, primary: int,
@@ -199,3 +240,74 @@ class ControlPlane:
         req.assigned_instance = None
         return AdmissionDecision(req, REJECTED, None,
                                  predicted_latency=pred)
+
+    # ---------------- redundant dispatch (safetail) -------------------- #
+    def _dispatch_duplicates(self, req: Request,
+                             primary_dec: AdmissionDecision,
+                             dup_idx: tuple, g: Optional[np.ndarray],
+                             r: int, t_now: float
+                             ) -> list[AdmissionDecision]:
+        """Opportunistically place redundant copies: a duplicate takes a
+        slot only if one is free at its target (no cascade — losing a
+        duplicate costs nothing), registers real-slot groups for
+        first-completion cancellation, and adds its arrival to the
+        target's telemetry (duplicate load is real load)."""
+        deps = self.policy.deps
+        group: list[AdmissionDecision] = []
+        for j in dup_idx:
+            dep = deps[int(j)]
+            if dep.key == primary_dec.target_key:
+                continue        # never duplicate onto the primary's pool
+            got, slot = self._take_slot(dep)
+            if not got:
+                continue
+            clone = Request(model=req.model, quality=req.quality,
+                            arrival=req.arrival, slo=req.slo,
+                            accuracy_req=req.accuracy_req)
+            clone.assigned_instance = dep.key
+            self.router.tel(dep.key).on_arrival(t_now)
+            pred = float(g[r, int(j)]) if g is not None else 0.0
+            group.append(AdmissionDecision(clone, DUPLICATE, dep.key,
+                                           slot=slot,
+                                           predicted_latency=pred,
+                                           dup_of=req.req_id))
+        if not group:
+            return group
+        self.dup_dispatched += len(group)
+        members = [primary_dec] + group
+        if any(d.slot is not None for d in members):
+            self._dup_groups[req.req_id] = members
+            for d in members:
+                self._dup_member[d.req.req_id] = req.req_id
+        return group
+
+    def first_completion(self, req_id: int) -> list[AdmissionDecision]:
+        """First-completion cancellation: the copy with ``req_id`` won
+        its redundancy group — release every OTHER copy's engine slot
+        (exactly once; the winner's slot stays with its caller) and
+        return the cancelled decisions. A req_id without a live group is
+        a no-op (single-dispatch policies, pure routing mode).
+
+        Serving adapters MUST call this when a request's first copy
+        completes (the simulator's event loop does it via duplicate
+        groups): under a redundant policy, skipping it leaks the
+        losers' engine slots and their group entries for the lifetime
+        of the plane. ``examples/serve_cluster.py`` shows the
+        completion pass."""
+        gid = self._dup_member.get(req_id)
+        if gid is None:
+            return []
+        members = self._dup_groups.pop(gid)
+        cancelled: list[AdmissionDecision] = []
+        for d in members:
+            self._dup_member.pop(d.req.req_id, None)
+            if d.req.req_id == req_id:
+                continue
+            if d.slot is not None:
+                eng = self.engines.get(d.target_key)
+                if eng is not None:
+                    eng.release(d.slot)
+            if d.outcome == DUPLICATE:
+                self.dup_cancelled += 1
+            cancelled.append(d)
+        return cancelled

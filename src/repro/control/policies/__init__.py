@@ -1,0 +1,90 @@
+"""Routing-policy strategy registry (ISSUE 4 tentpole).
+
+Every strategy subclasses
+:class:`~repro.control.policies.base.RoutingPolicyBase` (shared
+candidate table, batched scoring, f32-pinned selection semantics, the
+float64 scalar reference) and implements ``decide(reqs, t_now) ->
+WindowDecision``. The registry maps stable string names — usable from
+``AdmissionConfig.policy``, ``SimConfig.policy``, benchmark/example
+``--policy`` flags — to classes:
+
+* ``route_best``   — cross-tier argmin (the PR-3 default; golden-digest
+  bit-identical through the refactored plane);
+* ``guarded_alg1`` — home-tier binding + the paper's per-request offload
+  guard (Algorithm 1 lines 8-11), one vectorised comparison per window;
+* ``safetail``     — top-k feasible redundant dispatch with
+  first-completion cancellation (SafeTail, arXiv:2408.17171).
+
+Adding a strategy: subclass ``RoutingPolicyBase``, set ``name``,
+implement ``decide``, decorate with :func:`register`. See
+``src/repro/control/README.md`` for the full contract.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+from repro.control.admission import AdmissionConfig
+from repro.control.policies.base import (BIG, CandidateTable,
+                                         RoutingPolicyBase, WindowDecision)
+from repro.core.catalogue import Cluster
+from repro.core.router import Router
+
+POLICIES: dict[str, type] = {}
+
+
+def register(cls: type) -> type:
+    """Class decorator: add a strategy to the registry by its ``name``."""
+    if not issubclass(cls, RoutingPolicyBase) or cls.name == "base":
+        raise TypeError(f"{cls!r} is not a named RoutingPolicyBase subclass")
+    POLICIES[cls.name] = cls
+    return cls
+
+
+def get_policy(name: str) -> type:
+    """Resolve a registry name to its strategy class (KeyError lists
+    the registered names — benchmark/CLI error messages lean on it)."""
+    try:
+        return POLICIES[name]
+    except KeyError:
+        raise KeyError(f"unknown routing policy {name!r}; registered: "
+                       f"{sorted(POLICIES)}") from None
+
+
+PolicySpec = Union[None, str, type, RoutingPolicyBase]
+
+
+def make_policy(spec: PolicySpec, cluster: Cluster, router: Router,
+                config: Optional[AdmissionConfig] = None
+                ) -> RoutingPolicyBase:
+    """Build the plane's policy from a flexible spec: None -> the
+    config's ``policy`` name (default ``route_best``), a registry name,
+    a strategy class, or an already-constructed instance (returned
+    as-is — multi-plane setups can share one policy object)."""
+    if isinstance(spec, RoutingPolicyBase):
+        return spec
+    if spec is None:
+        spec = (config.policy if config is not None else None) \
+            or "route_best"
+    if isinstance(spec, str):
+        spec = get_policy(spec)
+    return spec(cluster, router, config)
+
+
+from repro.control.policies.guarded import GuardedAlgorithm1Policy  # noqa: E402
+from repro.control.policies.route_best import RouteBestPolicy  # noqa: E402
+from repro.control.policies.safetail import SafeTailRedundantPolicy  # noqa: E402
+
+register(RouteBestPolicy)
+register(GuardedAlgorithm1Policy)
+register(SafeTailRedundantPolicy)
+
+#: back-compat alias — PR-3's single strategy was the route_best window
+#: mode; code written against ``RoutingPolicy`` keeps working.
+RoutingPolicy = RouteBestPolicy
+
+__all__ = [
+    "BIG", "CandidateTable", "GuardedAlgorithm1Policy", "POLICIES",
+    "PolicySpec", "RouteBestPolicy", "RoutingPolicy", "RoutingPolicyBase",
+    "SafeTailRedundantPolicy", "WindowDecision", "get_policy",
+    "make_policy", "register",
+]

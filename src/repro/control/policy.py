@@ -1,235 +1,27 @@
-"""Shared routing policy: ONE calibrated latency model, every adapter.
+"""Back-compat shim — the policy layer moved to ``repro.control.policies``
+(ISSUE 4).
 
-The paper's central claim is that a single in-memory latency model
-drives both millisecond-scale routing and proactive capacity planning.
-This module is that model's *decision core*, extracted from the PR-2
-serving router so the live engine and the discrete-event simulator score
-requests through literally the same object (ISSUE 3 tentpole):
-
-* :class:`CandidateTable` — the static per-deployment parameter arrays
-  (alpha/beta/gamma/mu/rtt/cost, SLO budgets tau_m, quality-lane masks)
-  plus the per-flush ``n_replicas`` refresh;
-* :class:`RoutingPolicy` — batched scoring + selection over an (R, I)
-  decision matrix: one ``score_instances_batch`` (or one Pallas
-  ``routing_score`` kernel launch) per window, vectorised SLO filter +
-  f32-pinned two-stage cost tie-break, and the float64 scalar reference
-  loop used by parity tests and benchmarks.
-
-Admission-window semantics
---------------------------
-Within a window of R requests the pool arrival rates are read ONCE at
-flush time; request r (0-based position in decision order) is scored at
-
-    lam[r, i] = rate_i(t_flush) + (r + 1) / window_width
-
-i.e. each request sees the window's earlier arrivals as additional load,
-uniformly smeared over all candidates (their destinations are unknown at
-scoring time). For R == 1 this reduces exactly to ``route_best``'s
-``rate + 1/window`` self-contribution.
-
-Scalar/batched decision-boundary contract
------------------------------------------
-The scalar control-plane predictor (``score_instance_scalar``) runs
-float64 while the batched/jit/Pallas paths run float32, so a request
-sitting exactly on the SLO cutoff — or two candidates tied in latency —
-could route differently between paths. The pinned semantics: *selection
-happens in float32* with the two-stage cost tie-break and the 1e-5
-relative ``near`` tolerance of ``select_instance``. The scalar reference
-loop (:meth:`RoutingPolicy.route_window_scalar`) therefore casts its
-float64 scores to float32 before filtering/tie-breaking (via
-``select_instance_scalar``); tests/test_batch_router.py pins the
-boundary cases.
+PR-3 exposed ONE strategy here (``RoutingPolicy``: the batched
+cross-tier argmin). The strategy split factored its machinery into
+:mod:`repro.control.policies.base` (shared candidate table + batched
+score/select + scalar reference) and its decision rule into
+:class:`repro.control.policies.route_best.RouteBestPolicy`; new
+strategies (``guarded_alg1``, ``safetail``) live beside it in the
+registry. Import from :mod:`repro.control.policies` in new code — this
+module keeps the old names importable.
 """
 from __future__ import annotations
 
-from typing import Optional
+from repro.control.policies import (POLICIES, GuardedAlgorithm1Policy,
+                                    RouteBestPolicy, RoutingPolicy,
+                                    SafeTailRedundantPolicy, get_policy,
+                                    make_policy)
+from repro.control.policies.base import (BIG, CandidateTable,
+                                         RoutingPolicyBase, WindowDecision)
 
-import jax.numpy as jnp
-import numpy as np
-
-from repro.control.admission import AdmissionConfig
-from repro.core.catalogue import Cluster, Deployment
-from repro.core.router import (Router, score_instance_scalar,
-                               score_instances_batch, select_instance_batch,
-                               select_instance_scalar)
-from repro.core.scheduler import Request
-
-
-class CandidateTable:
-    """Static candidate-deployment arrays (the in-memory table, §IV-B).
-
-    Built once per (cluster, router params); only ``n_replicas`` moves at
-    run time and is re-read per flush via :meth:`n`. Lane masks implement
-    ``route_best``'s ``for_quality(q) or list(cluster)`` fallback: an
-    empty lane sees every candidate.
-    """
-
-    def __init__(self, cluster: Cluster, router: Router):
-        self.deps: list[Deployment] = list(cluster)
-        self.alpha = np.array([d.alpha for d in self.deps], np.float32)
-        self.beta = np.array([d.beta for d in self.deps], np.float32)
-        self.gamma = np.array([d.gamma for d in self.deps], np.float32)
-        self.mu = np.array([d.mu for d in self.deps], np.float32)
-        self.rtt = np.array([d.instance.net_rtt for d in self.deps],
-                            np.float32)
-        self.cost = np.array([d.instance.cost for d in self.deps],
-                             np.float32)
-        # dep-derived SLO budgets tau_m (x * L_m [+ rtt]) — fixed per
-        # cluster+params; per-request slo overrides patch rows at flush.
-        _probe = Request(model="", quality=self.deps[0].quality, arrival=0.0)
-        self.tau = np.array(
-            [router.slo_budget(d, _probe) for d in self.deps], np.float32)
-        self.lane_mask: dict = {}
-        for d in self.deps:
-            q = d.quality
-            if q not in self.lane_mask:
-                m = np.array([dd.quality == q for dd in self.deps])
-                self.lane_mask[q] = m if m.any() else \
-                    np.ones(len(self.deps), bool)
-        self.all_mask = np.ones(len(self.deps), bool)
-
-    def __len__(self) -> int:
-        return len(self.deps)
-
-    def n(self) -> np.ndarray:
-        return np.array([d.n_replicas for d in self.deps], np.float32)
-
-
-class RoutingPolicy:
-    """The swappable LA-IMR decision object (simulator == serving engine).
-
-    Stateless apart from the candidate table and the Pallas Erlang-table
-    cache; telemetry reads go through the composed :class:`Router` so the
-    policy sees whatever arrival history its adapter maintains.
-    """
-
-    def __init__(self, cluster: Cluster, router: Router,
-                 config: Optional[AdmissionConfig] = None):
-        self.router = router
-        self.cfg = config or AdmissionConfig()
-        self.table = CandidateTable(cluster, router)
-        # Pallas-path Erlang table, rebuilt only when replica counts move
-        self._erlang_table = None
-        self._erlang_key: Optional[tuple] = None
-
-    @property
-    def deps(self) -> list[Deployment]:
-        return self.table.deps
-
-    # ---------------- decision-matrix construction -------------------- #
-    def lam_matrix(self, reqs: list[Request], t_now: float) -> np.ndarray:
-        """(R, I) per-request, per-candidate rate estimates (module doc)."""
-        tbl = self.table
-        rates = np.array(
-            [self.router.tel(d.key).sliding.rate(t_now) for d in tbl.deps],
-            np.float32)
-        r = len(reqs)
-        self_load = (np.arange(1, r + 1, dtype=np.float32)
-                     / np.float32(self.router.params.window))
-        return rates[None, :] + self_load[:, None]
-
-    def mask_rows(self, reqs: list[Request]) -> np.ndarray:
-        tbl = self.table
-        masks = [tbl.lane_mask.get(rq.quality, tbl.all_mask) for rq in reqs]
-        return np.stack(masks, axis=0)
-
-    def slo_rows(self, reqs: list[Request]) -> np.ndarray:
-        tbl = self.table
-        slo = np.broadcast_to(tbl.tau, (len(reqs), len(tbl.deps))).copy()
-        for r, rq in enumerate(reqs):
-            if rq.slo is not None:
-                slo[r, :] = np.float32(rq.slo)
-        return slo
-
-    # ---------------- batched score + select -------------------------- #
-    def score_select(self, lam: np.ndarray, slo: np.ndarray,
-                     mask: np.ndarray):
-        """One batched score+select over the (R, I) decision matrix.
-        Returns (idx (R,), ok (R,), g_best (R,) or None, g (R, I) or
-        None) — exactly one of g_best/g is provided, depending on the
-        backend."""
-        tbl = self.table
-        if self.cfg.backend in ("pallas", "pallas-interpret"):
-            idx, g_best, ok = self._pallas_select(lam, slo, mask)
-            return idx, ok, g_best, None
-        g = score_instances_batch(
-            jnp.asarray(lam), jnp.asarray(tbl.alpha), jnp.asarray(tbl.beta),
-            jnp.asarray(tbl.gamma), jnp.asarray(tbl.mu),
-            jnp.asarray(tbl.n()), jnp.asarray(tbl.rtt))
-        idx, ok = select_instance_batch(g, jnp.asarray(slo),
-                                        jnp.asarray(tbl.cost),
-                                        jnp.asarray(mask))
-        return np.asarray(idx), np.asarray(ok), None, np.asarray(g)
-
-    def score_row(self, lam_row: np.ndarray) -> np.ndarray:
-        """(I,) scores for one request — the engine-overflow re-score
-        path (rare: only when the winner's engine is full and the
-        backend returned no (R, I) score matrix)."""
-        tbl = self.table
-        return np.asarray(score_instances_batch(
-            jnp.asarray(lam_row[None, :]), jnp.asarray(tbl.alpha),
-            jnp.asarray(tbl.beta), jnp.asarray(tbl.gamma),
-            jnp.asarray(tbl.mu), jnp.asarray(tbl.n()),
-            jnp.asarray(tbl.rtt)))[0]
-
-    def _pallas_select(self, lam: np.ndarray, slo: np.ndarray,
-                       mask: np.ndarray):
-        """Kernel-backed score+select. Per-request SLO rows are native
-        kernel inputs now (ROADMAP open item closed); quality-lane
-        restrictions fold into the SLO rows — an excluded candidate gets
-        slo = -1, and g >= 0 always, so it is infeasible exactly as the
-        vmap path's ``(g <= slo) & mask``."""
-        from repro.kernels.routing_score import (build_erlang_table,
-                                                 routing_score)
-        tbl = self.table
-        n = tbl.n()
-        key = tuple(int(x) for x in n)
-        if self._erlang_key != key:
-            self._erlang_table = build_erlang_table(
-                tbl.mu, n.astype(np.int64), t=self.cfg.erlang_table_size)
-            self._erlang_key = key
-        slo_eff = np.where(mask, slo, np.float32(-1.0)).astype(np.float32)
-        r = lam.shape[0]
-        block = min(self.cfg.block_r, r)
-        pad = (-r) % block
-        if pad:
-            zrow = np.zeros((pad, lam.shape[1]), np.float32)
-            lam = np.concatenate([lam.astype(np.float32), zrow], axis=0)
-            slo_eff = np.concatenate([slo_eff, zrow], axis=0)
-        idx, g_best, ok = routing_score(
-            jnp.asarray(lam, jnp.float32), jnp.asarray(tbl.alpha),
-            jnp.asarray(tbl.beta), jnp.asarray(tbl.gamma),
-            jnp.asarray(tbl.mu), jnp.asarray(n), jnp.asarray(tbl.rtt),
-            jnp.asarray(slo_eff), jnp.asarray(tbl.cost), self._erlang_table,
-            block_r=block,
-            interpret=(self.cfg.backend == "pallas-interpret"))
-        return (np.asarray(idx)[:r], np.asarray(g_best)[:r],
-                np.asarray(ok)[:r])
-
-    # ---------------- float64 scalar reference ------------------------ #
-    def route_window_scalar(self, reqs: list[Request],
-                            t_now: float) -> tuple[np.ndarray, np.ndarray]:
-        """Scalar per-request reference for one admission window.
-
-        Scores each (request, candidate) pair with the float64
-        control-plane predictor (``score_instance_scalar``) and selects
-        with the pinned float32 two-stage tie-break
-        (``select_instance_scalar``) — the decision-boundary contract in
-        the module docstring. Reads telemetry without mutating it.
-        Returns (idx (R,), ok (R,)).
-        """
-        lam = self.lam_matrix(reqs, t_now)
-        slo = self.slo_rows(reqs)
-        mask = self.mask_rows(reqs)
-        deps = self.deps
-        cost = self.table.cost
-        idxs = np.zeros(len(reqs), np.int64)
-        oks = np.zeros(len(reqs), bool)
-        for r in range(len(reqs)):
-            g64 = [score_instance_scalar(float(lam[r, i]), d.alpha, d.beta,
-                                         d.gamma, d.mu, d.n_replicas,
-                                         d.instance.net_rtt)
-                   for i, d in enumerate(deps)]
-            idxs[r], oks[r] = select_instance_scalar(
-                np.asarray(g64, np.float32), slo[r], cost, mask[r])
-        return idxs, oks
+__all__ = [
+    "BIG", "CandidateTable", "GuardedAlgorithm1Policy", "POLICIES",
+    "RouteBestPolicy", "RoutingPolicy", "RoutingPolicyBase",
+    "SafeTailRedundantPolicy", "WindowDecision", "get_policy",
+    "make_policy",
+]

@@ -28,15 +28,19 @@ Two controller modes:
 * ``baseline`` — static binding (no offload) + reactive latency-threshold
                  autoscaler with its 60-120 s decision lag.
 
-Unified control plane (ISSUE 3): with ``SimConfig.admission_window > 0``
-the laimr mode stops deciding per arrival and instead accumulates
-arrivals into admission windows routed through the SAME vectorised
-:class:`repro.control.plane.ControlPlane` the serving engine uses —
-one batched score+select per window, quality-priority ordering,
-route_best offload semantics. ``admission_window == 0`` (default) keeps
-the scalar per-arrival path bit-identical to the golden digests;
-``benchmarks/bench_window_sweep.py`` measures the tail-latency cost of
-window width under burst.
+Unified control plane (ISSUE 3; policy layer ISSUE 4): with
+``SimConfig.admission_window > 0`` the laimr mode stops deciding per
+arrival and instead accumulates arrivals into admission windows routed
+through the SAME vectorised :class:`repro.control.plane.ControlPlane`
+the serving engine uses — one batched policy decision per window,
+quality-priority ordering. ``SimConfig.policy`` picks the strategy from
+the :mod:`repro.control.policies` registry (``route_best`` cross-tier
+argmin, ``guarded_alg1`` home tier + Algorithm-1 offload guard,
+``safetail`` top-k redundant dispatch whose duplicate copies this event
+loop races and cancels on first completion). ``admission_window == 0``
+(default) keeps the scalar per-arrival path bit-identical to the golden
+digests; ``benchmarks/bench_window_sweep.py`` measures window width,
+``benchmarks/bench_policy_matrix.py`` the policy x burst matrix.
 
 Fleet-scale fast path: the event loop is O(log n) per event — O(1)
 idle-replica free-list per pool, deque FIFOs, cached per-pool service
@@ -208,6 +212,16 @@ class SimConfig:
     admission_window: float = 0.0
     admission_max_batch: int = 256
     admission_backend: str = "vmap"
+    # Routing-policy strategy for window mode (ISSUE 4): a name in the
+    # repro.control.policies registry. "route_best" (default) keeps the
+    # PR-3 cross-tier argmin — bit-identical to the windowed golden
+    # digests; "guarded_alg1" runs the paper's home-tier offload guard
+    # per window; "safetail" adds top-k redundant dispatch, whose
+    # duplicate copies the event loop races and cancels on first
+    # completion. Ignored when admission_window == 0.
+    policy: str = "route_best"
+    # Total copies (primary included) a redundant policy may dispatch.
+    redundancy: int = 2
 
 
 @dataclasses.dataclass
@@ -217,6 +231,10 @@ class SimResult:
     offload_fast: int
     offload_bulk: float
     n_events: int = 0      # heap events processed (throughput accounting)
+    # redundant dispatch (safetail policy): copies raced / copies whose
+    # result was discarded after another copy completed first
+    duplicates: int = 0
+    dup_cancelled: int = 0
 
     def latencies(self) -> np.ndarray:
         return np.array([r.latency for r in self.completed if r.latency is not None])
@@ -274,8 +292,18 @@ class ClusterSimulator:
                 config=AdmissionConfig(
                     window=config.admission_window,
                     max_batch=config.admission_max_batch,
-                    backend=config.admission_backend))
+                    backend=config.admission_backend,
+                    policy=config.policy,
+                    redundancy=config.redundancy))
         self._win_seq = 0
+        # redundant-dispatch state (safetail policy): per-group
+        # completion race + lazily-cancelled queued copies. Empty dicts
+        # for single-dispatch policies, so the hot path pays one
+        # truthiness check.
+        self._dup_state: dict[int, dict] = {}
+        self._dup_member: dict[int, int] = {}
+        self._cancelled: set[int] = set()
+        self._dup_cancelled = 0
         self.pmhpa = PMHPA(cluster, self.metrics, reconcile_period=config.hpa_period,
                            x=config.router.x, rho_low=config.router.rho_low)
         self.reactive = ReactiveAutoscaler(cluster, slo_multiplier=config.router.x,
@@ -405,17 +433,93 @@ class ClusterSimulator:
         """Hand routed requests to their pools. The plane runs in pure
         routing mode here (no engines), so every decision carries a
         target; queueing, service and RTT then emerge from the event
-        loop exactly as in scalar mode."""
+        loop exactly as in scalar mode.
+
+        Redundant-dispatch policies (safetail) emit DUPLICATE decisions
+        (``dup_of`` set) directly after their primaries: each copy races
+        through its own pool, the first completion wins the group, the
+        losers are cancelled — still queued copies lazily (skipped at
+        dequeue), in-service copies by discarding their result."""
+        prim_req: dict[int, Request] = {}
         for dec in decisions:
+            if dec.dup_of is None:
+                prim_req[dec.req.req_id] = dec.req
+            else:
+                gid = dec.dup_of
+                st = self._dup_state.get(gid)
+                if st is None:
+                    st = {"done": False, "outstanding": 1,
+                          "members": {gid}, "primary": prim_req[gid]}
+                    self._dup_state[gid] = st
+                    self._dup_member[gid] = gid
+                st["members"].add(dec.req.req_id)
+                st["outstanding"] += 1
+                self._dup_member[dec.req.req_id] = gid
             self._enqueue(self.pools[dec.target_key], dec.req)
+
+    # -- redundant-dispatch bookkeeping (safetail policy) ---------------- #
+    def _dup_resolve(self, gid: int) -> None:
+        """A group member finished or was cancelled-at-dequeue; free the
+        group's maps once every copy is accounted for."""
+        st = self._dup_state.get(gid)
+        if st is None:
+            return
+        st["outstanding"] -= 1
+        if st["outstanding"] <= 0:
+            for m in st["members"]:
+                self._dup_member.pop(m, None)
+            del self._dup_state[gid]
+
+    def _dup_service_end(self, gid: int, req: Request, pool: _Pool) -> None:
+        """First completion wins its redundancy group: the PRIMARY
+        request records the winner's latency/placement (conservation —
+        one completion per arrival), every other copy is cancelled."""
+        st = self._dup_state[gid]
+        if not st["done"]:
+            st["done"] = True
+            prim = st["primary"]
+            prim.completion = self._now + pool.net_rtt
+            prim.assigned_instance = req.assigned_instance
+            prim.offloaded = req.offloaded
+            prim.start_service = req.start_service
+            self.completed.append(prim)
+            for m in st["members"]:
+                if m != req.req_id:
+                    self._cancelled.add(m)
+            self._dup_cancelled += len(st["members"]) - 1
+        else:
+            # a losing copy ran to completion; its result is discarded
+            self._cancelled.discard(req.req_id)
+        self._dup_resolve(gid)
+
+    def _pop_queued(self, pool: _Pool) -> Optional[Request]:
+        """Dequeue the next live request, lazily skipping copies whose
+        redundancy group already completed. The no-duplicates fast path
+        is one empty-set check on top of the plain popleft."""
+        q = pool.queue
+        canc = self._cancelled
+        if not canc:
+            return q.popleft() if q else None
+        while q:
+            rq = q.popleft()
+            if rq.req_id in canc:
+                canc.discard(rq.req_id)
+                self._dup_resolve(self._dup_member.get(rq.req_id, -1))
+                continue
+            return rq
+        return None
 
     def _on_service_end(self, key: str, rid: int, req: Request) -> None:
         pool = self.pools[key]
         rep = pool.replicas.get(rid)
-        req.completion = self._now + pool.net_rtt
-        self.completed.append(req)
-        if self.cfg.mode == "baseline":
-            self.reactive.observe(pool.dep, req.latency)
+        gid = self._dup_member.get(req.req_id) if self._dup_member else None
+        if gid is None:
+            req.completion = self._now + pool.net_rtt
+            self.completed.append(req)
+            if self.cfg.mode == "baseline":
+                self.reactive.observe(pool.dep, req.latency)
+        else:
+            self._dup_service_end(gid, req, pool)
         if rep is None:
             return
         if rep.draining:
@@ -425,7 +529,9 @@ class ClusterSimulator:
         else:
             pool.release(rep)
         if pool.queue and pool.idle_replica() is not None:
-            self._start_service(pool, pool.queue.popleft())
+            nxt = self._pop_queued(pool)
+            if nxt is not None:
+                self._start_service(pool, nxt)
 
     def _on_replica_ready(self, key: str) -> None:
         pool = self.pools[key]
@@ -433,7 +539,10 @@ class ClusterSimulator:
         pool.add_replica()
         pool.sync_dep()
         while pool.queue and pool.idle_replica() is not None:
-            self._start_service(pool, pool.queue.popleft())
+            nxt = self._pop_queued(pool)
+            if nxt is None:
+                break
+            self._start_service(pool, nxt)
 
     def _apply_scale(self, ev: ScaleEvent) -> None:
         pool = self.pools[ev.deployment_key]
@@ -505,4 +614,7 @@ class ClusterSimulator:
             offload_fast=sum(t.offloaded_fast for t in tel.values()),
             offload_bulk=sum(t.offloaded_bulk for t in tel.values()),
             n_events=n_events,
+            duplicates=(self.plane.dup_dispatched
+                        if self.plane is not None else 0),
+            dup_cancelled=self._dup_cancelled,
         )

@@ -1,15 +1,17 @@
 """Serving layer: the slot-batched generation engine (data plane) and
-the serving adapter of the unified control plane (``BatchRouter`` is a
+the serving adapters of the unified control plane (``BatchRouter`` is a
 thin subclass of :class:`repro.control.plane.ControlPlane` binding
-LA-IMR window decisions to decode slots)."""
-from repro.serving.batch_router import (ADMITTED, OFFLOADED, REJECTED,
-                                        AdmissionConfig, AdmissionDecision,
-                                        BatchRouter, SlotBank,
+LA-IMR window decisions to decode slots; ``FleetPlane`` fronts several
+pods per deployment behind the same policy object)."""
+from repro.serving.batch_router import (ADMITTED, DUPLICATE, OFFLOADED,
+                                        REJECTED, AdmissionConfig,
+                                        AdmissionDecision, BatchRouter,
+                                        FleetPlane, PodGroup, SlotBank,
                                         route_window_scalar)
 from repro.serving.engine import GenerationResult, ServingEngine
 
 __all__ = [
-    "ADMITTED", "OFFLOADED", "REJECTED", "AdmissionConfig",
-    "AdmissionDecision", "BatchRouter", "SlotBank", "route_window_scalar",
-    "GenerationResult", "ServingEngine",
+    "ADMITTED", "DUPLICATE", "OFFLOADED", "REJECTED", "AdmissionConfig",
+    "AdmissionDecision", "BatchRouter", "FleetPlane", "PodGroup",
+    "SlotBank", "route_window_scalar", "GenerationResult", "ServingEngine",
 ]

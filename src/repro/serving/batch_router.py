@@ -18,15 +18,17 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.control.admission import (ADMITTED, OFFLOADED, REJECTED,
-                                     AdmissionConfig, AdmissionDecision,
-                                     SlotBank)
+from repro.control.admission import (ADMITTED, DUPLICATE, OFFLOADED,
+                                     REJECTED, AdmissionConfig,
+                                     AdmissionDecision, SlotBank)
+from repro.control.fleet import FleetPlane, PodGroup
 from repro.control.plane import ControlPlane
 from repro.core.scheduler import Request
 
 __all__ = [
-    "ADMITTED", "OFFLOADED", "REJECTED", "AdmissionConfig",
-    "AdmissionDecision", "BatchRouter", "SlotBank", "route_window_scalar",
+    "ADMITTED", "DUPLICATE", "OFFLOADED", "REJECTED", "AdmissionConfig",
+    "AdmissionDecision", "BatchRouter", "FleetPlane", "PodGroup",
+    "SlotBank", "route_window_scalar",
 ]
 
 

@@ -87,6 +87,17 @@ class ServingEngine:
         return None
 
     def release(self, slot: int) -> None:
+        """Free a decode slot. Double release is a loud error: with
+        redundant dispatch (first-completion cancellation) a silent
+        second release would leave the continuous-batching slot count
+        permanently off by one."""
+        if not 0 <= slot < self.slots:
+            raise IndexError(f"ServingEngine.release({slot}): no such "
+                             f"slot (0..{self.slots - 1})")
+        if not self.active[slot]:
+            raise RuntimeError(
+                f"ServingEngine.release({slot}): slot already free — "
+                "double release (e.g. of a cancelled duplicate)")
         self.active[slot] = False
 
     def step(self) -> np.ndarray:

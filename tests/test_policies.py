@@ -1,0 +1,467 @@
+"""Pluggable routing-policy layer + fleet plane (ISSUE 4).
+
+Covers the tentpole and its satellites:
+
+  (i)   EVERY registered policy satisfies the generalised conservation
+        contract — ``admitted + offloaded + rejected == arrivals`` with
+        ``duplicate`` outcomes ledgered separately — on random windows,
+        lane mixes and degenerate cases (empty window, all-infeasible,
+        single candidate), property-tested through the ``_propstub``
+        fallback;
+  (ii)  release-path hardening: double release of a (cancelled) slot is
+        a LOUD error on both ``SlotBank`` and ``ServingEngine``, and
+        first-completion cancellation releases each loser exactly once;
+  (iii) strategy semantics: the guard boundary of
+        ``GuardedAlgorithm1Policy`` (g_inst > tau -> upstream, home
+        otherwise) and ``SafeTailRedundantPolicy``'s top-k feasible
+        duplicates;
+  (iv)  the multi-pod ``FleetPlane``/``PodGroup``: first-fit spillover,
+        global<->local slot mapping, conservation across pods, every
+        policy drivable through the fleet surface;
+  (v)   the simulator adapter: ``SimConfig.policy`` end-to-end, with
+        duplicate racing + first-completion cancellation conserving one
+        completion per arrival.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _propstub import given, settings, st
+from repro.control import (ADMITTED, DUPLICATE, OFFLOADED, REJECTED,
+                           AdmissionConfig, ControlPlane, FleetPlane,
+                           PodGroup, POLICIES, SlotBank, get_policy,
+                           make_policy)
+from repro.control.policies import (GuardedAlgorithm1Policy,
+                                    RouteBestPolicy, RoutingPolicy,
+                                    SafeTailRedundantPolicy)
+from repro.core.catalogue import Cluster, Deployment
+from repro.core.latency_model import CLOUD, PI4_EDGE, YOLOV5M
+from repro.core.scheduler import QualityClass, Request
+from repro.core.simulator import ClusterSimulator, SimConfig
+from repro.core.workload import bounded_pareto_bursts
+from test_sim_golden import two_tier
+
+ALL_POLICIES = sorted(POLICIES)
+
+
+def mk_reqs(n, quality=QualityClass.BALANCED, slo=None,
+            model="yolov5m") -> list[Request]:
+    return [Request(model=model, quality=quality, arrival=0.001 * k,
+                    slo=slo) for k in range(n)]
+
+
+def single_candidate() -> Cluster:
+    edge = dataclasses.replace(PI4_EDGE, net_rtt=0.05)
+    return Cluster([Deployment(YOLOV5M, edge, QualityClass.BALANCED,
+                               n_replicas=2, n_max=4)])
+
+
+def outcome_tally(decs) -> dict:
+    by = {ADMITTED: 0, OFFLOADED: 0, REJECTED: 0, DUPLICATE: 0}
+    for d in decs:
+        by[d.outcome] += 1
+    return by
+
+
+class TestRegistry:
+    def test_registry_contents(self):
+        assert {"route_best", "guarded_alg1", "safetail"} <= set(POLICIES)
+        assert get_policy("route_best") is RouteBestPolicy
+        assert get_policy("guarded_alg1") is GuardedAlgorithm1Policy
+        assert get_policy("safetail") is SafeTailRedundantPolicy
+        # PR-3 back-compat: the old single strategy keeps its name
+        assert RoutingPolicy is RouteBestPolicy
+
+    def test_unknown_policy_is_loud(self):
+        with pytest.raises(KeyError, match="route_best"):
+            get_policy("nope")
+        with pytest.raises(KeyError):
+            ControlPlane(two_tier(),
+                         config=AdmissionConfig(policy="nope"))
+
+    def test_make_policy_specs(self):
+        cl = two_tier()
+        plane = ControlPlane(cl)        # default from config
+        assert isinstance(plane.policy, RouteBestPolicy)
+        by_name = ControlPlane(cl, policy="safetail")
+        assert isinstance(by_name.policy, SafeTailRedundantPolicy)
+        by_class = ControlPlane(cl, policy=GuardedAlgorithm1Policy)
+        assert isinstance(by_class.policy, GuardedAlgorithm1Policy)
+        shared = make_policy("route_best", cl, by_name.router,
+                             by_name.cfg)
+        assert ControlPlane(cl, policy=shared).policy is shared
+
+
+class TestGeneralisedConservation:
+    """(i) property: every registered policy conserves requests through
+    the plane, duplicates accounted separately, slots never oversubscribed."""
+
+    @settings(max_examples=20)
+    @given(st.sampled_from(ALL_POLICIES), st.integers(1, 40),
+           st.integers(0, 5), st.integers(0, 5), st.integers(1, 3),
+           st.integers(0, 10_000), st.integers(0, 2))
+    def test_conservation_random_windows(self, policy, n_req, edge_slots,
+                                         cloud_slots, redundancy, seed,
+                                         lane_mix):
+        cl = two_tier()
+        engines = {}
+        if edge_slots:
+            engines["yolov5m@pi4-edge"] = SlotBank(edge_slots)
+        if cloud_slots:
+            engines["yolov5m@cloud"] = SlotBank(cloud_slots)
+        plane = ControlPlane(
+            cl, engines=engines, policy=policy,
+            config=AdmissionConfig(max_batch=16, window=0.02,
+                                   policy=policy, redundancy=redundancy))
+        rng = np.random.default_rng(seed)
+        lanes = [QualityClass.BALANCED, QualityClass.LOW_LATENCY,
+                 QualityClass.PRECISE][: lane_mix + 1]
+        decs, t = [], 0.0
+        for k in range(n_req):
+            t += float(rng.exponential(0.002))
+            rq = Request(model="yolov5m", quality=lanes[k % len(lanes)],
+                         arrival=t)
+            out = plane.submit(rq, t)
+            if out:
+                decs.extend(out)
+        decs.extend(plane.flush(t + 1.0))
+        assert plane.pending() == 0
+        by = outcome_tally(decs)
+        # generalised contract: primaries conserve, duplicates separate
+        assert by[ADMITTED] + by[OFFLOADED] + by[REJECTED] == n_req
+        assert by[DUPLICATE] == plane.dup_dispatched
+        plane.check_conservation()
+        # slots: every non-released dispatch (primary or duplicate)
+        # holds a distinct slot within its engine's capacity
+        held: dict[str, list] = {}
+        for d in decs:
+            if d.slot is not None:
+                held.setdefault(d.target_key, []).append(d.slot)
+        for key, slots in held.items():
+            assert len(slots) == len(set(slots)), (key, slots)
+            assert len(slots) <= engines[key].slots
+        # duplicates always reference a primary decided in this run
+        prim_ids = {d.req.req_id for d in decs if d.outcome != DUPLICATE}
+        for d in decs:
+            if d.outcome == DUPLICATE:
+                assert d.dup_of in prim_ids
+
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    def test_empty_window_flush(self, policy):
+        plane = ControlPlane(two_tier(), policy=policy)
+        assert plane.flush(1.0) == []
+        assert plane.flushes == 0
+        plane.check_conservation()
+
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    def test_all_infeasible_window(self, policy):
+        """slo ~ 0 makes every candidate infeasible; each policy must
+        still resolve every request (offload/admit upstream, never
+        drop), and redundancy must not widen the feasible set."""
+        plane = ControlPlane(two_tier(), policy=policy,
+                             config=AdmissionConfig(max_batch=64))
+        for rq in mk_reqs(6, slo=1e-9):
+            plane.submit(rq, rq.arrival)
+        decs = plane.flush(0.1)
+        by = outcome_tally(decs)
+        assert by[ADMITTED] + by[OFFLOADED] + by[REJECTED] == 6
+        assert by[DUPLICATE] == 0
+        plane.check_conservation()
+
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    def test_single_candidate_cluster(self, policy):
+        """One deployment, no upstream: every outcome must stay on the
+        only tier (or reject under slot pressure) for every policy."""
+        plane = ControlPlane(single_candidate(), policy=policy,
+                             engines={"yolov5m@pi4-edge": SlotBank(4)},
+                             config=AdmissionConfig(max_batch=16))
+        for rq in mk_reqs(8, slo=50.0):
+            plane.submit(rq, rq.arrival)
+        decs = plane.flush(0.1)
+        by = outcome_tally(decs)
+        assert by[ADMITTED] + by[OFFLOADED] + by[REJECTED] == 8
+        assert by[ADMITTED] == 4 and by[REJECTED] == 4
+        assert by[DUPLICATE] == 0      # nowhere to duplicate to
+        plane.check_conservation()
+
+
+class TestGuardedSemantics:
+    """(iii) the per-request offload guard, vectorised per window."""
+
+    def _plane(self, slo=None):
+        return ControlPlane(two_tier(), policy="guarded_alg1",
+                            config=AdmissionConfig(max_batch=64))
+
+    def test_light_load_stays_home(self):
+        plane = self._plane()
+        plane.submit(mk_reqs(1, slo=50.0)[0], 0.0)
+        (dec,) = plane.flush(0.0)
+        assert dec.outcome == ADMITTED
+        assert dec.target_key == "yolov5m@pi4-edge"
+        assert dec.req.offloaded is False
+
+    def test_guard_fires_upstream(self):
+        """g_inst > tau at the home tier -> the request goes ONE hop up
+        (Alg. 1 line 11), labelled as an offload."""
+        plane = self._plane()
+        plane.submit(mk_reqs(1, slo=1e-6)[0], 0.0)
+        (dec,) = plane.flush(0.0)
+        assert dec.outcome == OFFLOADED
+        assert dec.target_key == "yolov5m@cloud"
+        assert dec.req.offloaded is True
+
+    def test_guard_never_argmins_across_tiers(self):
+        """Unlike route_best, a feasible-but-slower home tier KEEPS the
+        request: make the cloud predict faster yet keep home under tau —
+        guarded stays home while route_best crosses tiers."""
+        cl = two_tier()
+        guarded = ControlPlane(cl, policy="guarded_alg1",
+                               config=AdmissionConfig(max_batch=64))
+        best = ControlPlane(cl, policy="route_best",
+                            config=AdmissionConfig(max_batch=64))
+        rq_g, rq_b = mk_reqs(1, slo=50.0)[0], mk_reqs(1, slo=50.0)[0]
+        guarded.submit(rq_g, 0.0)
+        best.submit(rq_b, 0.0)
+        (dg,) = guarded.flush(0.0)
+        (db,) = best.flush(0.0)
+        assert dg.target_key == "yolov5m@pi4-edge"   # home despite slower
+        assert db.target_key == "yolov5m@cloud"      # cross-tier argmin
+
+    def test_home_telemetry_sees_guarded_offloads(self):
+        """Alg. 1 line 7: the home instance records the arrival BEFORE
+        the guard protects the request — otherwise home-tier scaling
+        starves and every later window offloads forever."""
+        plane = self._plane()
+        plane.submit(mk_reqs(1, slo=1e-6)[0], 0.0)
+        plane.flush(0.0)
+        assert plane.router.tel("yolov5m@pi4-edge").arrivals == 1
+        assert plane.router.tel("yolov5m@cloud").arrivals == 1
+
+
+class TestSafeTailSemantics:
+    """(iii) top-k feasible redundant dispatch + cancellation."""
+
+    def _plane(self, redundancy=2, edge_slots=4, cloud_slots=4):
+        return ControlPlane(
+            two_tier(), policy="safetail",
+            engines={"yolov5m@pi4-edge": SlotBank(edge_slots),
+                     "yolov5m@cloud": SlotBank(cloud_slots)},
+            config=AdmissionConfig(max_batch=64, redundancy=redundancy))
+
+    def test_duplicate_dispatch_and_linkage(self):
+        plane = self._plane()
+        rq = mk_reqs(1, slo=50.0)[0]
+        plane.submit(rq, 0.0)
+        decs = plane.flush(0.0)
+        by = outcome_tally(decs)
+        assert by[ADMITTED] == 1 and by[DUPLICATE] == 1
+        prim = next(d for d in decs if d.outcome == ADMITTED)
+        dup = next(d for d in decs if d.outcome == DUPLICATE)
+        assert dup.dup_of == prim.req.req_id
+        assert dup.target_key != prim.target_key
+        assert dup.slot is not None
+        assert dup.req.req_id != prim.req.req_id
+        plane.check_conservation()
+
+    def test_redundancy_one_is_single_dispatch(self):
+        plane = self._plane(redundancy=1)
+        plane.submit(mk_reqs(1, slo=50.0)[0], 0.0)
+        decs = plane.flush(0.0)
+        assert outcome_tally(decs)[DUPLICATE] == 0
+        assert plane.dup_dispatched == 0
+
+    def test_first_completion_releases_losers_once(self):
+        """(ii) cancellation releases each loser's slot exactly once;
+        releasing it again is the loud double-release error."""
+        plane = self._plane()
+        rq = mk_reqs(1, slo=50.0)[0]
+        plane.submit(rq, 0.0)
+        decs = plane.flush(0.0)
+        prim = next(d for d in decs if d.outcome == ADMITTED)
+        dup = next(d for d in decs if d.outcome == DUPLICATE)
+        dup_bank = plane.engines[dup.target_key]
+        assert dup_bank.n_free() == dup_bank.slots - 1
+        cancelled = plane.first_completion(prim.req.req_id)
+        assert [d.req.req_id for d in cancelled] == [dup.req.req_id]
+        assert plane.dup_cancelled == 1
+        assert dup_bank.n_free() == dup_bank.slots
+        with pytest.raises(RuntimeError, match="already free"):
+            dup_bank.release(dup.slot)
+        # the winner's slot is the caller's to release — exactly once
+        plane.engines[prim.target_key].release(prim.slot)
+        # idempotence of the group: a second completion event is a no-op
+        assert plane.first_completion(prim.req.req_id) == []
+
+    def test_duplicate_wins_releases_primary_slot(self):
+        plane = self._plane()
+        rq = mk_reqs(1, slo=50.0)[0]
+        plane.submit(rq, 0.0)
+        decs = plane.flush(0.0)
+        prim = next(d for d in decs if d.outcome == ADMITTED)
+        dup = next(d for d in decs if d.outcome == DUPLICATE)
+        cancelled = plane.first_completion(dup.req.req_id)
+        assert [d.req.req_id for d in cancelled] == [prim.req.req_id]
+        prim_bank = plane.engines[prim.target_key]
+        assert prim_bank.n_free() == prim_bank.slots
+
+    def test_duplicates_skipped_when_target_full(self):
+        """Duplicates are opportunistic: no free slot at the alternate
+        -> no duplicate, never a cascade or rejection."""
+        plane = self._plane(edge_slots=0)   # no edge engine entry
+        plane = ControlPlane(
+            two_tier(), policy="safetail",
+            engines={"yolov5m@pi4-edge": SlotBank(1),
+                     "yolov5m@cloud": SlotBank(4)},
+            config=AdmissionConfig(max_batch=64, redundancy=2))
+        # saturate the edge bank so it cannot host duplicates
+        assert plane.engines["yolov5m@pi4-edge"].admit_next() == 0
+        plane.submit(mk_reqs(1, slo=50.0)[0], 0.0)
+        decs = plane.flush(0.0)
+        by = outcome_tally(decs)
+        assert by[ADMITTED] + by[OFFLOADED] == 1
+        assert by[DUPLICATE] == 0
+        plane.check_conservation()
+
+
+class TestReleaseHardening:
+    """(ii) double release is loud on every slot provider."""
+
+    def test_slotbank_double_release(self):
+        bank = SlotBank(2)
+        assert bank.admit_next() == 0
+        bank.release(0)
+        with pytest.raises(RuntimeError, match="double"):
+            bank.release(0)
+        with pytest.raises(IndexError):
+            bank.release(5)
+        # the bank still works after the error
+        assert bank.admit_next() == 0
+
+    def test_serving_engine_double_release(self):
+        import jax
+
+        from repro.configs.base import get_config, reduced
+        from repro.models import model
+        from repro.serving.engine import ServingEngine
+        cfg = reduced(get_config("stablelm_3b"))
+        params = model.init_params(jax.random.PRNGKey(0), cfg)
+        eng = ServingEngine(cfg, params, slots=2, max_len=16)
+        assert eng.admit_next() == 0
+        eng.release(0)
+        with pytest.raises(RuntimeError, match="already free"):
+            eng.release(0)
+        with pytest.raises(IndexError):
+            eng.release(2)
+        assert eng.admit_next() == 0
+
+
+class TestFleetPlane:
+    """(iv) multi-pod serving through the same plane + policy."""
+
+    def test_pod_group_spillover_and_mapping(self):
+        pods = [SlotBank(2), SlotBank(3)]
+        grp = PodGroup(pods)
+        assert grp.slots == 5 and grp.n_free() == 5
+        # first-fit: pod 0 fills before pod 1 sees traffic
+        assert [grp.admit_next() for _ in range(5)] == [0, 1, 2, 3, 4]
+        assert grp.admit_next() is None
+        assert grp.locate(0) == (0, 0) and grp.locate(1) == (0, 1)
+        assert grp.locate(2) == (1, 0) and grp.locate(4) == (1, 2)
+        assert grp.stats() == [(2, 2), (3, 3)]
+        grp.release(3)                       # pod 1, local slot 1
+        assert pods[1].free_slots() == [1]
+        assert grp.free_slots() == [3]
+        with pytest.raises(RuntimeError):
+            grp.release(3)
+        with pytest.raises(IndexError):
+            grp.locate(5)
+
+    def test_fleet_conservation_across_pods(self):
+        # enough replicas that every window row stays Erlang-stable
+        # (feasible), so pod slots are the ONLY admission limit
+        edge = dataclasses.replace(PI4_EDGE, net_rtt=0.05)
+        cloud = dataclasses.replace(CLOUD, net_rtt=0.086)
+        cl = Cluster([
+            Deployment(YOLOV5M, edge, QualityClass.BALANCED,
+                       n_replicas=8, n_max=8),
+            Deployment(YOLOV5M, cloud, QualityClass.BALANCED,
+                       n_replicas=6, n_max=16),
+        ])
+        fleet = FleetPlane(
+            cl,
+            pods={"yolov5m@pi4-edge": [SlotBank(2), SlotBank(2)],
+                  "yolov5m@cloud": [SlotBank(1), SlotBank(1), SlotBank(1)]},
+            config=AdmissionConfig(max_batch=16))
+        for rq in mk_reqs(9, slo=50.0):
+            fleet.submit(rq, rq.arrival)
+        decs = fleet.flush(0.1)
+        by = outcome_tally(decs)
+        assert by[ADMITTED] + by[OFFLOADED] + by[REJECTED] == 9
+        assert by[REJECTED] == 9 - 7         # 4 edge + 3 cloud slots
+        fleet.check_conservation()
+        stats = fleet.fleet_stats()
+        assert sum(u for u, _ in stats["yolov5m@pi4-edge"]) == 4
+        assert sum(u for u, _ in stats["yolov5m@cloud"]) == 3
+        # releases route back to the owning pod
+        admitted = [d for d in decs if d.slot is not None]
+        for d in admitted:
+            fleet.engines[d.target_key].release(d.slot)
+        assert fleet.engines["yolov5m@pi4-edge"].n_free() == 4
+        assert fleet.engines["yolov5m@cloud"].n_free() == 3
+
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    def test_every_policy_drives_the_fleet(self, policy):
+        fleet = FleetPlane(
+            two_tier(),
+            pods={"yolov5m@pi4-edge": [SlotBank(2), SlotBank(2)],
+                  "yolov5m@cloud": [SlotBank(2), SlotBank(2)]},
+            policy=policy,
+            config=AdmissionConfig(max_batch=16, redundancy=2))
+        for rq in mk_reqs(6, slo=50.0):
+            fleet.submit(rq, rq.arrival)
+        decs = fleet.flush(0.1)
+        by = outcome_tally(decs)
+        assert by[ADMITTED] + by[OFFLOADED] + by[REJECTED] == 6
+        fleet.check_conservation()
+
+    def test_fleet_rejects_engines_kwarg(self):
+        with pytest.raises(TypeError, match="pods"):
+            FleetPlane(two_tier(), pods={}, engines={})
+
+
+class TestSimulatorPolicyAdapter:
+    """(v) SimConfig.policy end-to-end, duplicates raced + cancelled."""
+
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    def test_windowed_sim_conserves_per_policy(self, policy):
+        arr = bounded_pareto_bursts(3.0, 60.0, "yolov5m", seed=3)
+        sim = ClusterSimulator(
+            two_tier(), SimConfig(mode="laimr", seed=3, slo=1.0,
+                                  admission_window=0.1, policy=policy))
+        res = sim.run(arr, horizon=600.0)
+        assert len(res.completed) == len(arr)
+        ids = [r.req_id for r in res.completed]
+        assert len(set(ids)) == len(ids)
+        for r in res.completed:
+            assert r.latency is not None and r.latency > 0
+            assert r.assigned_instance is not None
+            assert r.start_service >= r.arrival - 1e-9
+        sim.plane.check_conservation()
+        assert sim.plane.decided == len(arr)
+        if policy != "safetail":
+            assert res.duplicates == 0
+
+    def test_safetail_sim_races_and_cancels(self):
+        arr = bounded_pareto_bursts(4.0, 90.0, "yolov5m", seed=7)
+        sim = ClusterSimulator(
+            two_tier(), SimConfig(mode="laimr", seed=7, slo=2.0,
+                                  admission_window=0.1,
+                                  policy="safetail", redundancy=2))
+        res = sim.run(arr, horizon=600.0)
+        assert len(res.completed) == len(arr)
+        assert res.duplicates > 0
+        # every raced copy either won (recorded on its primary) or was
+        # cancelled; no duplicate may add a second completion
+        assert res.dup_cancelled == res.duplicates
+        assert len({r.req_id for r in res.completed}) == len(arr)
