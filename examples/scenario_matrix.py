@@ -1,7 +1,7 @@
 """Scenario matrix: LA-IMR vs the reactive baseline across arrival regimes.
 
   PYTHONPATH=src python examples/scenario_matrix.py [--horizon 240] \
-      [--policy guarded_alg1] [--window 0.1]
+      [--policy guarded_alg1] [--window 0.1] [--pods 2]
 
 Runs the same two-tier cluster under every generator in the workload
 scenario matrix — the paper's Poisson/ramp/bounded-Pareto regimes plus
@@ -13,7 +13,11 @@ modes. Every trace is seeded: rerunning reproduces the table exactly.
 ``--policy`` (with ``--window`` > 0) routes the laimr mode through the
 unified control plane's admission windows using any strategy from the
 :mod:`repro.control.policies` registry; the default keeps the scalar
-per-arrival Algorithm-1 path (window 0).
+per-arrival Algorithm-1 path (window 0). ``--pods`` (ISSUE 5) runs both
+controller modes over per-pod pools (``SimConfig.pods_per_deployment``):
+first-fit spillover, pod-granular scale-out boot lag, emptiest-pod
+drain — compare against the default monolithic pools to see how pod
+granularity reshapes the tail.
 """
 from __future__ import annotations
 
@@ -80,10 +84,14 @@ def main() -> None:
     ap.add_argument("--window", type=float, default=0.0,
                     help="admission-window width in seconds; 0 keeps "
                          "the scalar per-arrival Algorithm-1 path")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="pods per deployment (1 = legacy monolithic "
+                         "pool; >1 = pod-level fleet physics)")
     args = ap.parse_args()
 
     lane = args.policy if args.window > 0 else "scalar alg1"
-    print(f"# laimr mode: {lane} (window={args.window})")
+    print(f"# laimr mode: {lane} (window={args.window}, "
+          f"pods={args.pods})")
     print(f"{'scenario':<9} {'n':>6}  "
           f"{'laimr p50/p99':>16}  {'base p50/p99':>16}  "
           f"{'offl':>5}  {'p99 delta':>9}")
@@ -95,7 +103,8 @@ def main() -> None:
                 make_cluster(),
                 SimConfig(mode=mode, seed=args.seed,
                           admission_window=args.window,
-                          policy=args.policy))
+                          policy=args.policy,
+                          pods_per_deployment=args.pods))
             res = sim.run(trace)
             row[mode] = (res.summary(), res.offload_fast)
         (sl, offl), (sb, _) = row["laimr"], row["baseline"]

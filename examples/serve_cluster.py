@@ -4,12 +4,15 @@ slot-batched engine for the edge tier — the data plane the catalogue's
 latency numbers describe.
 
   PYTHONPATH=src python examples/serve_cluster.py \
-      [--policy route_best|guarded_alg1|safetail]
+      [--policy route_best|guarded_alg1|safetail] [--pods 2]
 
 ``--policy`` picks the routing strategy (ISSUE 4 policy registry) for
 BOTH adapters below: the live BatchRouter/FleetPlane admission loop and
 the windowed discrete-event simulation — one policy object semantics,
-three execution substrates.
+three execution substrates. ``--pods`` (ISSUE 5) runs the final windowed
+simulation over per-pod pools (``SimConfig.pods_per_deployment``) — the
+simulator twin of the FleetPlane spillover demoed above, with pod boot
+lag and emptiest-pod drain in the physics.
 """
 import argparse
 import os
@@ -37,6 +40,9 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--policy", default="route_best",
                 help="routing strategy from the repro.control.policies "
                      "registry (route_best / guarded_alg1 / safetail)")
+ap.add_argument("--pods", type=int, default=2,
+                help="pods per deployment for the pod-fleet simulation "
+                     "(1 = legacy monolithic pools)")
 args = ap.parse_args()
 
 # --- data plane: measure a real reduced-model decode step ------------- #
@@ -147,3 +153,24 @@ print(f"[windowed:{args.policy}] p95={s['p95']:.2f}s p99={s['p99']:.2f}s "
       f"offloads={res.offload_fast} in {sim.plane.flushes} flushes "
       f"({sim.plane.scored_pairs} scored pairs){extra} — one control "
       "plane, three adapters")
+
+# --- pod-level fleet physics (ISSUE 5): the simulator twin of the
+# FleetPlane above. pods_per_deployment partitions every deployment's
+# replicas into whole pods — first-fit spillover, per-pod utilisation,
+# pod-granular scale-out with boot lag, emptiest-pod drain — so the
+# discrete-event run exercises the SAME fleet granularity the serving
+# plane does. pods=1 reproduces the monolithic run bit-for-bit.
+sim = ClusterSimulator(experiment_cluster(),
+                       SimConfig(mode="laimr", seed=1, slo=1.8,
+                                 jitter_sigma=0.2,
+                                 admission_window=0.1,
+                                 policy=args.policy,
+                                 pods_per_deployment=args.pods))
+res = sim.run(arrivals, horizon=400.0)
+s = res.summary()
+occ = sim.fleet_stats()    # reports the single pool as one pod at --pods 1
+print(f"[pods={args.pods}:{args.policy}] p95={s['p95']:.2f}s "
+      f"p99={s['p99']:.2f}s offloads={res.offload_fast} "
+      f"pods_booted={res.pods_booted} pods_drained={res.pods_drained} "
+      f"final occupancy {occ} — pod granularity in the simulated "
+      "physics too")

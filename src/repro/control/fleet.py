@@ -28,7 +28,17 @@ from repro.control.plane import ControlPlane
 
 
 class PodGroup:
-    """Several slot providers behind one engine surface (global slots)."""
+    """Several slot providers behind one engine surface (global slots).
+
+    Pod lifecycle (ISSUE 5, mirroring the simulator's ``_PodFleet``):
+    :meth:`mark_draining` takes a pod out of the admission rotation while
+    its in-flight slots complete (their releases still route home);
+    :meth:`retire` removes a fully drained pod for good — releasing into
+    a retired pod afterwards is a loud error, so a cancelled SafeTail
+    duplicate whose pod was scaled away can never resurrect its slot.
+    Slot-id bases are immutable (retired pods keep their id range), so
+    the plane's global slot bookkeeping never shifts under live traffic.
+    """
 
     def __init__(self, pods: Sequence):
         if not pods:
@@ -40,27 +50,68 @@ class PodGroup:
             self.bases.append(total)
             total += int(p.slots)
         self.slots = total      # mirrors the single-engine surface
+        self.draining: list[bool] = [False] * len(self.pods)
+        self.retired: list[bool] = [False] * len(self.pods)
 
     # ---- surface shared with ServingEngine / SlotBank ----------------- #
     def n_free(self) -> int:
-        return sum(p.n_free() for p in self.pods)
+        """Admittable free slots — draining/retired pods offer none."""
+        return sum(p.n_free() for i, p in enumerate(self.pods)
+                   if not self.draining[i] and not self.retired[i])
 
     def free_slots(self) -> list[int]:
-        return [base + s for p, base in zip(self.pods, self.bases)
+        return [base + s
+                for i, (p, base) in enumerate(zip(self.pods, self.bases))
+                if not self.draining[i] and not self.retired[i]
                 for s in p.free_slots()]
 
     def admit_next(self, first_token: int = 0,
                    start_pos: int = 0) -> Optional[int]:
-        """First-fit spillover: the first pod with a free slot wins."""
-        for p, base in zip(self.pods, self.bases):
+        """First-fit spillover: the first ACTIVE pod with a free slot
+        wins (draining/retired pods take no new work)."""
+        for i, (p, base) in enumerate(zip(self.pods, self.bases)):
+            if self.draining[i] or self.retired[i]:
+                continue
             slot = p.admit_next(first_token, start_pos)
             if slot is not None:
                 return base + slot
         return None
 
     def release(self, slot: int) -> None:
+        """Release a slot back to its owning pod. In-flight work on a
+        DRAINING pod completes normally; a RETIRED pod's slots are gone
+        — releasing one (e.g. a stale cancellation of a SafeTail
+        duplicate) raises instead of resurrecting capacity."""
         pod_i, local = self.locate(slot)
+        if self.retired[pod_i]:
+            raise RuntimeError(
+                f"PodGroup.release({slot}): pod {pod_i} was retired — a "
+                "release into a removed pod cannot resurrect its slot")
         self.pods[pod_i].release(local)
+
+    # ---- pod boot/drain lifecycle ------------------------------------- #
+    def mark_draining(self, pod_i: int) -> None:
+        """Take pod ``pod_i`` out of the admission rotation (graceful
+        termination): no new admissions, in-flight slots release home."""
+        if not 0 <= pod_i < len(self.pods):
+            raise IndexError(f"PodGroup.mark_draining({pod_i}): no such "
+                             f"pod (0..{len(self.pods) - 1})")
+        self.draining[pod_i] = True
+
+    def retire(self, pod_i: int) -> None:
+        """Remove a DRAINED pod for good. Requires every slot free (the
+        graceful-termination contract: drain first, retire when idle);
+        retiring a busy pod would orphan its in-flight slots."""
+        if not 0 <= pod_i < len(self.pods):
+            raise IndexError(f"PodGroup.retire({pod_i}): no such pod "
+                             f"(0..{len(self.pods) - 1})")
+        pod = self.pods[pod_i]
+        if pod.n_free() != pod.slots:
+            raise RuntimeError(
+                f"PodGroup.retire({pod_i}): {pod.slots - pod.n_free()} "
+                "slot(s) still in flight — drain before retiring")
+        self.draining[pod_i] = True
+        self.retired[pod_i] = True
 
     # ---- pod-aware helpers -------------------------------------------- #
     def locate(self, slot: int) -> tuple[int, int]:

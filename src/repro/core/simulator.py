@@ -51,6 +51,38 @@ Refactors here must keep the golden digests in
 ``tests/test_sim_golden.py`` bit-identical per seed;
 ``benchmarks/bench_sim_throughput.py`` is the speed baseline
 (>=1M arrivals end-to-end).
+
+Pod-level fleet physics (ISSUE 5): ``SimConfig.pods_per_deployment > 1``
+partitions each deployment's replicas into whole PODS — the same
+``FleetPlane``/``PodGroup`` granularity the serving engine runs
+(``repro/control/fleet.py``) — so the simulator finally exercises pod
+spillover, pod boot lag and pod-granular scale enactment instead of one
+monolithic pool per deployment:
+
+* each pod is its own :class:`_Pool` (replica slots, FIFO queue, 1-s
+  sliding arrival rate feeding the Eq. 5 utilisation — per-POD, so a hot
+  pod runs slow while its neighbours idle);
+* arrivals bind first-fit: the first pod (creation order) with an idle
+  replica serves immediately — ``PodGroup.admit_next`` semantics; when
+  every pod is busy the request spills to the shortest-queue pod and
+  STAYS there (sticky per-pod FIFO — the load-balancer imbalance that
+  shapes the tail at pod granularity);
+* PM-HPA still plans in replicas, but enactment is pod-granular:
+  scale-out boots whole pods of ``slots_per_pod`` replicas after
+  ``startup_delay``; a freshly ready pod immediately steals queued work
+  from the most backlogged pods. Scale-in drains the EMPTIEST pod
+  (fewest busy replicas, then shortest queue, newest on ties): its
+  queue respills to the survivors — cancel-aware, so a cancelled
+  SafeTail duplicate queued on a draining pod is dropped, never
+  resurrected — busy replicas finish in flight, and the pod object is
+  removed when idle (releasing into it afterwards is a loud error).
+
+``pods_per_deployment == 1`` (default) keeps the single-``_Pool``
+legacy path byte-for-byte — the golden digests above AND the windowed
+digests in ``tests/test_control_plane.py`` are pinned against it, and
+``tests/test_sim_golden.py`` pins a multi-pod digest so future
+spillover-physics changes are loud. ``benchmarks/bench_policy_matrix.py``
+sweeps the pods axis.
 """
 from __future__ import annotations
 
@@ -84,7 +116,9 @@ class _Replica:
 
 
 class _Pool:
-    """Runtime state of one deployment's replica pool.
+    """Runtime state of one replica pool — a whole deployment in the
+    legacy single-pool mode, or ONE POD of a :class:`_PodFleet` when
+    ``SimConfig.pods_per_deployment > 1``.
 
     Fleet-scale fast path: the idle-replica lookup is O(1) amortised via a
     min-heap free-list of idle rids with lazy invalidation (rids are
@@ -98,19 +132,24 @@ class _Pool:
 
     __slots__ = ("dep", "replicas", "_rid", "queue", "rate", "pending_up",
                  "_idle", "_n_ready", "svc_base", "svc_r_demand",
-                 "svc_background", "svc_r_max", "net_rtt")
+                 "svc_background", "svc_r_max", "net_rtt", "pod_id",
+                 "draining")
 
-    def __init__(self, dep: Deployment):
+    def __init__(self, dep: Deployment, n_replicas: Optional[int] = None,
+                 pod_id: int = 0):
+        n = dep.n_replicas if n_replicas is None else n_replicas
         self.dep = dep
+        self.pod_id = pod_id
+        self.draining = False     # pod-level drain flag (fleet mode only)
         self.replicas: dict[int, _Replica] = {
-            i: _Replica(rid=i) for i in range(dep.n_replicas)
+            i: _Replica(rid=i) for i in range(n)
         }
-        self._rid = itertools.count(dep.n_replicas)
+        self._rid = itertools.count(n)
         self.queue: deque[Request] = deque()
         self.rate = SlidingRate(window=1.0)
         self.pending_up: int = 0  # replicas booting
-        self._idle: list[int] = list(range(dep.n_replicas))  # already a heap
-        self._n_ready: int = dep.n_replicas
+        self._idle: list[int] = list(range(n))  # already a heap
+        self._n_ready: int = n
         # cached Eq. 5 constants (values identical to the attribute chains)
         self.svc_base = dep.model.l_ref / dep.instance.speedup
         self.svc_r_demand = dep.model.r_demand
@@ -147,7 +186,18 @@ class _Pool:
             del self.replicas[rep.rid]
 
     def release(self, rep: _Replica) -> None:
-        """Return a replica to the free-list after a service completes."""
+        """Return a replica to the free-list after a service completes.
+
+        Hardened (mirrors ``SlotBank``/``PodGroup``): releasing a replica
+        that is not busy — a double release, e.g. of a cancelled SafeTail
+        copy whose slot was already given back, or of a replica on a
+        drained/removed pod — would push a second free-list entry and
+        silently let the replica serve two requests at once. Loud error
+        instead."""
+        if not rep.busy:
+            raise RuntimeError(
+                f"_Pool.release(rid={rep.rid}): replica already free — "
+                "double release would corrupt the idle free-list")
         rep.busy = False
         heapq.heappush(self._idle, rep.rid)
 
@@ -171,6 +221,222 @@ class _Pool:
     def sync_dep(self) -> None:
         """Keep Deployment.n_replicas (the control-plane view) in sync."""
         self.dep.n_replicas = max(1, self._n_ready)
+
+    def n_busy(self) -> int:
+        return sum(1 for r in self.replicas.values() if r.busy)
+
+    def stats(self) -> tuple[int, int, int]:
+        """(busy, ready, queued) — pod occupancy telemetry."""
+        return (self.n_busy(), self._n_ready, len(self.queue))
+
+
+class _PodFleet:
+    """Per-pod pools behind one deployment — the simulator's twin of
+    :class:`repro.control.fleet.PodGroup` (ISSUE 5).
+
+    ``slots_per_pod`` replicas per pod (ceil(n_replicas / pods) at
+    construction), first-fit admission in pod-creation order, sticky
+    shortest-queue spillover when saturated, pod-granular scale
+    enactment. Pods are :class:`_Pool` objects, so the Eq. 5 service
+    physics (per-pod sliding rate -> utilisation) and the O(1) idle
+    free-list are reused verbatim; this class owns only the fleet
+    topology and the boot/drain lifecycle. The module docstring
+    documents the physics contract; ``control/README.md`` the
+    serving-side mirror.
+    """
+
+    __slots__ = ("dep", "net_rtt", "slots_per_pod", "pods", "_pod_id",
+                 "pending_pods", "pods_booted", "pods_drained")
+
+    def __init__(self, dep: Deployment, n_pods: int):
+        self.dep = dep
+        self.net_rtt = dep.instance.net_rtt
+        self.slots_per_pod = max(1, -(-dep.n_replicas // max(1, n_pods)))
+        self._pod_id = itertools.count()
+        # insertion order == pod_id order == first-fit order
+        self.pods: dict[int, _Pool] = {}
+        remaining = dep.n_replicas
+        while remaining > 0:
+            take = min(self.slots_per_pod, remaining)
+            self._new_pod(take)
+            remaining -= take
+        self.pending_pods = 0    # whole pods booting
+        self.pods_booted = 0
+        self.pods_drained = 0
+
+    def _new_pod(self, n_replicas: int) -> _Pool:
+        pid = next(self._pod_id)
+        pod = _Pool(self.dep, n_replicas=n_replicas, pod_id=pid)
+        self.pods[pid] = pod
+        return pod
+
+    # ---- control-plane view ------------------------------------------- #
+    @property
+    def n_ready(self) -> int:
+        return sum(p._n_ready for p in self.pods.values())
+
+    def n_active_pods(self) -> int:
+        return sum(1 for p in self.pods.values() if not p.draining)
+
+    def sync_dep(self) -> None:
+        """Deployment.n_replicas (what the router/PM-HPA predictors see)
+        is the READY aggregate over all pods — draining pods' replicas
+        already left the count via ``_Pool.mark_draining``."""
+        self.dep.n_replicas = max(1, self.n_ready)
+
+    def stats(self) -> list[tuple[int, int, int]]:
+        """Per-pod (busy, ready, queued) — the spillover telemetry
+        ``FleetPlane.fleet_stats`` exposes on the serving side."""
+        return [p.stats() for p in self.pods.values()]
+
+    # ---- admission: first-fit slot, then sticky shortest queue -------- #
+    def submit(self, sim: "ClusterSimulator", req: Request) -> None:
+        """First-fit spillover (``PodGroup.admit_next`` semantics): the
+        first non-draining pod with an idle replica serves immediately;
+        with every slot busy the request joins the SHORTEST queue among
+        active pods (ties -> oldest pod) and stays there. The chosen
+        pod's sliding rate observes the arrival — per-pod load feeds the
+        per-pod Eq. 5 utilisation."""
+        self._place(sim, req, observe=True)
+
+    def _respill(self, sim: "ClusterSimulator", req: Request) -> None:
+        """Re-home a request off a draining pod: same placement as
+        :meth:`submit` but with no second rate observation — its arrival
+        was already counted."""
+        self._place(sim, req, observe=False)
+
+    def _place(self, sim: "ClusterSimulator", req: Request,
+               observe: bool) -> None:
+        now = sim._now
+        for pod in self.pods.values():
+            if not pod.draining and pod.idle_replica() is not None:
+                if observe:
+                    pod.rate.observe(now)
+                sim._start_service(pod, req)
+                return
+        pod = min((p for p in self.pods.values() if not p.draining),
+                  key=lambda p: (len(p.queue), p.pod_id))
+        if observe:
+            pod.rate.observe(now)
+        pod.queue.append(req)
+
+    # ---- service completion ------------------------------------------- #
+    def finish(self, sim: "ClusterSimulator", pod_id: int,
+               rid: int) -> None:
+        """Release the serving replica and dispatch this pod's next live
+        queued request. On a draining pod the replica is removed instead
+        (graceful termination); the pod object itself is removed once
+        its last replica leaves. HARDENED end to end: every service
+        start produces exactly one service end, so a finish targeting a
+        removed pod or replica is a double release — loud, never a
+        silent return (the drain path would otherwise swallow exactly
+        the slot-drift class ``_Pool.release`` guards against)."""
+        pod = self.pods.get(pod_id)
+        if pod is None:
+            raise RuntimeError(
+                f"_PodFleet.finish({self.dep.key}, pod={pod_id}, "
+                f"rid={rid}): pod was drained and removed — a release "
+                "into a scaled-in pod cannot resurrect its slot")
+        rep = pod.replicas.get(rid)
+        if rep is None:
+            raise RuntimeError(
+                f"_PodFleet.finish({self.dep.key}, pod={pod_id}, "
+                f"rid={rid}): replica already removed — double release "
+                "on a draining pod")
+        if rep.draining:
+            rep.busy = False
+            del pod.replicas[rid]
+            if not pod.replicas:
+                del self.pods[pod_id]
+                self.pods_drained += 1
+            self.sync_dep()
+            return
+        pod.release(rep)
+        if pod.queue and pod.idle_replica() is not None:
+            nxt = sim._pop_queued(pod)
+            if nxt is not None:
+                sim._start_service(pod, nxt)
+
+    # ---- boot / drain lifecycle --------------------------------------- #
+    def on_ready(self, sim: "ClusterSimulator") -> None:
+        """A whole pod finished booting: materialise ``slots_per_pod``
+        fresh replicas and immediately steal queued work from the most
+        backlogged pods — scale-out must relieve EXISTING backlog, not
+        just future arrivals (sticky queues would otherwise strand it)."""
+        self.pending_pods = max(0, self.pending_pods - 1)
+        pod = self._new_pod(self.slots_per_pod)
+        self.pods_booted += 1
+        self.sync_dep()
+        while pod.idle_replica() is not None:
+            donor = max((p for p in self.pods.values()
+                         if p.queue and p.pod_id != pod.pod_id),
+                        key=lambda p: (len(p.queue), -p.pod_id),
+                        default=None)
+            if donor is None:
+                break
+            nxt = sim._pop_queued(donor)
+            if nxt is None:
+                continue     # donor held only cancelled copies; rescan
+            sim._start_service(pod, nxt)
+
+    def mark_pod_draining(self, sim: "ClusterSimulator",
+                          pod: _Pool) -> None:
+        """Graceful pod termination: queued work respills to the
+        survivors (cancel-aware — a cancelled SafeTail duplicate queued
+        here is dropped for good, it cannot resurrect on another pod),
+        idle replicas leave immediately, busy ones finish in flight, and
+        the pod object is removed once empty."""
+        if pod.draining:
+            return
+        pod.draining = True
+        while pod.queue:
+            nxt = sim._pop_queued(pod)
+            if nxt is None:
+                break
+            self._respill(sim, nxt)
+        for rep in list(pod.replicas.values()):
+            pod.mark_draining(rep)
+        if not pod.replicas:
+            del self.pods[pod.pod_id]
+            self.pods_drained += 1
+        self.sync_dep()
+
+    def apply_scale(self, sim: "ClusterSimulator", ev: ScaleEvent) -> None:
+        """Pod-granular enactment of a replica-granular scale decision:
+        PM-HPA (and the reactive baseline) plan in whole replicas, but
+        capacity moves in whole pods — ``ceil(to_n / slots_per_pod)``
+        pods up, bounded by ``floor(n_max / slots_per_pod)`` so
+        materialised replicas NEVER exceed ``n_max``. When ``n_max`` is
+        not a multiple of the pod size that floor leaves the last
+        partial pod's worth of quota unreachable to BOOT (a remainder
+        pod built at t=0 cannot be rebuilt after a drain) — deliberate
+        physics: capacity quantisation is exactly the pod-granularity
+        cost the pods-axis matrix measures, pinned in
+        ``tests/test_sim_pods.py``. Scale-in drains the emptiest
+        pod(s), never below one active pod, and ONLY when the event
+        asks for fewer replicas than are ready or booting — a
+        hold/scale-out event whose pod rounding lands below the current
+        pod count (e.g. re-asserting ``n_max`` over a remainder pod)
+        must not drain anything."""
+        spp = self.slots_per_pod
+        want_pods = max(1, -(-ev.to_n // spp))
+        want_pods = min(want_pods, max(1, self.dep.n_max // spp))
+        cur = self.n_active_pods() + self.pending_pods
+        if want_pods > cur:
+            for _ in range(want_pods - cur):
+                self.pending_pods += 1
+                sim._push(sim._now + self.dep.startup_delay,
+                          _REPLICA_READY, self.dep.key)
+        elif want_pods < cur and \
+                ev.to_n < self.n_ready + self.pending_pods * spp:
+            victims = sorted(
+                (p for p in self.pods.values() if not p.draining),
+                key=lambda p: (p.n_busy(), len(p.queue), -p.pod_id))
+            for pod in victims[: cur - want_pods]:
+                if self.n_active_pods() <= 1:
+                    break
+                self.mark_pod_draining(sim, pod)
+        self.sync_dep()
 
 
 @dataclasses.dataclass
@@ -222,6 +488,13 @@ class SimConfig:
     policy: str = "route_best"
     # Total copies (primary included) a redundant policy may dispatch.
     redundancy: int = 2
+    # Pod-level fleet physics (ISSUE 5): > 1 partitions every
+    # deployment's replicas into whole pods of ceil(n_replicas / pods)
+    # slots each — first-fit spillover, per-pod Eq. 5 utilisation,
+    # pod-granular scale-out (boot lag per POD) and emptiest-pod drain;
+    # see the module docstring. 1 (default) keeps the legacy monolithic
+    # pool per deployment, bit-identical to every pinned golden digest.
+    pods_per_deployment: int = 1
 
 
 @dataclasses.dataclass
@@ -235,6 +508,12 @@ class SimResult:
     # result was discarded after another copy completed first
     duplicates: int = 0
     dup_cancelled: int = 0
+    # pod-level fleet physics (pods_per_deployment > 1): whole pods
+    # booted/drained over the run, and the final per-pod occupancy
+    # (dep key -> [(busy, ready, queued), ...]) — empty in legacy mode
+    pods_booted: int = 0
+    pods_drained: int = 0
+    pod_stats: dict = dataclasses.field(default_factory=dict)
 
     def latencies(self) -> np.ndarray:
         return np.array([r.latency for r in self.completed if r.latency is not None])
@@ -271,7 +550,16 @@ class ClusterSimulator:
         self.cfg = config
         self.rng = np.random.default_rng(config.seed)
         self.metrics = MetricsRegistry()
-        self.pools: dict[str, _Pool] = {d.key: _Pool(d) for d in cluster}
+        # Pod-level fleet physics (ISSUE 5): pods_per_deployment > 1
+        # swaps every monolithic pool for a _PodFleet; == 1 keeps the
+        # legacy _Pool path untouched (bit-identical golden digests).
+        self._multi = config.pods_per_deployment > 1
+        if self._multi:
+            self.pools: dict[str, _Pool | _PodFleet] = {
+                d.key: _PodFleet(d, config.pods_per_deployment)
+                for d in cluster}
+        else:
+            self.pools = {d.key: _Pool(d) for d in cluster}
         self.scheduler = MultiQueueScheduler()
         self.router = Router(cluster, config.router, self.metrics,
                              rho_buckets=config.control_rho_buckets)
@@ -340,9 +628,13 @@ class ClusterSimulator:
         rep.busy = True
         req.start_service = self._now
         st = self._service_time(pool)
-        self._push(self._now + st, _SERVICE_END, (pool.dep.key, rep.rid, req))
+        self._push(self._now + st, _SERVICE_END,
+                   (pool.dep.key, pool.pod_id, rep.rid, req))
 
-    def _enqueue(self, pool: _Pool, req: Request) -> None:
+    def _enqueue(self, pool: "_Pool | _PodFleet", req: Request) -> None:
+        if self._multi:
+            pool.submit(self, req)
+            return
         pool.rate.observe(self._now)
         if pool.idle_replica() is not None:
             self._start_service(pool, req)
@@ -509,9 +801,9 @@ class ClusterSimulator:
             return rq
         return None
 
-    def _on_service_end(self, key: str, rid: int, req: Request) -> None:
+    def _on_service_end(self, key: str, pod_id: int, rid: int,
+                        req: Request) -> None:
         pool = self.pools[key]
-        rep = pool.replicas.get(rid)
         gid = self._dup_member.get(req.req_id) if self._dup_member else None
         if gid is None:
             req.completion = self._now + pool.net_rtt
@@ -520,6 +812,10 @@ class ClusterSimulator:
                 self.reactive.observe(pool.dep, req.latency)
         else:
             self._dup_service_end(gid, req, pool)
+        if self._multi:
+            pool.finish(self, pod_id, rid)
+            return
+        rep = pool.replicas.get(rid)
         if rep is None:
             return
         if rep.draining:
@@ -535,6 +831,9 @@ class ClusterSimulator:
 
     def _on_replica_ready(self, key: str) -> None:
         pool = self.pools[key]
+        if self._multi:
+            pool.on_ready(self)   # one whole pod materialises
+            return
         pool.pending_up = max(0, pool.pending_up - 1)
         pool.add_replica()
         pool.sync_dep()
@@ -546,6 +845,10 @@ class ClusterSimulator:
 
     def _apply_scale(self, ev: ScaleEvent) -> None:
         pool = self.pools[ev.deployment_key]
+        if self._multi:
+            pool.apply_scale(self, ev)   # pod-granular enactment
+            self.all_scale_events.append(ev)
+            return
         dep = pool.dep
         current = pool.n_ready + pool.pending_up
         if ev.to_n > current:
@@ -617,4 +920,16 @@ class ClusterSimulator:
             duplicates=(self.plane.dup_dispatched
                         if self.plane is not None else 0),
             dup_cancelled=self._dup_cancelled,
+            pods_booted=(sum(p.pods_booted for p in self.pools.values())
+                         if self._multi else 0),
+            pods_drained=(sum(p.pods_drained for p in self.pools.values())
+                          if self._multi else 0),
+            pod_stats=self.fleet_stats() if self._multi else {},
         )
+
+    def fleet_stats(self) -> dict[str, list[tuple[int, int, int]]]:
+        """Per-pod (busy, ready, queued) occupancy per deployment — the
+        simulator twin of ``FleetPlane.fleet_stats``. In legacy mode the
+        single pool reports as one pod."""
+        return {key: p.stats() if self._multi else [p.stats()]
+                for key, p in self.pools.items()}

@@ -73,6 +73,10 @@ except ModuleNotFoundError:
         def draw(self, rng):
             return rng.choice(self.seq)
 
+    class _Booleans(_Strategy):
+        def draw(self, rng):
+            return rng.random() < 0.5
+
     class st:  # noqa: N801 — mirrors `hypothesis.strategies as st`
         @staticmethod
         def floats(min_value, max_value, **_kw):
@@ -89,6 +93,10 @@ except ModuleNotFoundError:
         @staticmethod
         def sampled_from(seq):
             return _SampledFrom(seq)
+
+        @staticmethod
+        def booleans():
+            return _Booleans()
 
     class settings:  # noqa: N801 — decorator that records max_examples
         def __init__(self, max_examples: int = 10, **_kw):

@@ -117,6 +117,56 @@ class TestWindowedGoldenDigests:
         assert s["p50"] == pytest.approx(want["p50"], rel=1e-9)
         assert s["p99"] == pytest.approx(want["p99"], rel=1e-9)
 
+    @pytest.mark.parametrize("trace,window,policy",
+                             sorted(GOLDEN_WINDOWED))
+    def test_windowed_pods_one_is_bit_identical(self, trace, window,
+                                                policy):
+        """(ISSUE 5) pods_per_deployment=1 through the windowed plane
+        reproduces every pinned windowed digest bit-for-bit — the
+        pod-fleet refactor must not move the legacy path."""
+        arr = trace_for(trace)
+        sim = ClusterSimulator(
+            two_tier(), SimConfig(mode="laimr", seed=11, slo=1.0,
+                                  admission_window=window, policy=policy,
+                                  pods_per_deployment=1))
+        res = sim.run(arr, horizon=500.0)
+        want = GOLDEN_WINDOWED[(trace, window, policy)]
+        s = res.summary()
+        assert int(s["n"]) == want["n"]
+        assert res.offload_fast == want["offload_fast"]
+        assert s["p50"] == pytest.approx(want["p50"], rel=1e-9)
+        assert s["p99"] == pytest.approx(want["p99"], rel=1e-9)
+
+    # Windowed MULTI-POD digests (ISSUE 5): the same plane + policy over
+    # per-pod pools (pods_per_deployment=2 -> two 1-replica pods per
+    # deployment). Pinned so spillover-physics changes are loud in the
+    # windowed mode too, not just the scalar path.
+    GOLDEN_WINDOWED_MULTIPOD = {
+        ("ramp", 0.1, "route_best"): dict(
+            n=599, p50=0.3944404734213549, p99=1.1191280504623533,
+            offload_fast=78),
+        ("burst", 0.1, "route_best"): dict(
+            n=626, p50=0.7553602985182848, p99=4.540340771251574,
+            offload_fast=340),
+    }
+
+    @pytest.mark.parametrize("trace,window,policy",
+                             sorted(GOLDEN_WINDOWED_MULTIPOD))
+    def test_windowed_multipod_digest_stable(self, trace, window, policy):
+        arr = trace_for(trace)
+        sim = ClusterSimulator(
+            two_tier(), SimConfig(mode="laimr", seed=11, slo=1.0,
+                                  admission_window=window, policy=policy,
+                                  pods_per_deployment=2))
+        res = sim.run(arr, horizon=500.0)
+        want = self.GOLDEN_WINDOWED_MULTIPOD[(trace, window, policy)]
+        s = res.summary()
+        assert int(s["n"]) == want["n"]
+        assert res.offload_fast == want["offload_fast"]
+        assert s["p50"] == pytest.approx(want["p50"], rel=1e-9)
+        assert s["p99"] == pytest.approx(want["p99"], rel=1e-9)
+        sim.plane.check_conservation()
+
     def test_guard_offload_volume_matches_scalar_alg1(self):
         """The guard-faithful window policy offloads in the same regime
         as the scalar per-arrival Algorithm 1 (goldens: 281/599 on ramp,

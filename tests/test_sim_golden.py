@@ -78,6 +78,78 @@ class TestGoldenTraces:
         np.testing.assert_array_equal(runs[0], runs[1])
 
 
+# Pod-level fleet physics (ISSUE 5): pods_per_deployment=2 splits each
+# two-replica deployment into two 1-replica pods — first-fit spillover,
+# per-pod Eq. 5 utilisation, pod-granular scale enactment. These digests
+# pin the NEW physics so future spillover changes are loud; the pods=1
+# equivalence tests below pin the OLD physics as bit-identical.
+GOLDEN_MULTIPOD = {
+    ("ramp", "laimr"): dict(n=599, p50=0.6344812324149416,
+                            p99=1.5306280316997227, offload_fast=281,
+                            pods_booted=12, pods_drained=14),
+    ("ramp", "baseline"): dict(n=599, p50=0.9437283172878637,
+                               p99=2.132781726632059, offload_fast=0,
+                               pods_booted=4, pods_drained=0),
+    ("burst", "laimr"): dict(n=626, p50=0.9930898332854028,
+                             p99=4.204403735490555, offload_fast=412,
+                             pods_booted=18, pods_drained=20),
+    ("burst", "baseline"): dict(n=626, p50=55.41202611171452,
+                                p99=119.23841260727839, offload_fast=0,
+                                pods_booted=4, pods_drained=0),
+}
+
+
+class TestMultiPodGoldenTraces:
+    """Pinned multi-pod spillover physics + the pods=1 equivalence
+    contract (ISSUE 5 acceptance bar)."""
+
+    @pytest.mark.parametrize("trace,mode", sorted(GOLDEN_MULTIPOD))
+    def test_multipod_digest_stable(self, trace, mode):
+        arr = trace_for(trace)
+        sim = ClusterSimulator(
+            two_tier(), SimConfig(mode=mode, seed=11, slo=1.0,
+                                  pods_per_deployment=2))
+        res = sim.run(arr, horizon=500.0)
+        want = GOLDEN_MULTIPOD[(trace, mode)]
+        s = res.summary()
+        assert int(s["n"]) == want["n"]
+        assert res.offload_fast == want["offload_fast"]
+        assert res.pods_booted == want["pods_booted"]
+        assert res.pods_drained == want["pods_drained"]
+        assert s["p50"] == pytest.approx(want["p50"], rel=1e-9)
+        assert s["p99"] == pytest.approx(want["p99"], rel=1e-9)
+
+    @pytest.mark.parametrize("trace,mode", sorted(GOLDEN))
+    def test_pods_one_is_bit_identical_to_legacy(self, trace, mode):
+        """pods_per_deployment=1 must reproduce the pre-fleet scalar
+        digests bit-for-bit — the explicit equivalence contract, not
+        just the default-value coincidence."""
+        arr = trace_for(trace)
+        sim = ClusterSimulator(
+            two_tier(), SimConfig(mode=mode, seed=11, slo=1.0,
+                                  pods_per_deployment=1))
+        assert sim._multi is False
+        res = sim.run(arr, horizon=500.0)
+        want = GOLDEN[(trace, mode)]
+        s = res.summary()
+        assert int(s["n"]) == want["n"]
+        assert res.offload_fast == want["offload_fast"]
+        assert s["p50"] == pytest.approx(want["p50"], rel=1e-9)
+        assert s["p99"] == pytest.approx(want["p99"], rel=1e-9)
+        assert res.pods_booted == 0 and res.pods_drained == 0
+
+    @pytest.mark.parametrize("trace", ["ramp", "burst"])
+    def test_multipod_repeatable_in_process(self, trace):
+        arr = trace_for(trace)
+        runs = []
+        for _ in range(2):
+            sim = ClusterSimulator(
+                two_tier(), SimConfig(mode="laimr", seed=11, slo=1.0,
+                                      pods_per_deployment=2))
+            runs.append(sim.run(arr, horizon=500.0).latencies())
+        np.testing.assert_array_equal(runs[0], runs[1])
+
+
 def scenario(name: str):
     """The scenario matrix, sized so each case simulates in well under a
     second but still exercises queueing + scaling + offload."""
@@ -109,10 +181,12 @@ SCENARIOS = ["poisson", "bursts", "diurnal", "mmpp", "flash", "mixed"]
 class TestScenarioInvariants:
     @pytest.mark.parametrize("name", SCENARIOS)
     @pytest.mark.parametrize("mode", ["laimr", "baseline"])
-    def test_conservation_and_telemetry(self, name, mode):
+    @pytest.mark.parametrize("pods", [1, 3])
+    def test_conservation_and_telemetry(self, name, mode, pods):
         cluster, arr = scenario(name)
         assert arr, name
-        sim = ClusterSimulator(cluster, SimConfig(mode=mode, seed=5))
+        sim = ClusterSimulator(cluster, SimConfig(mode=mode, seed=5,
+                                                  pods_per_deployment=pods))
         res = sim.run(arr, horizon=600.0)
         # conservation: every arrival completes exactly once
         assert len(res.completed) == len(arr)

@@ -1,0 +1,381 @@
+"""Pod-level fleet physics in the discrete-event simulator (ISSUE 5).
+
+Covers the tentpole's physics contract and the hardened-release
+satellite:
+
+  (i)   fleet topology: ``pods_per_deployment`` partitions replicas into
+        whole pods (ceil split), first-fit admission in pod-creation
+        order, sticky shortest-queue spillover when saturated;
+  (ii)  pod boot/drain lifecycle: scale-out boots WHOLE pods after
+        ``startup_delay`` and a fresh pod steals queued backlog;
+        scale-in drains the emptiest pod (queue respills, busy replicas
+        finish in flight, the pod object is removed when idle) and never
+        below one active pod;
+  (iii) hardened release at the simulator pod level: double-releasing a
+        replica slot — including on a draining or scaled-in pod — raises
+        (mirrors the PR-4 ``SlotBank``/``PodGroup`` guarantees), and a
+        cancelled SafeTail duplicate queued on a removed pod is dropped,
+        never resurrected;
+  (iv)  the serving-side ``PodGroup`` drain/retire lifecycle matches:
+        draining pods leave the admission rotation, retired pods' slots
+        cannot be released back into existence.
+"""
+import dataclasses
+
+import pytest
+
+from repro.control import FleetPlane, PodGroup, SlotBank
+from repro.core.autoscaler import ScaleEvent
+from repro.core.catalogue import Cluster, Deployment
+from repro.core.latency_model import CLOUD, PI4_EDGE, YOLOV5M
+from repro.core.scheduler import QualityClass, Request
+from repro.core.simulator import ClusterSimulator, SimConfig, _PodFleet
+from repro.core.workload import bounded_pareto_bursts, poisson_arrivals
+from test_sim_golden import two_tier
+
+
+def cluster_n(n_edge: int = 4, edge_max: int = 8,
+              n_cloud: int = 2) -> Cluster:
+    edge = dataclasses.replace(PI4_EDGE, net_rtt=0.05)
+    cloud = dataclasses.replace(CLOUD, net_rtt=0.086)
+    return Cluster([
+        Deployment(YOLOV5M, edge, QualityClass.BALANCED,
+                   n_replicas=n_edge, n_max=edge_max),
+        Deployment(YOLOV5M, cloud, QualityClass.BALANCED,
+                   n_replicas=n_cloud, n_max=16),
+    ])
+
+
+def mk_sim(cluster=None, pods=2, **cfg):
+    sim = ClusterSimulator(cluster or cluster_n(),
+                           SimConfig(mode="laimr", seed=0,
+                                     pods_per_deployment=pods, **cfg))
+    sim._now = 0.0
+    return sim
+
+
+def rq(k: int = 0) -> Request:
+    return Request(model="yolov5m", quality=QualityClass.BALANCED,
+                   arrival=0.001 * k)
+
+
+class TestFleetTopology:
+    """(i) construction + first-fit spillover."""
+
+    def test_ceil_split_into_pods(self):
+        # 4 replicas / 3 pods -> ceil = 2 slots/pod -> pods of (2, 2)
+        sim = mk_sim(cluster_n(n_edge=4), pods=3)
+        fleet = sim.pools["yolov5m@pi4-edge"]
+        assert isinstance(fleet, _PodFleet)
+        assert fleet.slots_per_pod == 2
+        assert [p._n_ready for p in fleet.pods.values()] == [2, 2]
+        assert fleet.n_ready == 4
+        # 2 cloud replicas / 3 pods -> 1 slot/pod -> pods of (1, 1)
+        cloud = sim.pools["yolov5m@cloud"]
+        assert cloud.slots_per_pod == 1
+        assert [p._n_ready for p in cloud.pods.values()] == [1, 1]
+
+    def test_first_fit_then_shortest_queue_spillover(self):
+        sim = mk_sim(cluster_n(n_edge=4), pods=2)
+        fleet = sim.pools["yolov5m@pi4-edge"]
+        p0, p1 = fleet.pods[0], fleet.pods[1]
+        # first two arrivals fill pod 0 (first-fit), next two pod 1
+        for k in range(4):
+            fleet.submit(sim, rq(k))
+        assert p0.n_busy() == 2 and p1.n_busy() == 2
+        # saturated: arrivals now spill to the SHORTEST queue, oldest
+        # pod on ties, and stay there (sticky per-pod FIFO)
+        fleet.submit(sim, rq(4))
+        assert (len(p0.queue), len(p1.queue)) == (1, 0)
+        fleet.submit(sim, rq(5))
+        assert (len(p0.queue), len(p1.queue)) == (1, 1)
+        fleet.submit(sim, rq(6))
+        assert (len(p0.queue), len(p1.queue)) == (2, 1)
+        assert fleet.stats() == [(2, 2, 2), (2, 2, 1)]
+
+    def test_per_pod_rates_observe_their_own_arrivals(self):
+        sim = mk_sim(cluster_n(n_edge=2), pods=2)
+        fleet = sim.pools["yolov5m@pi4-edge"]
+        fleet.submit(sim, rq(0))       # -> pod 0 (first fit)
+        assert fleet.pods[0].rate.rate(0.0) > 0.0
+        assert fleet.pods[1].rate.rate(0.0) == 0.0
+
+    def test_pods_one_keeps_legacy_pool(self):
+        sim = ClusterSimulator(cluster_n(), SimConfig(pods_per_deployment=1))
+        assert sim._multi is False
+        assert not isinstance(sim.pools["yolov5m@pi4-edge"], _PodFleet)
+
+    def test_fleet_stats_surface(self):
+        sim = mk_sim(pods=2)
+        stats = sim.fleet_stats()
+        assert set(stats) == {"yolov5m@pi4-edge", "yolov5m@cloud"}
+        for per_pod in stats.values():
+            assert all(len(t) == 3 for t in per_pod)
+
+
+class TestPodScaleLifecycle:
+    """(ii) whole-pod boot with startup lag, emptiest-pod drain."""
+
+    def test_scale_out_boots_whole_pods_with_lag(self):
+        sim = mk_sim(cluster_n(n_edge=4, edge_max=8), pods=2)
+        fleet = sim.pools["yolov5m@pi4-edge"]
+        key = fleet.dep.key
+        sim._apply_scale(ScaleEvent(0.0, key, 4, 7, "t"))
+        # ceil(7 / 2) = 4 pods wanted, 2 active -> 2 pods boot
+        assert fleet.pending_pods == 2
+        assert len(fleet.pods) == 2            # nothing ready yet
+        ready = [e for e in sim._events if e[1] == 2]   # _REPLICA_READY
+        assert len(ready) == 2
+        assert all(t == fleet.dep.startup_delay for t, *_ in ready)
+        sim._now = fleet.dep.startup_delay
+        sim._on_replica_ready(key)
+        sim._on_replica_ready(key)
+        assert fleet.pending_pods == 0
+        assert len(fleet.pods) == 4 and fleet.n_ready == 8
+        assert fleet.pods_booted == 2
+        # materialised capacity never exceeds n_max (pod rounding is
+        # bounded by floor(n_max / slots_per_pod))
+        sim._apply_scale(ScaleEvent(1.0, key, 8, 8, "t"))
+        assert fleet.n_active_pods() + fleet.pending_pods <= 4
+
+    def test_fresh_pod_steals_backlog(self):
+        sim = mk_sim(cluster_n(n_edge=2, edge_max=8), pods=2)
+        fleet = sim.pools["yolov5m@pi4-edge"]
+        for k in range(6):                     # 2 serving, 4 queued
+            fleet.submit(sim, rq(k))
+        assert sum(len(p.queue) for p in fleet.pods.values()) == 4
+        fleet.pending_pods = 1
+        fleet.on_ready(sim)                    # one pod of 1 slot boots
+        # the new pod immediately serves stolen backlog
+        new_pod = fleet.pods[max(fleet.pods)]
+        assert new_pod.n_busy() == 1
+        assert sum(len(p.queue) for p in fleet.pods.values()) == 3
+
+    def test_scale_in_drains_emptiest_pod_and_respills(self):
+        sim = mk_sim(cluster_n(n_edge=4, edge_max=8), pods=2)
+        fleet = sim.pools["yolov5m@pi4-edge"]
+        p0, p1 = fleet.pods[0], fleet.pods[1]
+        # occupy pod 0 fully + queue; pod 1 idle -> pod 1 is emptiest
+        for k in range(3):
+            fleet.pods[0].rate.observe(0.0)
+            sim._start_service(p0, rq(k)) if k < 2 else p0.queue.append(rq(k))
+        sim._apply_scale(ScaleEvent(0.0, fleet.dep.key, 4, 2, "t"))
+        assert 1 not in fleet.pods             # idle pod removed outright
+        assert fleet.pods_drained == 1
+        assert fleet.n_active_pods() == 1
+        assert fleet.dep.n_replicas == 2
+        # draining a BUSY pod keeps it alive until in-flight work ends,
+        # respilling its queue to the survivors is exercised below
+        sim2 = mk_sim(cluster_n(n_edge=4, edge_max=8), pods=2)
+        fl2 = sim2.pools["yolov5m@pi4-edge"]
+        q0, q1 = fl2.pods[0], fl2.pods[1]
+        for k in range(4):                     # all four replicas busy
+            fl2.submit(sim2, rq(k))
+        q1.queue.append(rq(9))                 # backlog on pod 1
+        fl2.mark_pod_draining(sim2, q1)
+        assert q1.draining and 1 in fl2.pods   # busy -> still present
+        assert len(q1.queue) == 0              # respilled
+        assert len(q0.queue) == 1              # ... onto pod 0
+        assert fl2.dep.n_replicas == 2         # only pod 0 counts ready
+
+    def test_whole_pod_quantisation_of_n_max(self):
+        """Capacity moves in WHOLE pods: with n_max=7 and 2-slot pods,
+        enactment tops out at floor(7/2)=3 pods = 6 replicas — the last
+        partial pod of quota is unreachable by design (the
+        pod-granularity cost the pods axis measures), and materialised
+        replicas never exceed n_max."""
+        sim = mk_sim(cluster_n(n_edge=4, edge_max=7), pods=2)
+        fleet = sim.pools["yolov5m@pi4-edge"]
+        assert fleet.slots_per_pod == 2
+        sim._apply_scale(ScaleEvent(0.0, fleet.dep.key, 4, 7, "t"))
+        assert fleet.n_active_pods() + fleet.pending_pods == 3
+        sim._on_replica_ready(fleet.dep.key)
+        assert fleet.n_ready == 6 <= 7
+
+    def test_hold_event_over_remainder_pod_drains_nothing(self):
+        """A hold/scale-out event whose pod rounding lands below the
+        current pod count must NOT drain: with pods [2, 1] and
+        n_max=3 (floor cap = 1 pod), re-asserting to_n=3 keeps all 3
+        replicas — only a genuine replica-reduction drains."""
+        sim = mk_sim(cluster_n(n_edge=3, edge_max=3), pods=2)
+        fleet = sim.pools["yolov5m@pi4-edge"]
+        assert fleet.slots_per_pod == 2
+        assert [p._n_ready for p in fleet.pods.values()] == [2, 1]
+        sim._apply_scale(ScaleEvent(0.0, fleet.dep.key, 3, 3, "t"))
+        assert fleet.n_ready == 3 and fleet.pods_drained == 0
+        sim._apply_scale(ScaleEvent(5.0, fleet.dep.key, 3, 3, "t"))
+        assert fleet.n_ready == 3 and fleet.pods_drained == 0
+        # a genuine reduction still drains the emptiest (remainder) pod
+        sim._apply_scale(ScaleEvent(10.0, fleet.dep.key, 3, 2, "t"))
+        assert fleet.n_ready == 2 and fleet.pods_drained == 1
+
+    def test_never_drains_below_one_active_pod(self):
+        sim = mk_sim(cluster_n(n_edge=2, edge_max=8), pods=2)
+        fleet = sim.pools["yolov5m@pi4-edge"]
+        sim._apply_scale(ScaleEvent(0.0, fleet.dep.key, 2, 1, "t"))
+        assert fleet.n_active_pods() == 1
+        sim._apply_scale(ScaleEvent(5.0, fleet.dep.key, 1, 1, "t"))
+        assert fleet.n_active_pods() == 1
+        assert fleet.dep.n_replicas >= 1
+
+    def test_conservation_under_heavy_scaling(self):
+        """End-to-end: boot + drain + spillover churn loses nothing."""
+        for pods in (2, 4):
+            arr = bounded_pareto_bursts(4.0, 90.0, "yolov5m", seed=13)
+            sim = ClusterSimulator(
+                cluster_n(n_edge=2, edge_max=8),
+                SimConfig(mode="laimr", seed=13, slo=1.0,
+                          pods_per_deployment=pods))
+            res = sim.run(arr, horizon=600.0)
+            assert len(res.completed) == len(arr)
+            ids = [r.req_id for r in res.completed]
+            assert len(set(ids)) == len(ids)
+            assert res.pods_booted > 0
+            for r in res.completed:
+                assert r.latency is not None and r.latency > 0
+
+
+class TestHardenedReleaseSimPods:
+    """(iii) double release raises; removed pods resurrect nothing."""
+
+    def test_double_release_raises(self):
+        sim = mk_sim(pods=2)
+        fleet = sim.pools["yolov5m@pi4-edge"]
+        pod = fleet.pods[0]
+        fleet.submit(sim, rq(0))
+        rep = next(r for r in pod.replicas.values() if r.busy)
+        pod.release(rep)
+        with pytest.raises(RuntimeError, match="already free"):
+            pod.release(rep)
+        # the pool still works after the error
+        assert pod.idle_replica() is not None
+
+    def test_double_release_on_draining_pod_raises(self):
+        sim = mk_sim(cluster_n(n_edge=4), pods=2)
+        fleet = sim.pools["yolov5m@pi4-edge"]
+        pod = fleet.pods[1]
+        fleet.submit(sim, rq(0))               # pod 0 serves
+        fleet.pods[1].rate.observe(0.0)
+        sim._start_service(pod, rq(1))         # pod 1 busy too
+        fleet.mark_pod_draining(sim, pod)
+        rep = next(r for r in pod.replicas.values() if r.busy)
+        assert rep.draining and pod.draining
+        # the in-flight replica completes through the fleet path once...
+        fleet.finish(sim, pod.pod_id, rep.rid)
+        assert 1 not in fleet.pods             # pod fully drained away
+        # ...a second (stale) finish into the scaled-in pod is loud...
+        with pytest.raises(RuntimeError, match="resurrect"):
+            fleet.finish(sim, pod.pod_id, rep.rid)
+        # ...and so is releasing the removed replica directly
+        with pytest.raises(RuntimeError, match="already free"):
+            pod.release(rep)
+        # a stale finish for a removed REPLICA on a still-live draining
+        # pod is equally loud
+        sim3 = mk_sim(cluster_n(n_edge=4), pods=2)
+        fl3 = sim3.pools["yolov5m@pi4-edge"]
+        p3 = fl3.pods[1]
+        for k in range(2):
+            fl3.pods[k].rate.observe(0.0)
+        sim3._start_service(p3, rq(0))
+        busy = next(r for r in p3.replicas.values() if r.busy)
+        idle = next(r for r in p3.replicas.values() if not r.busy)
+        fl3.mark_pod_draining(sim3, p3)
+        assert idle.rid not in p3.replicas     # idle replica left already
+        with pytest.raises(RuntimeError, match="double release"):
+            fl3.finish(sim3, p3.pod_id, idle.rid)
+        fl3.finish(sim3, p3.pod_id, busy.rid)  # real completion is fine
+
+    def test_cancelled_duplicate_on_drained_pod_stays_dead(self):
+        """A SafeTail duplicate queued on a pod that drains is dropped at
+        respill (cancel-aware pop): it must not be re-dispatched, and the
+        group bookkeeping must resolve it exactly once."""
+        sim = mk_sim(cluster_n(n_edge=2), pods=2,
+                     admission_window=0.1, policy="safetail")
+        fleet = sim.pools["yolov5m@pi4-edge"]
+        pod = fleet.pods[1]
+        prim, dup = rq(0), rq(1)
+        # hand-register a duplicate group: dup is a queued raced copy
+        sim._dup_state[prim.req_id] = {
+            "done": False, "outstanding": 2,
+            "members": {prim.req_id, dup.req_id}, "primary": prim}
+        sim._dup_member[prim.req_id] = prim.req_id
+        sim._dup_member[dup.req_id] = prim.req_id
+        pod.queue.append(dup)
+        sim._cancelled.add(dup.req_id)         # its group already won
+        fleet.mark_pod_draining(sim, pod)
+        # the cancelled copy was dropped, not respilled to pod 0
+        assert all(len(p.queue) == 0 for p in fleet.pods.values())
+        assert dup.req_id not in sim._cancelled
+        assert sim._dup_state[prim.req_id]["outstanding"] == 1
+        assert dup.start_service is None       # never served anywhere
+
+    def test_safetail_multipod_end_to_end_conserves(self):
+        arr = bounded_pareto_bursts(4.0, 90.0, "yolov5m", seed=7)
+        sim = ClusterSimulator(
+            two_tier(), SimConfig(mode="laimr", seed=7, slo=2.0,
+                                  admission_window=0.1, policy="safetail",
+                                  redundancy=2, pods_per_deployment=2))
+        res = sim.run(arr, horizon=600.0)
+        assert len(res.completed) == len(arr)
+        assert len({r.req_id for r in res.completed}) == len(arr)
+        assert res.duplicates > 0
+        assert res.dup_cancelled == res.duplicates
+        sim.plane.check_conservation()
+
+
+class TestPodGroupLifecycle:
+    """(iv) serving-side PodGroup drain/retire mirrors the simulator."""
+
+    def test_draining_pod_leaves_admission_rotation(self):
+        grp = PodGroup([SlotBank(2), SlotBank(2)])
+        assert grp.admit_next() == 0
+        grp.mark_draining(0)
+        # pod 0's remaining free slot is no longer admittable
+        assert grp.n_free() == 2
+        assert grp.free_slots() == [2, 3]
+        assert grp.admit_next() == 2           # first ACTIVE pod wins
+        # in-flight work on the draining pod still releases home
+        grp.release(0)
+        with pytest.raises(RuntimeError, match="double"):
+            grp.release(0)
+
+    def test_retire_requires_drained_pod(self):
+        grp = PodGroup([SlotBank(1), SlotBank(1)])
+        slot = grp.admit_next()
+        assert slot == 0
+        with pytest.raises(RuntimeError, match="in flight"):
+            grp.retire(0)
+        grp.release(0)
+        grp.retire(0)
+        assert grp.admit_next() == 1           # bases did not shift
+
+    def test_release_into_retired_pod_cannot_resurrect(self):
+        """The serving-side twin of the simulator guarantee: a stale
+        cancellation of a SafeTail duplicate whose pod was scaled away
+        raises instead of resurrecting the slot."""
+        grp = PodGroup([SlotBank(1), SlotBank(1)])
+        grp.retire(0)
+        with pytest.raises(RuntimeError, match="resurrect"):
+            grp.release(0)
+        assert grp.n_free() == 1
+        with pytest.raises(IndexError):
+            grp.mark_draining(5)
+        with pytest.raises(IndexError):
+            grp.retire(5)
+
+    def test_fleet_plane_with_draining_pod_conserves(self):
+        fleet = FleetPlane(
+            two_tier(),
+            pods={"yolov5m@pi4-edge": [SlotBank(2), SlotBank(2)],
+                  "yolov5m@cloud": [SlotBank(2), SlotBank(2)]})
+        fleet.pod_group("yolov5m@pi4-edge").mark_draining(0)
+        for k in range(8):
+            fleet.submit(Request(model="yolov5m",
+                                 quality=QualityClass.BALANCED,
+                                 arrival=0.001 * k, slo=50.0), 0.001 * k)
+        decs = fleet.flush(0.1)
+        fleet.check_conservation()
+        # no admission landed on the draining pod (global slots 0..1)
+        for d in decs:
+            if d.target_key == "yolov5m@pi4-edge" and d.slot is not None:
+                assert d.slot >= 2
