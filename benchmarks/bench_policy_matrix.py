@@ -30,6 +30,17 @@ A dedicated ``paper3`` section evaluates SafeTail on the THREE-TIER
 scarce on the two-tier experiment cluster), recording duplicate rate vs
 pod count in the BENCH JSON. ``--smoke`` shrinks everything for CI.
 
+``--faults`` switches to the chaos matrix (ISSUE 6): every policy runs
+under seeded fault plans — ``none`` / ``crash`` (edge pods hard-killed
+mid-burst) / ``straggle`` (an edge pod serves 4x slow for a window) /
+``drop`` (lossy cloud uplink) — and each cell reports the
+SLO-attainment rate plus failed/retried/fault counts next to the
+percentiles. Conservation generalises per cell to ``completed + failed
+== arrivals`` and the plane ledger's ``admitted + offloaded + rejected
++ failed == arrivals``; a violation still aborts the bench. The rows
+land in a separate ``BENCH_policy_matrix_faults.json`` so the fault
+axis never clobbers the main matrix artifact.
+
 Results land in ``BENCH_policy_matrix.json``
 (:func:`benchmarks.common.write_bench_json`) and are uploaded as a CI
 artifact, so the policy/pods P99 trajectory is captured per-PR.
@@ -42,11 +53,12 @@ from benchmarks.bench_window_sweep import scenarios
 from benchmarks.common import experiment_cluster, finite_row, \
     write_bench_json
 from repro.core.catalogue import paper_cluster
-from repro.core.simulator import ClusterSimulator, SimConfig
+from repro.core.simulator import ClusterSimulator, FaultPlan, PodCrash, \
+    SimConfig, Straggler
 from repro.core.workload import mixed_traffic
 
 SLO = 1.8
-POLICIES = ("route_best", "guarded_alg1", "safetail")
+POLICIES = ("route_best", "guarded_alg1", "safetail", "reliable")
 WINDOWS = (0.05, 0.2)
 SMOKE_WINDOWS = (0.1,)
 PODS = (1, 2, 4)
@@ -55,20 +67,32 @@ SMOKE_PODS = (1, 2)
 
 def run_cell(arrivals: list, policy: str, window: float, seed: int,
              pods: int = 1, redundancy: int = 2, cluster=None,
-             label: str = "", slo: float = SLO) -> dict:
+             label: str = "", slo: float = SLO,
+             faults: FaultPlan = None) -> dict:
+    faults = faults if faults is not None else FaultPlan()
     sim = ClusterSimulator(
         cluster if cluster is not None else experiment_cluster(),
         SimConfig(mode="laimr", seed=seed, slo=slo, jitter_sigma=0.2,
                   admission_window=window, policy=policy,
-                  redundancy=redundancy, pods_per_deployment=pods))
+                  redundancy=redundancy, pods_per_deployment=pods,
+                  faults=faults))
     res = sim.run(arrivals, horizon=None)
     n_arr = len(arrivals)
-    # generalised conservation, enforced per cell (now per pod count too)
+    # generalised conservation, enforced per cell (now per pod count too;
+    # under fault injection FAILED is a terminal outcome, so the invariant
+    # is completed + failed == arrivals — with no faults failed must be 0
+    # and the check collapses to the strict completed == arrivals)
     where = label or f"{policy}@{window}/pods={pods}"
-    if len(res.completed) != n_arr:
+    n_failed = len(res.failed)
+    if faults.empty() and n_failed:
         raise SystemExit(
             f"policy matrix BROKE CONSERVATION: {where}: "
-            f"{len(res.completed)} completed != {n_arr} arrivals")
+            f"{n_failed} failures with an empty FaultPlan")
+    if len(res.completed) + n_failed != n_arr:
+        raise SystemExit(
+            f"policy matrix BROKE CONSERVATION: {where}: "
+            f"{len(res.completed)} completed + {n_failed} failed "
+            f"!= {n_arr} arrivals")
     sim.plane.check_conservation()
     if sim.plane.decided != n_arr:
         raise SystemExit(
@@ -85,6 +109,8 @@ def run_cell(arrivals: list, policy: str, window: float, seed: int,
         "flushes": sim.plane.flushes,
         "pods_booted": res.pods_booted,
         "pods_drained": res.pods_drained,
+        "slo_attain": res.slo_attainment(slo),
+        **res.fault_counts(),
     }
 
 
@@ -119,6 +145,79 @@ def paper3_safetail_rows(horizon: float, seed: int, pod_counts,
                   f"{row['p50']:.4f},{row['p99']:.4f},"
                   f"{row['offload_rate']:.3f},"
                   f"{row['duplicate_rate']:.3f},{row['flushes']}")
+    return rows
+
+
+# Chaos matrix (ISSUE 6). The fault cells run at the paper3 headroom
+# SLO: at 1.8 s the loaded Pi-4 edge tier is borderline-infeasible even
+# before a crash, so every policy collapses to the same cloud offload
+# and the fault axis measures nothing. 3.0 s keeps both tiers feasible,
+# which is the regime where recovery STRATEGY (duplicate into headroom
+# vs retry after the crash) separates the policies.
+FAULT_SLO = PAPER3_SLO
+FAULT_SCENARIOS = ("none", "crash", "straggle", "drop")
+EDGE_KEY = "yolov5m@pi4-edge"
+
+
+def fault_plans(horizon: float, seed: int) -> dict[str, FaultPlan]:
+    """Seeded fault plans scaled to the bench horizon: an edge pod is
+    hard-killed twice mid-trace (replacement boots after the configured
+    startup delay), an edge pod straggles at 4x for the middle of the
+    run, and the cloud uplink drops 20% of offloaded requests."""
+    return {
+        "none": FaultPlan(seed=seed),
+        "crash": FaultPlan(crashes=(
+            PodCrash(t=0.3 * horizon, dep_key=EDGE_KEY),
+            PodCrash(t=0.6 * horizon, dep_key=EDGE_KEY)), seed=seed),
+        "straggle": FaultPlan(stragglers=(
+            Straggler(t_start=0.25 * horizon, t_end=0.75 * horizon,
+                      dep_key=EDGE_KEY, factor=4.0),), seed=seed),
+        "drop": FaultPlan(drop_prob={"cloud": 0.2}, seed=seed),
+    }
+
+
+def faults_main(print_csv: bool = True, smoke: bool = False,
+                policies=None, seed: int = 7) -> list[dict]:
+    """Policy x fault-plan chaos matrix on the two-tier experiment
+    cluster (pods=2 so a crash kills a POD, not the whole tier)."""
+    horizon = 60.0 if smoke else 240.0
+    pols = tuple(policies) if policies is not None else POLICIES
+    arr = scenarios(horizon, seed)["pareto"]
+    plans = fault_plans(horizon, seed)
+    rows = []
+    attain: dict[tuple[str, str], float] = {}
+    if print_csv:
+        print("# policy x fault plan (pareto bursts, pods=2, "
+              f"slo={FAULT_SLO}; conservation completed + failed == "
+              "arrivals enforced per cell)")
+        print("policy,faults,n,failed,retried,crashes,drops,straggled,"
+              "slo_attain,p50_s,p99_s,duplicate_rate")
+    for pol in pols:
+        for fname in FAULT_SCENARIOS:
+            row = run_cell(arr, pol, 0.1, seed, pods=2, slo=FAULT_SLO,
+                           faults=plans[fname],
+                           label=f"faults:{pol}/{fname}")
+            rows.append({"policy": pol, "faults": fname,
+                         "window": 0.1, "pods": 2, **row})
+            attain[(pol, fname)] = row["slo_attain"]
+            if not finite_row(row, f"policy_matrix_faults:{pol}/{fname}"):
+                continue
+            if print_csv:
+                print(f"{pol},{fname},{row['n']},{row['failed']},"
+                      f"{row['retried']},{row['crashes']},{row['drops']},"
+                      f"{row['straggled']},{row['slo_attain']:.4f},"
+                      f"{row['p50']:.4f},{row['p99']:.4f},"
+                      f"{row['duplicate_rate']:.3f}")
+    if print_csv and ("reliable", "crash") in attain \
+            and ("route_best", "crash") in attain:
+        rel, base = attain[("reliable", "crash")], \
+            attain[("route_best", "crash")]
+        verdict = "BEATS" if rel > base else "DOES NOT BEAT"
+        print(f"# crash scenario: reliable slo_attain={rel:.4f} "
+              f"{verdict} route_best slo_attain={base:.4f}")
+    write_bench_json("policy_matrix_faults", {
+        "slo": FAULT_SLO, "seed": seed, "horizon": horizon,
+        "smoke": smoke, "pods": 2, "rows": rows})
     return rows
 
 
@@ -182,13 +281,19 @@ if __name__ == "__main__":
                     help="comma-separated window widths in seconds")
     ap.add_argument("--pods", default=None,
                     help="comma-separated pods_per_deployment counts")
+    ap.add_argument("--faults", action="store_true",
+                    help="run the chaos matrix (policy x fault plan) "
+                         "instead of the burst/window/pods matrix")
     ap.add_argument("--seed", type=int, default=7)
     args = ap.parse_args()
-    main(smoke=args.smoke,
-         policies=[p.strip() for p in args.policies.split(",")]
-         if args.policies else None,
-         windows=[float(w) for w in args.windows.split(",")]
-         if args.windows else None,
-         pods=[int(p) for p in args.pods.split(",")]
-         if args.pods else None,
-         seed=args.seed)
+    pol_arg = [p.strip() for p in args.policies.split(",")] \
+        if args.policies else None
+    if args.faults:
+        faults_main(smoke=args.smoke, policies=pol_arg, seed=args.seed)
+    else:
+        main(smoke=args.smoke, policies=pol_arg,
+             windows=[float(w) for w in args.windows.split(",")]
+             if args.windows else None,
+             pods=[int(p) for p in args.pods.split(",")]
+             if args.pods else None,
+             seed=args.seed)

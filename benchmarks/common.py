@@ -55,6 +55,28 @@ def finite_latencies(lat: np.ndarray, label: str) -> bool:
     return True
 
 
+def split_latencies(completed, failed=()) -> tuple[np.ndarray, int]:
+    """Split a trace into (finite latencies, explicit failure count).
+
+    Fault injection (ISSUE 6) makes requests without a latency a real
+    outcome, not an artefact: a FAILED request never completed, and a
+    completed request with a None/non-finite latency is equally unserved
+    work. The old helpers silently dropped both, so a policy that failed
+    half its traffic could still print a pristine P99. Percentiles are
+    computed over the finite latencies ONLY, but the failure count is
+    returned alongside so every table/row can report it explicitly.
+    """
+    lat = []
+    n_failed = len(failed)
+    for r in completed:
+        latency = r.latency
+        if latency is None or not np.isfinite(latency):
+            n_failed += 1
+        else:
+            lat.append(latency)
+    return np.asarray(lat, np.float64), n_failed
+
+
 def write_bench_json(name: str, payload, outdir: str = None) -> str:
     """Persist a benchmark's result rows as ``BENCH_<name>.json``.
 
@@ -117,13 +139,19 @@ def run_ramp(mode: str, seed: int, lambdas=None, segment: float = SEGMENT):
 def per_lambda_stats(res, lambdas=None, segment: float = SEGMENT,
                      warmup: float = WARMUP) -> dict[float, dict]:
     lambdas = lambdas or LAMBDAS
+    failed_trace = getattr(res, "failed", []) or []
     out = {}
     for k, lam in enumerate(lambdas):
         lo, hi = k * segment + warmup, (k + 1) * segment
-        lat = np.array([r.latency for r in res.completed
-                        if r.latency is not None and lo <= r.arrival < hi])
+
+        def in_window(r):
+            return lo <= r.arrival < hi
+
+        lat, n_failed = split_latencies(
+            [r for r in res.completed if in_window(r)],
+            [r for r in failed_trace if in_window(r)])
         if lat.size == 0:
-            out[lam] = {}
+            out[lam] = {"failed": n_failed} if n_failed else {}
             continue
         q1, q3 = np.percentile(lat, [25, 75])
         out[lam] = {
@@ -135,5 +163,6 @@ def per_lambda_stats(res, lambdas=None, segment: float = SEGMENT,
             "iqr": float(q3 - q1),
             "max": float(lat.max()),
             "n": int(lat.size),
+            "failed": n_failed,
         }
     return out

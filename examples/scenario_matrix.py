@@ -18,6 +18,14 @@ controller modes over per-pod pools (``SimConfig.pods_per_deployment``):
 first-fit spillover, pod-granular scale-out boot lag, emptiest-pod
 drain — compare against the default monolithic pools to see how pod
 granularity reshapes the tail.
+
+``--faults`` (ISSUE 6) injects a demo chaos plan into every run of BOTH
+controller modes — the home deployment's pod crashes a third of the way
+in (replacement boots after the startup delay), an edge pod straggles
+at 4x for the middle half, and the cloud uplink drops 10% of offloaded
+work — and adds SLO-attainment / failed / retried columns. Try it with
+``--policy reliable --window 0.1 --pods 2`` to watch attainment-aware
+routing absorb the same faults the default policy pays for.
 """
 from __future__ import annotations
 
@@ -27,7 +35,8 @@ import dataclasses
 from repro.core.catalogue import Cluster, Deployment, paper_cluster
 from repro.core.latency_model import CLOUD, PI4_EDGE, YOLOV5M
 from repro.core.scheduler import QualityClass
-from repro.core.simulator import ClusterSimulator, SimConfig
+from repro.core.simulator import ClusterSimulator, FaultPlan, PodCrash, \
+    SimConfig, Straggler
 from repro.core.workload import (bounded_pareto_bursts, diurnal_arrivals,
                                  flash_crowd_arrivals, mixed_traffic,
                                  mmpp_arrivals, poisson_arrivals,
@@ -74,45 +83,77 @@ def matrix(horizon: float, seed: int):
     }
 
 
+def demo_faults(cluster: Cluster, horizon: float, seed: int) -> FaultPlan:
+    """Demo chaos plan against the home (first-declared) deployment:
+    one crash at horizon/3, a 4x straggler window over the middle half,
+    and a 10% lossy cloud uplink."""
+    home = next(iter(cluster)).key
+    return FaultPlan(
+        crashes=(PodCrash(t=horizon / 3.0, dep_key=home),),
+        stragglers=(Straggler(t_start=horizon / 4.0,
+                              t_end=3.0 * horizon / 4.0,
+                              dep_key=home, factor=4.0),),
+        drop_prob={"cloud": 0.1}, seed=seed)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--horizon", type=float, default=240.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--policy", default="route_best",
                     help="routing strategy for the windowed laimr mode "
-                         "(route_best / guarded_alg1 / safetail)")
+                         "(route_best / guarded_alg1 / safetail / "
+                         "reliable)")
     ap.add_argument("--window", type=float, default=0.0,
                     help="admission-window width in seconds; 0 keeps "
                          "the scalar per-arrival Algorithm-1 path")
     ap.add_argument("--pods", type=int, default=1,
                     help="pods per deployment (1 = legacy monolithic "
                          "pool; >1 = pod-level fleet physics)")
+    ap.add_argument("--faults", action="store_true",
+                    help="inject the demo chaos plan (crash + straggler "
+                         "+ lossy uplink) into both controller modes")
+    ap.add_argument("--slo", type=float, default=1.8,
+                    help="deadline for the --faults attainment column "
+                         "(reporting only; routing is unchanged)")
     args = ap.parse_args()
 
     lane = args.policy if args.window > 0 else "scalar alg1"
     print(f"# laimr mode: {lane} (window={args.window}, "
-          f"pods={args.pods})")
-    print(f"{'scenario':<9} {'n':>6}  "
-          f"{'laimr p50/p99':>16}  {'base p50/p99':>16}  "
-          f"{'offl':>5}  {'p99 delta':>9}")
+          f"pods={args.pods}, faults={'on' if args.faults else 'off'})")
+    header = (f"{'scenario':<9} {'n':>6}  "
+              f"{'laimr p50/p99':>16}  {'base p50/p99':>16}  "
+              f"{'offl':>5}  {'p99 delta':>9}")
+    if args.faults:
+        header += f"  {'attain l/b':>13}  {'fail':>4}  {'retry':>5}"
+    print(header)
     scenarios = matrix(args.horizon, args.seed)
     for name, (make_cluster, trace) in scenarios.items():
         row = {}
         for mode in ("laimr", "baseline"):
+            cluster = make_cluster()
+            faults = demo_faults(cluster, args.horizon, args.seed) \
+                if args.faults else FaultPlan()
             sim = ClusterSimulator(
-                make_cluster(),
+                cluster,
                 SimConfig(mode=mode, seed=args.seed,
                           admission_window=args.window,
                           policy=args.policy,
-                          pods_per_deployment=args.pods))
+                          pods_per_deployment=args.pods,
+                          faults=faults))
             res = sim.run(trace)
-            row[mode] = (res.summary(), res.offload_fast)
-        (sl, offl), (sb, _) = row["laimr"], row["baseline"]
+            row[mode] = (res.summary(), res.offload_fast, res)
+        (sl, offl, rl), (sb, _, rb) = row["laimr"], row["baseline"]
         delta = (sb["p99"] - sl["p99"]) / sb["p99"] * 100.0
-        print(f"{name:<9} {int(sl['n']):>6}  "
-              f"{sl['p50']:>7.2f}/{sl['p99']:>7.2f}  "
-              f"{sb['p50']:>7.2f}/{sb['p99']:>7.2f}  "
-              f"{offl:>5}  {delta:>8.1f}%")
+        line = (f"{name:<9} {int(sl['n']):>6}  "
+                f"{sl['p50']:>7.2f}/{sl['p99']:>7.2f}  "
+                f"{sb['p50']:>7.2f}/{sb['p99']:>7.2f}  "
+                f"{offl:>5}  {delta:>8.1f}%")
+        if args.faults:
+            line += (f"  {rl.slo_attainment(args.slo):>5.2f}/"
+                     f"{rb.slo_attainment(args.slo):>5.2f}  "
+                     f"{len(rl.failed):>4}  {rl.retried:>5}")
+        print(line)
 
 
 if __name__ == "__main__":

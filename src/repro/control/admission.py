@@ -35,6 +35,12 @@ extra copies that occupy real slots but are accounted SEPARATELY: they
 never enter the primary triple, and first-completion cancellation
 releases their slots (double release is a loud error, never silent
 slot-count drift).
+
+Fault injection (ISSUE 6) extends the contract: a request whose settled
+copy is destroyed past its retry budget moves from its original bucket
+to ``FAILED`` (``ControlPlane.mark_failed``), so the invariant becomes
+``admitted + offloaded + rejected + failed == arrivals``; ``RETRIED``
+tallies re-dispatches separately, exactly like ``DUPLICATE``.
 """
 from __future__ import annotations
 
@@ -49,6 +55,13 @@ ADMITTED = "admitted"
 OFFLOADED = "offloaded"
 REJECTED = "rejected"
 DUPLICATE = "duplicate"
+# fault-extended terminal outcomes (ISSUE 6): a FAILED request was
+# admitted/offloaded but never completed (pod crash past the retry
+# budget, link drop with on_drop="fail", stranded on a dead fleet);
+# RETRIED counts re-dispatches and, like DUPLICATE, never enters the
+# primary conservation sum.
+FAILED = "failed"
+RETRIED = "retried"
 
 
 @dataclasses.dataclass
@@ -69,9 +82,19 @@ class AdmissionConfig:
 
     ``policy`` names the routing strategy in the
     :mod:`repro.control.policies` registry (``route_best`` /
-    ``guarded_alg1`` / ``safetail``); ``redundancy`` is the TOTAL copy
-    count (primary included) a redundant-dispatch policy may fan a
-    request out to — single-dispatch policies ignore it.
+    ``guarded_alg1`` / ``safetail`` / ``reliable``); ``redundancy`` is
+    the TOTAL copy count (primary included) a redundant-dispatch policy
+    may fan a request out to — single-dispatch policies ignore it.
+
+    Reliability knobs (ISSUE 6, consumed by the ``reliable`` policy):
+    ``latency_sigma`` is the baseline lognormal log-dispersion of
+    realised latency around the point estimate; ``link_jitter`` adds
+    per-tier dispersion and ``link_loss`` per-tier delivery-loss
+    probability (tier name -> value), together feeding the closed-form
+    SLO-attainment score; ``headroom_margin`` gates SafeTail-style
+    duplication — a duplicate is dispatched only onto candidates with
+    ``g <= slo - headroom_margin``, so redundancy is bought only when
+    the SLO leaves room to pay for it.
     """
 
     window: float = 0.05
@@ -81,6 +104,10 @@ class AdmissionConfig:
     erlang_table_size: int = 65
     policy: str = "route_best"
     redundancy: int = 2
+    latency_sigma: float = 0.25
+    link_loss: dict = dataclasses.field(default_factory=dict)
+    link_jitter: dict = dataclasses.field(default_factory=dict)
+    headroom_margin: float = 0.25
 
 
 @dataclasses.dataclass

@@ -113,6 +113,20 @@ class PodGroup:
         self.draining[pod_i] = True
         self.retired[pod_i] = True
 
+    def crash(self, pod_i: int) -> None:
+        """Hard-kill pod ``pod_i`` (fault injection, ISSUE 6): unlike
+        :meth:`retire` it does NOT require the pod to be drained — the
+        pod is gone NOW, and any in-flight slot it held is orphaned.
+        Subsequent releases into it raise (same guard as a retired
+        pod), so a completion racing the crash is loud, never a silent
+        slot resurrection; the caller owns re-admitting or failing the
+        orphaned requests."""
+        if not 0 <= pod_i < len(self.pods):
+            raise IndexError(f"PodGroup.crash({pod_i}): no such pod "
+                             f"(0..{len(self.pods) - 1})")
+        self.draining[pod_i] = True
+        self.retired[pod_i] = True
+
     # ---- pod-aware helpers -------------------------------------------- #
     def locate(self, slot: int) -> tuple[int, int]:
         """Global slot id -> (pod index, local slot id)."""

@@ -12,9 +12,10 @@
   accumulation with quality-class priority ordering;
 * the engine-slot binding cascade (winner -> feasible alternates ->
   upstream tier -> reject) with the generalised conservation contract
-  ``admitted + offloaded + rejected == arrivals`` (``duplicate``
-  outcomes from redundant-dispatch policies are accounted separately —
-  see :meth:`check_conservation`);
+  ``admitted + offloaded + rejected + failed == arrivals``
+  (``duplicate`` and ``retried`` outcomes from redundant dispatch /
+  fault injection are accounted separately — see
+  :meth:`check_conservation`, :meth:`mark_failed`);
 * first-completion cancellation for redundant dispatch
   (:meth:`first_completion`) — the losers' engine slots are released
   exactly once (double release is a loud error in the slot providers);
@@ -33,8 +34,8 @@ from typing import Optional
 
 import numpy as np
 
-from repro.control.admission import (ADMITTED, DUPLICATE, OFFLOADED,
-                                     REJECTED, AdmissionConfig,
+from repro.control.admission import (ADMITTED, DUPLICATE, FAILED, OFFLOADED,
+                                     REJECTED, RETRIED, AdmissionConfig,
                                      AdmissionDecision, AdmissionQueue)
 from repro.core.autoscaler import PMHPA
 from repro.core.catalogue import Cluster, Deployment
@@ -89,7 +90,7 @@ class ControlPlane:
         # generalised conservation ledger (see check_conservation)
         self.decided = 0
         self.outcomes = {ADMITTED: 0, OFFLOADED: 0, REJECTED: 0,
-                         DUPLICATE: 0}
+                         DUPLICATE: 0, FAILED: 0, RETRIED: 0}
         self.dup_dispatched = 0
         self.dup_cancelled = 0
         # redundant-dispatch groups with live engine slots, keyed by the
@@ -115,17 +116,37 @@ class ControlPlane:
     def check_conservation(self) -> None:
         """Assert the generalised conservation contract over everything
         this plane has decided: every drained request got exactly one
-        primary outcome, with duplicates ledgered separately."""
-        triple = (self.outcomes[ADMITTED] + self.outcomes[OFFLOADED]
-                  + self.outcomes[REJECTED])
-        if triple != self.decided:
+        terminal outcome — ``admitted + offloaded + rejected + failed
+        == arrivals`` (ISSUE 6) — with duplicates and retries ledgered
+        separately."""
+        total = (self.outcomes[ADMITTED] + self.outcomes[OFFLOADED]
+                 + self.outcomes[REJECTED] + self.outcomes[FAILED])
+        if total != self.decided:
             raise AssertionError(
-                f"conservation broken: admitted+offloaded+rejected == "
-                f"{triple} != {self.decided} decided ({self.outcomes})")
+                f"conservation broken: admitted+offloaded+rejected+failed "
+                f"== {total} != {self.decided} decided ({self.outcomes})")
         if self.outcomes[DUPLICATE] != self.dup_dispatched:
             raise AssertionError(
                 f"duplicate ledger drifted: {self.outcomes[DUPLICATE]} "
                 f"outcomes != {self.dup_dispatched} dispatched")
+
+    def mark_failed(self, *, offloaded: bool) -> None:
+        """Fault injection settled a request as lost (crash past its
+        retry budget, dropped link, stranded on a dead fleet): move its
+        terminal outcome from the bucket it settled into at admission
+        time to FAILED, keeping the conservation sum intact."""
+        src = OFFLOADED if offloaded else ADMITTED
+        if self.outcomes[src] <= 0:
+            raise AssertionError(
+                f"mark_failed: no {src} outcome to reclassify "
+                f"({self.outcomes})")
+        self.outcomes[src] -= 1
+        self.outcomes[FAILED] += 1
+
+    def mark_retried(self) -> None:
+        """Ledger one fault-triggered re-dispatch (accounted separately,
+        like DUPLICATE — the request keeps its single primary outcome)."""
+        self.outcomes[RETRIED] += 1
 
     # ------------------------------------------------------------------ #
     def _take_slot(self, dep: Deployment) -> tuple[bool, Optional[int]]:

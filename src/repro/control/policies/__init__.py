@@ -13,7 +13,9 @@ WindowDecision``. The registry maps stable string names — usable from
 * ``guarded_alg1`` — home-tier binding + the paper's per-request offload
   guard (Algorithm 1 lines 8-11), one vectorised comparison per window;
 * ``safetail``     — top-k feasible redundant dispatch with
-  first-completion cancellation (SafeTail, arXiv:2408.17171).
+  first-completion cancellation (SafeTail, arXiv:2408.17171);
+* ``reliable``     — SLO-attainment-probability routing with
+  headroom-gated duplication (FogROS2-PLR, arXiv:2410.05562; ISSUE 6).
 
 Adding a strategy: subclass ``RoutingPolicyBase``, set ``name``,
 implement ``decide``, decorate with :func:`register`. See
@@ -71,12 +73,14 @@ def make_policy(spec: PolicySpec, cluster: Cluster, router: Router,
 
 
 from repro.control.policies.guarded import GuardedAlgorithm1Policy  # noqa: E402
+from repro.control.policies.reliable import ReliableSloPolicy  # noqa: E402
 from repro.control.policies.route_best import RouteBestPolicy  # noqa: E402
 from repro.control.policies.safetail import SafeTailRedundantPolicy  # noqa: E402
 
 register(RouteBestPolicy)
 register(GuardedAlgorithm1Policy)
 register(SafeTailRedundantPolicy)
+register(ReliableSloPolicy)
 
 #: back-compat alias — PR-3's single strategy was the route_best window
 #: mode; code written against ``RoutingPolicy`` keeps working.
@@ -84,7 +88,7 @@ RoutingPolicy = RouteBestPolicy
 
 __all__ = [
     "BIG", "CandidateTable", "GuardedAlgorithm1Policy", "POLICIES",
-    "PolicySpec", "RouteBestPolicy", "RoutingPolicy", "RoutingPolicyBase",
-    "SafeTailRedundantPolicy", "WindowDecision", "get_policy",
-    "make_policy", "register",
+    "PolicySpec", "ReliableSloPolicy", "RouteBestPolicy", "RoutingPolicy",
+    "RoutingPolicyBase", "SafeTailRedundantPolicy", "WindowDecision",
+    "get_policy", "make_policy", "register",
 ]

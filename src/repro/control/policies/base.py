@@ -90,6 +90,9 @@ class CandidateTable:
                             np.float32)
         self.cost = np.array([d.instance.cost for d in self.deps],
                              np.float32)
+        # per-candidate network tier ("edge" / "cloud") — reliability
+        # policies key per-link loss/jitter tables off it (ISSUE 6)
+        self.tiers: list[str] = [d.instance.tier for d in self.deps]
         # dep-derived SLO budgets tau_m (x * L_m [+ rtt]) — fixed per
         # cluster+params; per-request slo overrides patch rows at flush.
         _probe = Request(model="", quality=self.deps[0].quality, arrival=0.0)

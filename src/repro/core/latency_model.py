@@ -27,6 +27,7 @@ alpha=0.73, beta=1.29, gamma=1.49.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Sequence
 
 import jax
@@ -145,6 +146,67 @@ def g_fixed_traffic(n_replicas, lam_m, m: ModelProfile, i: InstanceClass,
     """
     return g_fixed_replicas(lam_m, n_replicas, m, i, gamma,
                             unstable_value=unstable_value)
+
+
+# --- Latency distributions & SLO-attainment (ISSUE 6) ----------------------
+#
+# The point estimates above are medians of the realised latency: the
+# simulator draws S = base * LogNormal(0, sigma), whose median is exactly
+# the base. Treating g as the median of a lognormal with log-dispersion
+# sigma gives the closed form
+#
+#     P(L <= slo) = Phi((ln slo - ln g) / sigma)
+#
+# which is what a reliability-aware policy (FogROS2-PLR style,
+# arXiv:2410.05562) routes on instead of g itself. scipy is not a
+# dependency, so the normal CDF goes through math.erf.
+
+_SQRT2 = math.sqrt(2.0)
+_erf = np.vectorize(math.erf, otypes=[np.float64])
+
+
+def slo_attain_prob(g, sigma, slo) -> np.ndarray:
+    """Closed-form P(latency <= slo) for a lognormal latency whose
+    MEDIAN is the point estimate ``g`` and whose log-space dispersion is
+    ``sigma`` (matching the simulator's multiplicative
+    ``LogNormal(0, sigma)`` service jitter). Broadcasts over any mix of
+    scalars and arrays; ``sigma <= 0`` degrades to the deterministic
+    step ``g <= slo``; non-positive or non-finite ``g`` (e.g. the BIG
+    infeasibility sentinel saturating to inf) attains with probability
+    ~0 unless the SLO is infinite."""
+    g = np.asarray(g, np.float64)
+    s = np.asarray(sigma, np.float64)
+    tau = np.asarray(slo, np.float64)
+    g, s, tau = np.broadcast_arrays(g, s, tau)
+    ok = (g > 0.0) & np.isfinite(g) & (tau > 0.0) & np.isfinite(tau)
+    safe_g = np.where(ok, g, 1.0)
+    safe_tau = np.where(ok, tau, 1.0)
+    with np.errstate(divide="ignore"):
+        z = (np.log(safe_tau) - np.log(safe_g)) \
+            / (np.maximum(s, 1e-300) * _SQRT2)
+    p = 0.5 * (1.0 + _erf(np.clip(z, -40.0, 40.0)))
+    p = np.where(s <= 0.0, (safe_g <= safe_tau).astype(np.float64), p)
+    # outside the sane domain: an infinite SLO is always met, anything
+    # else against a degenerate point estimate is never met
+    p = np.where(ok, p, np.where(tau > 0.0, (g <= tau).astype(np.float64),
+                                 0.0))
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyDistribution:
+    """Per-link / per-pod latency model: point estimate (median),
+    log-space dispersion, and delivery availability. ``attain`` is the
+    reliability score the ``reliable`` routing policy maximises:
+    P(delivered) * P(latency <= slo | delivered)."""
+
+    point: float               # median end-to-end latency [s]
+    sigma: float = 0.0         # lognormal log-dispersion
+    availability: float = 1.0  # P(the link delivers at all)
+
+    def attain(self, slo: float) -> float:
+        return float(self.availability
+                     * slo_attain_prob(self.point, self.sigma, slo))
 
 
 @dataclasses.dataclass(frozen=True)

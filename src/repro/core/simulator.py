@@ -83,6 +83,19 @@ digests in ``tests/test_control_plane.py`` are pinned against it, and
 ``tests/test_sim_golden.py`` pins a multi-pod digest so future
 spillover-physics changes are loud. ``benchmarks/bench_policy_matrix.py``
 sweeps the pods axis.
+
+Fault injection (ISSUE 6): ``SimConfig.faults`` carries a seeded
+:class:`FaultPlan` — scheduled :class:`PodCrash` events (a pod dies
+mid-service: in-flight work is re-admitted or failed per policy, queued
+work respills cancel-aware, a replacement boots after
+``startup_delay``), :class:`Straggler` windows (per-pod service-time
+multipliers) and per-tier network-drop probabilities (an offload times
+out and is retried at the same target or failed). Every hook is
+flag-guarded and drop randomness lives in a separate RNG stream, so the
+default empty plan is bit-identical to all pinned digests; failures
+extend conservation to ``completed + failed == arrivals`` (mirrored in
+the control-plane ledger as ``admitted + offloaded + rejected + failed
+== arrivals``), property-tested per policy in ``tests/test_faults.py``.
 """
 from __future__ import annotations
 
@@ -104,8 +117,71 @@ from repro.core.workload import Arrival
 Mode = Literal["laimr", "baseline"]
 
 # event kinds, ordered for deterministic tie-breaking
-_ARRIVAL, _SERVICE_END, _REPLICA_READY, _HPA_TICK, _WINDOW_FLUSH = \
-    0, 1, 2, 3, 4
+_ARRIVAL, _SERVICE_END, _REPLICA_READY, _HPA_TICK, _WINDOW_FLUSH, \
+    _FAULT, _RETRY = 0, 1, 2, 3, 4, 5, 6
+
+
+@dataclasses.dataclass(frozen=True)
+class PodCrash:
+    """One scheduled hard pod kill (ISSUE 6 fault injection).
+
+    At ``t`` the pod dies mid-service: its in-flight requests are
+    re-admitted or failed per ``FaultPlan.on_crash``, its queued work
+    respills through the cancel-aware drain path, and — when
+    ``restart`` — a replacement pod boots after the deployment's
+    ``startup_delay`` (k8s rescheduling semantics). ``pod_id`` None
+    kills the first active pod at ``t``; in legacy single-pool mode
+    the whole replica set of the deployment is the "pod"."""
+
+    t: float
+    dep_key: str
+    pod_id: Optional[int] = None
+    restart: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Straggler:
+    """A straggling replica window: every service STARTED on the
+    matching pod(s) of ``dep_key`` within [t_start, t_end) runs
+    ``factor`` times slower (per-pod service-time multiplier — the
+    degraded-node regime, not a crash)."""
+
+    t_start: float
+    t_end: float
+    dep_key: str
+    pod_id: Optional[int] = None   # None -> every pod of the deployment
+    factor: float = 4.0
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Seeded fault schedule for one simulation run (ISSUE 6).
+
+    The plan is pure data: crashes and straggler windows fire at fixed
+    times; network drops are drawn per offloaded dispatch from a
+    SEPARATE ``default_rng((SimConfig.seed, FaultPlan.seed))`` stream,
+    so fault randomness never perturbs the service-time stream — an
+    empty plan is bit-identical to a fault-free run (the golden-digest
+    wall pins this). ``drop_prob`` maps an instance tier ("cloud",
+    "edge") to the per-dispatch loss probability of offloads INTO that
+    tier; a dropped dispatch times out for ``drop_timeout`` seconds and
+    is then retried at the same target (``on_drop="retry"``, up to
+    ``max_retries`` total retries per request, shared with crash
+    re-admissions) or failed outright. ``on_crash`` decides the fate of
+    requests that were mid-service on a crashed pod."""
+
+    crashes: tuple = ()
+    stragglers: tuple = ()
+    drop_prob: dict = dataclasses.field(default_factory=dict)
+    drop_timeout: float = 1.0
+    on_crash: str = "retry"        # "retry" | "fail"
+    on_drop: str = "retry"         # "retry" | "fail"
+    max_retries: int = 2
+    seed: int = 0
+
+    def empty(self) -> bool:
+        return not (self.crashes or self.stragglers
+                    or any(p > 0.0 for p in self.drop_prob.values()))
 
 
 @dataclasses.dataclass
@@ -246,7 +322,7 @@ class _PodFleet:
     """
 
     __slots__ = ("dep", "net_rtt", "slots_per_pod", "pods", "_pod_id",
-                 "pending_pods", "pods_booted", "pods_drained")
+                 "pending_pods", "pods_booted", "pods_drained", "parked")
 
     def __init__(self, dep: Deployment, n_pods: int):
         self.dep = dep
@@ -263,6 +339,9 @@ class _PodFleet:
         self.pending_pods = 0    # whole pods booting
         self.pods_booted = 0
         self.pods_drained = 0
+        # requests stranded while NO pod is alive (crash fault): they
+        # wait here until a replacement boots, or fail at end of run
+        self.parked: deque[Request] = deque()
 
     def _new_pod(self, n_replicas: int) -> _Pool:
         pid = next(self._pod_id)
@@ -315,7 +394,13 @@ class _PodFleet:
                 sim._start_service(pod, req)
                 return
         pod = min((p for p in self.pods.values() if not p.draining),
-                  key=lambda p: (len(p.queue), p.pod_id))
+                  key=lambda p: (len(p.queue), p.pod_id), default=None)
+        if pod is None:
+            # fault injection can kill every pod: park the request — a
+            # booting replacement (on_ready) or the end-of-run sweep
+            # settles it, so conservation never leaks
+            self.parked.append(req)
+            return
         if observe:
             pod.rate.observe(now)
         pod.queue.append(req)
@@ -367,6 +452,15 @@ class _PodFleet:
         pod = self._new_pod(self.slots_per_pod)
         self.pods_booted += 1
         self.sync_dep()
+        while self.parked:
+            # work stranded while no pod was alive goes first (fault
+            # injection only; cancel-aware like every drain path)
+            rq = self.parked.popleft()
+            if rq.req_id in sim._cancelled:
+                sim._cancelled.discard(rq.req_id)
+                sim._dup_resolve(sim._dup_member.get(rq.req_id, -1))
+                continue
+            self._respill(sim, rq)
         while pod.idle_replica() is not None:
             donor = max((p for p in self.pods.values()
                          if p.queue and p.pod_id != pod.pod_id),
@@ -400,6 +494,53 @@ class _PodFleet:
             del self.pods[pod.pod_id]
             self.pods_drained += 1
         self.sync_dep()
+
+    def crash_pod(self, sim: "ClusterSimulator", crash: PodCrash) -> bool:
+        """Hard pod kill (ISSUE 6): the pod vanishes NOW. In-flight
+        services die with it — their scheduled service-end events are
+        voided, so a later finish into this pod raises (the same
+        no-slot-resurrection guard as a drained pod) — and the victims
+        are re-admitted or failed per ``FaultPlan.on_crash``. Queued
+        work respills through the cancel-aware drain path, exactly like
+        a graceful drain. When ``restart``, a replacement pod boots
+        after ``startup_delay`` (k8s reschedule). Returns False when
+        the fleet had no pod left to kill."""
+        pod = None
+        if crash.pod_id is not None:
+            pod = self.pods.get(crash.pod_id)
+        else:
+            for p in self.pods.values():
+                if not p.draining:
+                    pod = p
+                    break
+        if pod is None:
+            return False
+        key = self.dep.key
+        del self.pods[pod.pod_id]
+        victims: list[Request] = []
+        for rid, rep in pod.replicas.items():
+            if rep.busy:
+                slot = (key, pod.pod_id, rid)
+                rq = sim._inflight.pop(slot, None)
+                sim._void_finish.add(slot)
+                if rq is not None:
+                    victims.append(rq)
+        queued: list[Request] = []
+        while pod.queue:
+            nxt = sim._pop_queued(pod)
+            if nxt is None:
+                break
+            queued.append(nxt)
+        if crash.restart:
+            self.pending_pods += 1
+            sim._push(sim._now + self.dep.startup_delay,
+                      _REPLICA_READY, key)
+        self.sync_dep()
+        for rq in queued:
+            self._respill(sim, rq)
+        for rq in victims:
+            sim._lost_in_flight(self, rq, sim.cfg.faults.on_crash)
+        return True
 
     def apply_scale(self, sim: "ClusterSimulator", ev: ScaleEvent) -> None:
         """Pod-granular enactment of a replica-granular scale decision:
@@ -495,6 +636,13 @@ class SimConfig:
     # see the module docstring. 1 (default) keeps the legacy monolithic
     # pool per deployment, bit-identical to every pinned golden digest.
     pods_per_deployment: int = 1
+    # Fault injection (ISSUE 6): seeded schedule of pod crashes,
+    # straggler windows and per-tier network-drop probabilities. The
+    # default EMPTY plan is bit-identical to every pinned golden digest:
+    # all fault hooks are flag-guarded off the hot path, and the drop
+    # draws come from a separate RNG stream that is never created for
+    # an empty plan. tests/test_faults.py walls the semantics.
+    faults: "FaultPlan" = dataclasses.field(default_factory=FaultPlan)
 
 
 @dataclasses.dataclass
@@ -514,6 +662,37 @@ class SimResult:
     pods_booted: int = 0
     pods_drained: int = 0
     pod_stats: dict = dataclasses.field(default_factory=dict)
+    # fault injection (ISSUE 6): requests that never completed (crash
+    # past the retry budget, dropped link with on_drop="fail", stranded
+    # on a dead fleet) and the per-fault-type event counts.
+    # Conservation: len(completed) + len(failed) == arrivals.
+    failed: list[Request] = dataclasses.field(default_factory=list)
+    retried: int = 0
+    crashes: int = 0
+    drops: int = 0
+    straggled: int = 0
+
+    def fault_counts(self) -> dict[str, int]:
+        """Per-fault-type accounting of the run."""
+        return {"crashes": self.crashes, "drops": self.drops,
+                "straggled": self.straggled, "retried": self.retried,
+                "failed": len(self.failed)}
+
+    def slo_attainment(self, slo: Optional[float] = None) -> float:
+        """Fraction of ARRIVALS (not completions) that finished within
+        their SLO — failed requests count against attainment, which is
+        what makes this the right metric under fault injection. Uses
+        each request's own ``slo`` when set, else ``slo``; with no
+        deadline anywhere, completion itself is attainment."""
+        total = len(self.completed) + len(self.failed)
+        if total == 0:
+            return float("nan")
+        ok = 0
+        for r in self.completed:
+            tau = r.slo if r.slo is not None else slo
+            if tau is None or (r.latency is not None and r.latency <= tau):
+                ok += 1
+        return ok / total
 
     def latencies(self) -> np.ndarray:
         return np.array([r.latency for r in self.completed if r.latency is not None])
@@ -582,7 +761,11 @@ class ClusterSimulator:
                     max_batch=config.admission_max_batch,
                     backend=config.admission_backend,
                     policy=config.policy,
-                    redundancy=config.redundancy))
+                    redundancy=config.redundancy,
+                    # the reliable policy prices the SAME faults the
+                    # event loop injects (unused by other policies)
+                    latency_sigma=config.jitter_sigma,
+                    link_loss=dict(config.faults.drop_prob)))
         self._win_seq = 0
         # redundant-dispatch state (safetail policy): per-group
         # completion race + lazily-cancelled queued copies. Empty dicts
@@ -592,6 +775,32 @@ class ClusterSimulator:
         self._dup_member: dict[int, int] = {}
         self._cancelled: set[int] = set()
         self._dup_cancelled = 0
+        # fault injection (ISSUE 6): every hook below is flag-guarded so
+        # an empty plan keeps the event loop — and the service-time RNG
+        # stream — byte-identical to the golden digests. Drop draws come
+        # from a SEPARATE rng keyed on (sim seed, plan seed).
+        plan = config.faults
+        self._faults_on = not plan.empty()
+        self._fault_rng = (np.random.default_rng((config.seed, plan.seed))
+                           if self._faults_on else None)
+        self._stragglers: dict[str, list] = {}
+        for s in plan.stragglers:
+            self._stragglers.setdefault(s.dep_key, []).append(s)
+        self._drop_prob = {t: float(p) for t, p in plan.drop_prob.items()
+                           if p > 0.0}
+        self.failed: list[Request] = []
+        # (dep_key, pod_id, rid) -> in-service request, maintained only
+        # when faults are on (a crash must find its victims), plus the
+        # voided service-end slots of crashed replicas — a voided slot's
+        # pending event is vacuous; anything ELSE finishing into a
+        # crashed pod still raises (no slot resurrection).
+        self._inflight: dict[tuple, Request] = {}
+        self._void_finish: set[tuple] = set()
+        self._retry_count: dict[int, int] = {}
+        self.n_crashes = 0
+        self.n_drops = 0
+        self.n_retried = 0
+        self.n_straggled = 0
         self.pmhpa = PMHPA(cluster, self.metrics, reconcile_period=config.hpa_period,
                            x=config.router.x, rho_low=config.router.rho_low)
         self.reactive = ReactiveAutoscaler(cluster, slo_multiplier=config.router.x,
@@ -620,7 +829,22 @@ class ClusterSimulator:
         util = min(max(util, 0.0), self.cfg.util_cap)
         base = pool.svc_base * (1.0 + util ** self.cfg.gamma_runtime)
         jit = float(self.rng.lognormal(mean=0.0, sigma=self.cfg.jitter_sigma))
+        if self._stragglers:
+            f = self._straggler_factor(pool)
+            if f != 1.0:
+                self.n_straggled += 1
+                return base * jit * f
         return base * jit
+
+    def _straggler_factor(self, pool: _Pool) -> float:
+        """Product of every straggler window covering this pod now."""
+        f = 1.0
+        now = self._now
+        for s in self._stragglers.get(pool.dep.key, ()):
+            if s.t_start <= now < s.t_end and \
+                    (s.pod_id is None or s.pod_id == pool.pod_id):
+                f *= s.factor
+        return f
 
     def _start_service(self, pool: _Pool, req: Request) -> None:
         rep = pool.pop_idle()
@@ -628,10 +852,18 @@ class ClusterSimulator:
         rep.busy = True
         req.start_service = self._now
         st = self._service_time(pool)
+        if self._faults_on:
+            self._inflight[(pool.dep.key, pool.pod_id, rep.rid)] = req
         self._push(self._now + st, _SERVICE_END,
                    (pool.dep.key, pool.pod_id, rep.rid, req))
 
     def _enqueue(self, pool: "_Pool | _PodFleet", req: Request) -> None:
+        if self._drop_prob and req.offloaded:
+            p = self._drop_prob.get(pool.dep.instance.tier, 0.0)
+            if p > 0.0 and self._fault_rng.random() < p:
+                self.n_drops += 1
+                self._on_drop(pool, req)
+                return
         if self._multi:
             pool.submit(self, req)
             return
@@ -801,8 +1033,168 @@ class ClusterSimulator:
             return rq
         return None
 
+    # -- fault injection (ISSUE 6) --------------------------------------- #
+    def _fail(self, req: Request) -> None:
+        """Terminal failure: the request will never complete. Mirrors
+        the ledger when a control plane is attached (the settled
+        outcome moves to FAILED; conservation stays exact)."""
+        self.failed.append(req)
+        if self.plane is not None:
+            self.plane.mark_failed(offloaded=bool(req.offloaded))
+
+    def _lost_group_copy(self, req: Request, gid: int) -> Optional[Request]:
+        """A redundancy-group copy was destroyed (pod crash, link drop,
+        stranding). Returns the PRIMARY request iff no live copy
+        remains — the caller must then retry-or-fail it so the group
+        still gets exactly one terminal outcome; returns None while
+        other copies keep racing (or the group already won)."""
+        st = self._dup_state.get(gid)
+        if st is None:
+            return req
+        if st["done"]:
+            # the race was already won elsewhere; this was a cancelled
+            # loser — account it exactly like a lazy dequeue-cancel
+            self._cancelled.discard(req.req_id)
+            self._dup_resolve(gid)
+            return None
+        st["outstanding"] -= 1
+        st["members"].discard(req.req_id)
+        self._dup_member.pop(req.req_id, None)
+        if st["outstanding"] > 0:
+            return None
+        prim = st["primary"]
+        for m in st["members"]:
+            self._dup_member.pop(m, None)
+        del self._dup_state[gid]
+        return prim
+
+    def _lost_in_flight(self, pool: "_Pool | _PodFleet", req: Request,
+                        action: str) -> None:
+        """An in-service request died with its pod."""
+        if self._dup_member:
+            gid = self._dup_member.get(req.req_id)
+            if gid is not None:
+                req = self._lost_group_copy(req, gid)
+                if req is None:
+                    return
+        self._retry_or_fail(pool, req, action)
+
+    def _retry_or_fail(self, pool: "_Pool | _PodFleet", req: Request,
+                       action: str, delay: float = 0.0) -> None:
+        """Settle a destroyed dispatch: re-admit (bounded by
+        ``max_retries``, ledgered as RETRIED) or fail. Crash victims
+        re-enter their deployment immediately; dropped offloads wait
+        out ``drop_timeout`` first (the sender-side timeout)."""
+        plan = self.cfg.faults
+        rc = self._retry_count.get(req.req_id, 0)
+        if action == "retry" and rc < plan.max_retries:
+            self._retry_count[req.req_id] = rc + 1
+            self.n_retried += 1
+            if self.plane is not None:
+                self.plane.mark_retried()
+            key = req.assigned_instance
+            if key not in self.pools:
+                key = pool.dep.key
+            if delay > 0.0:
+                self._push(self._now + delay, _RETRY, (key, req))
+            else:
+                self._enqueue(self.pools[key], req)
+        else:
+            self._fail(req)
+
+    def _on_drop(self, pool: "_Pool | _PodFleet", req: Request) -> None:
+        """The offload link ate this dispatch (per-tier loss draw): the
+        sender times out and retries the same target — redrawing the
+        drop — or fails. A dropped redundant COPY simply leaves the
+        race; only the loss of the last live copy re-dispatches the
+        primary."""
+        if self._dup_member:
+            gid = self._dup_member.get(req.req_id)
+            if gid is not None:
+                req = self._lost_group_copy(req, gid)
+                if req is None:
+                    return
+        self._retry_or_fail(pool, req, self.cfg.faults.on_drop,
+                            delay=self.cfg.faults.drop_timeout)
+
+    def _on_fault(self, crash: PodCrash) -> None:
+        pool = self.pools[crash.dep_key]
+        if self._multi:
+            if pool.crash_pod(self, crash):
+                self.n_crashes += 1
+            return
+        self._crash_pool(pool, crash)
+
+    def _crash_pool(self, pool: _Pool, crash: PodCrash) -> None:
+        """Legacy single-pool mode: the deployment's whole replica set
+        is the 'pod' — every replica dies (in-flight work per
+        ``on_crash``), the FIFO queue survives (it belongs to the
+        deployment; replacements and HPA scale-out drain it)."""
+        if not pool.replicas:
+            return
+        self.n_crashes += 1
+        key = pool.dep.key
+        victims: list[Request] = []
+        n_lost = 0
+        for rid, rep in list(pool.replicas.items()):
+            if rep.busy:
+                slot = (key, pool.pod_id, rid)
+                rq = self._inflight.pop(slot, None)
+                self._void_finish.add(slot)
+                if rq is not None:
+                    victims.append(rq)
+            if not rep.draining:
+                n_lost += 1
+        pool.replicas.clear()
+        pool._idle.clear()
+        pool._n_ready = 0
+        pool.sync_dep()
+        if crash.restart:
+            for _ in range(n_lost):
+                pool.pending_up += 1
+                self._push(self._now + pool.dep.startup_delay,
+                           _REPLICA_READY, key)
+        for rq in victims:
+            self._lost_in_flight(pool, rq, self.cfg.faults.on_crash)
+
+    def _sweep_unserved(self) -> None:
+        """Fault plans can strand work (a dead fleet whose replacement
+        never boots): once the event heap drains, every still-queued or
+        parked request is failed, so ``completed + failed == arrivals``
+        holds unconditionally."""
+        for pool in self.pools.values():
+            if self._multi:
+                queues = [pool.parked] + [p.queue
+                                          for p in pool.pods.values()]
+            else:
+                queues = [pool.queue]
+            for q in queues:
+                while q:
+                    rq = q.popleft()
+                    if rq.req_id in self._cancelled:
+                        self._cancelled.discard(rq.req_id)
+                        self._dup_resolve(
+                            self._dup_member.get(rq.req_id, -1))
+                        continue
+                    if self._dup_member:
+                        gid = self._dup_member.get(rq.req_id)
+                        if gid is not None:
+                            rq = self._lost_group_copy(rq, gid)
+                            if rq is None:
+                                continue
+                    self._fail(rq)
+
     def _on_service_end(self, key: str, pod_id: int, rid: int,
                         req: Request) -> None:
+        if self._faults_on:
+            slot = (key, pod_id, rid)
+            if slot in self._void_finish:
+                # this replica died mid-service (pod crash); its
+                # scheduled end is vacuous — the request was already
+                # re-admitted or failed at crash time
+                self._void_finish.discard(slot)
+                return
+            self._inflight.pop(slot, None)
         pool = self.pools[key]
         gid = self._dup_member.get(req.req_id) if self._dup_member else None
         if gid is None:
@@ -889,6 +1281,9 @@ class ClusterSimulator:
         for arr in arrivals:
             self._push(arr.t, _ARRIVAL, arr)
         self._push(self.cfg.hpa_period, _HPA_TICK, None)
+        if self._faults_on:
+            for crash in self.cfg.faults.crashes:
+                self._push(crash.t, _FAULT, crash)
         end = horizon if horizon is not None else \
             (arrivals[-1].t + 120.0 if arrivals else 0.0)
         events, heappop = self._events, heapq.heappop
@@ -910,6 +1305,13 @@ class ClusterSimulator:
                 self._on_hpa_tick()
             elif kind == _WINDOW_FLUSH:
                 self._on_window_flush(payload)
+            elif kind == _FAULT:
+                self._on_fault(payload)
+            elif kind == _RETRY:
+                rkey, rq = payload
+                self._enqueue(self.pools[rkey], rq)
+        if self._faults_on:
+            self._sweep_unserved()
         tel = self.router.telemetry
         return SimResult(
             completed=self.completed,
@@ -925,6 +1327,11 @@ class ClusterSimulator:
             pods_drained=(sum(p.pods_drained for p in self.pools.values())
                           if self._multi else 0),
             pod_stats=self.fleet_stats() if self._multi else {},
+            failed=self.failed,
+            retried=self.n_retried,
+            crashes=self.n_crashes,
+            drops=self.n_drops,
+            straggled=self.n_straggled,
         )
 
     def fleet_stats(self) -> dict[str, list[tuple[int, int, int]]]:

@@ -1,0 +1,105 @@
+"""Failed-aware percentile accounting in ``benchmarks.common``
+(ISSUE 6 satellite).
+
+The old helpers silently dropped requests without a finite latency, so
+a policy that failed half its traffic could still print a pristine P99.
+``split_latencies`` now returns the finite latencies AND an explicit
+failure count — these tests pin that contract on a trace that actually
+contains failures, end to end through ``per_lambda_stats``.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from benchmarks.common import per_lambda_stats, split_latencies
+from repro.core.scheduler import QualityClass, Request
+from repro.core.simulator import (ClusterSimulator, FaultPlan, SimConfig,
+                                  SimResult)
+from repro.core.workload import poisson_arrivals
+from test_sim_golden import two_tier
+
+
+def rq(arrival: float, latency=None) -> Request:
+    r = Request(model="yolov5m", quality=QualityClass.BALANCED,
+                arrival=arrival)
+    if latency is not None:
+        r.completion = arrival + latency
+    return r
+
+
+class TestSplitLatencies:
+    def test_counts_failed_trace_explicitly(self):
+        completed = [rq(0.0, 1.0), rq(1.0, 2.0), rq(2.0, 3.0)]
+        failed = [rq(3.0), rq(4.0)]
+        lat, n_failed = split_latencies(completed, failed)
+        np.testing.assert_array_equal(lat, [1.0, 2.0, 3.0])
+        assert n_failed == 2
+
+    def test_non_finite_completions_count_as_failures(self):
+        """A completed request with a None/NaN/inf latency is unserved
+        work, not a droppable artefact."""
+        bad_nan = rq(0.0)
+        bad_nan.completion = math.nan
+        bad_inf = rq(1.0)
+        bad_inf.completion = math.inf
+        completed = [rq(2.0, 1.5), bad_nan, bad_inf, rq(3.0)]  # last: None
+        lat, n_failed = split_latencies(completed)
+        np.testing.assert_array_equal(lat, [1.5])
+        assert n_failed == 3
+
+    def test_clean_trace_is_zero_failed(self):
+        lat, n_failed = split_latencies([rq(0.0, 1.0)], [])
+        assert n_failed == 0 and lat.size == 1
+
+    def test_percentiles_unpolluted_by_failures(self):
+        """Failures change the count, never the percentile basis."""
+        completed = [rq(float(k), 1.0) for k in range(10)]
+        lat_clean, _ = split_latencies(completed, [])
+        lat_chaos, n_failed = split_latencies(
+            completed, [rq(20.0) for _ in range(5)])
+        np.testing.assert_array_equal(lat_clean, lat_chaos)
+        assert n_failed == 5
+        assert np.percentile(lat_chaos, 99) == pytest.approx(1.0)
+
+
+class TestPerLambdaStatsFailed:
+    def test_failed_reported_per_window(self):
+        res = SimResult(
+            completed=[rq(10.0 + k, 1.0) for k in range(5)],
+            offload_fast=0, offload_bulk=0, scale_events=[],
+            failed=[rq(12.0), rq(13.0), rq(70.0)])
+        out = per_lambda_stats(res, lambdas=[1, 2], segment=60.0,
+                               warmup=5.0)
+        assert out[1]["n"] == 5 and out[1]["failed"] == 2
+        # second window has ONLY a failure: no percentile row, but the
+        # failure is still visible instead of silently dropped
+        assert out[2] == {"failed": 1}
+
+    def test_results_without_failed_field_still_work(self):
+        """Legacy call sites pass objects without a ``failed`` list."""
+
+        class Legacy:
+            completed = [rq(10.0, 1.0)]
+
+        out = per_lambda_stats(Legacy(), lambdas=[1], segment=60.0,
+                               warmup=5.0)
+        assert out[1]["failed"] == 0
+
+    def test_end_to_end_chaos_run_counts_failures(self):
+        """A simulated run whose fault plan guarantees failures flows
+        through the helper with every failure accounted."""
+        arr = poisson_arrivals(3.0, 50.0, "yolov5m", seed=4)
+        sim = ClusterSimulator(
+            two_tier(),
+            SimConfig(mode="laimr", seed=4, slo=1.8,
+                      admission_window=0.1, policy="route_best",
+                      faults=FaultPlan(drop_prob={"cloud": 1.0},
+                                       on_drop="fail", seed=4)))
+        res = sim.run(arr, horizon=300.0)
+        assert res.failed      # certain-loss uplink must fail work
+        out = per_lambda_stats(res, lambdas=[1], segment=50.0,
+                               warmup=0.0)
+        assert out[1]["failed"] == len(res.failed)
+        assert out[1]["n"] == len(
+            [r for r in res.completed if r.latency is not None])

@@ -179,6 +179,54 @@ class TestWindowedGoldenDigests:
                 abs(rb["offload_fast"] - scalar_off)
 
 
+class TestWindowedFaultsOffEquivalence:
+    """(ISSUE 6 satellite) an explicitly-passed empty FaultPlan is
+    bit-identical to the fault-free windowed digests — the fault hooks
+    may add no events and draw no randomness when disabled, in the
+    windowed plane mode too."""
+
+    @pytest.mark.parametrize("trace,window,policy",
+                             sorted(TestWindowedGoldenDigests
+                                    .GOLDEN_WINDOWED_MULTIPOD))
+    def test_empty_plan_windowed_multipod(self, trace, window, policy):
+        from repro.core.simulator import FaultPlan
+        arr = trace_for(trace)
+        sim = ClusterSimulator(
+            two_tier(), SimConfig(mode="laimr", seed=11, slo=1.0,
+                                  admission_window=window, policy=policy,
+                                  pods_per_deployment=2,
+                                  faults=FaultPlan()))
+        assert sim._faults_on is False
+        res = sim.run(arr, horizon=500.0)
+        want = TestWindowedGoldenDigests.GOLDEN_WINDOWED_MULTIPOD[
+            (trace, window, policy)]
+        s = res.summary()
+        assert int(s["n"]) == want["n"]
+        assert res.offload_fast == want["offload_fast"]
+        assert s["p50"] == pytest.approx(want["p50"], rel=1e-9)
+        assert s["p99"] == pytest.approx(want["p99"], rel=1e-9)
+        assert not res.failed and res.retried == 0
+
+    @pytest.mark.parametrize("trace,window,policy",
+                             sorted(GOLDEN_WINDOWED))
+    def test_empty_plan_windowed(self, trace, window, policy):
+        from repro.core.simulator import FaultPlan
+        arr = trace_for(trace)
+        sim = ClusterSimulator(
+            two_tier(), SimConfig(mode="laimr", seed=11, slo=1.0,
+                                  admission_window=window, policy=policy,
+                                  faults=FaultPlan()))
+        assert sim._faults_on is False
+        res = sim.run(arr, horizon=500.0)
+        want = GOLDEN_WINDOWED[(trace, window, policy)]
+        s = res.summary()
+        assert int(s["n"]) == want["n"]
+        assert res.offload_fast == want["offload_fast"]
+        assert s["p50"] == pytest.approx(want["p50"], rel=1e-9)
+        assert s["p99"] == pytest.approx(want["p99"], rel=1e-9)
+        assert not res.failed and res.retried == 0
+
+
 class TestSimulatorAdapterConservation:
     """(ii) the windowed simulator completes every arrival exactly once
     and its offload counters mirror the shared router telemetry."""

@@ -1,0 +1,407 @@
+"""Chaos test suite (ISSUE 6): fault injection walled off by property
+tests.
+
+The fault-injection tentpole adds pod crashes, straggler windows and
+lossy links to the discrete-event simulator; this suite is the wall
+around it:
+
+  (i)   EXTENDED CONSERVATION under chaos: for EVERY registered routing
+        policy under randomised fault plans (crash x straggle x drop x
+        retry policy), every arrival reaches exactly one terminal
+        outcome — ``completed + failed == arrivals`` — the plane ledger
+        settles (``admitted + offloaded + rejected + failed ==
+        arrivals``), and no pod is left holding phantom work (busy
+        slots, queues and the parked buffer all drain);
+  (ii)  NO SLOT RESURRECTION: a stale finish into a crashed pod raises
+        instead of silently recreating capacity, at both the simulator
+        (``_PodFleet.finish``) and serving (``PodGroup.release``)
+        layers, and the voided service-end of a crash victim is
+        swallowed exactly once;
+  (iii) duplicate-race integrity: even when a SafeTail duplicate's pod
+        dies mid-service the redundancy group resolves to EXACTLY one
+        terminal outcome;
+  (iv)  determinism: same seed + same FaultPlan reproduces the
+        identical SimResult across runs and re-instantiations;
+  (v)   fault physics sanity: stragglers only slow the matching pods
+        inside their window, drops only touch offloaded dispatches, and
+        ``on_drop``/``on_crash`` = "fail" turns retries into failures.
+"""
+import pytest
+
+from _propstub import given, settings, st
+from repro.control import PodGroup, SlotBank
+from repro.control.plane import ADMITTED, FAILED, OFFLOADED, REJECTED
+from repro.control.policies import POLICIES
+from repro.core.scheduler import QualityClass, Request
+from repro.core.simulator import (ClusterSimulator, FaultPlan, PodCrash,
+                                  SimConfig, Straggler, _PodFleet)
+from repro.core.workload import bounded_pareto_bursts
+from test_sim_golden import two_tier
+
+EDGE = "yolov5m@pi4-edge"
+CLOUD_KEY = "yolov5m@cloud"
+ALL_POLICIES = sorted(POLICIES)
+
+
+def trace():
+    # fresh per run: the simulator mutates Request objects in place
+    return bounded_pareto_bursts(3.0, 60.0, "yolov5m", seed=11)
+
+
+def chaos_sim(policy: str, plan: FaultPlan, pods: int = 2,
+              **cfg) -> ClusterSimulator:
+    cfg.setdefault("slo", 1.8)
+    return ClusterSimulator(
+        two_tier(), SimConfig(mode="laimr", seed=11, jitter_sigma=0.2,
+                              admission_window=0.1, policy=policy,
+                              redundancy=2, pods_per_deployment=pods,
+                              faults=plan, **cfg))
+
+
+def assert_chaos_conservation(sim: ClusterSimulator, res, n_arr: int):
+    """The extended conservation contract, checked at every level."""
+    # exactly one terminal outcome per arrival, no request counted twice
+    assert len(res.completed) + len(res.failed) == n_arr
+    ids = [r.req_id for r in res.completed] + [r.req_id for r in res.failed]
+    assert len(set(ids)) == len(ids)
+    # plane ledger: failed moved OUT of admitted/offloaded, totals exact
+    if sim.plane is not None:
+        sim.plane.check_conservation()
+        assert sim.plane.decided == n_arr
+        out = sim.plane.outcomes
+        assert out[ADMITTED] + out[OFFLOADED] + out[REJECTED] \
+            + out[FAILED] == n_arr
+        assert out[FAILED] == len(res.failed)
+        assert out["retried"] == res.retried
+    # per-pod / per-deployment: nothing left busy, queued or parked
+    for key, pool in sim.pools.items():
+        if isinstance(pool, _PodFleet):
+            assert not pool.parked, key
+            for pod in pool.pods.values():
+                assert pod.n_busy() == 0, key
+                assert not pod.queue, key
+        else:
+            assert pool.n_busy() == 0, key
+            assert not pool.queue, key
+    # no redundancy group left unresolved
+    assert sim._dup_state == {}
+    assert sim._inflight == {}
+
+
+class TestChaosConservationEveryPolicy:
+    """(i) the property wall: every policy x randomised fault plans."""
+
+    @settings(max_examples=8)
+    @given(st.floats(min_value=2.0, max_value=45.0),     # first crash t
+           st.floats(min_value=0.0, max_value=0.5),      # drop prob
+           st.floats(min_value=1.0, max_value=8.0),      # straggle factor
+           st.sampled_from(["retry", "fail"]),           # on_crash
+           st.sampled_from(["retry", "fail"]),           # on_drop
+           st.booleans(),                                # restart
+           st.integers(min_value=0, max_value=3))        # max_retries
+    def test_random_plan_every_policy(self, t_crash, p_drop, factor,
+                                      on_crash, on_drop, restart,
+                                      max_retries):
+        # EVERY registered policy faces the same drawn plan (a loop, not
+        # parametrize: the _propstub fallback draws strategies per test)
+        plan = FaultPlan(
+            crashes=(PodCrash(t=t_crash, dep_key=EDGE, restart=restart),
+                     PodCrash(t=t_crash + 9.0, dep_key=CLOUD_KEY,
+                              restart=restart)),
+            stragglers=(Straggler(t_start=t_crash * 0.5,
+                                  t_end=t_crash * 0.5 + 20.0,
+                                  dep_key=EDGE, factor=factor),),
+            drop_prob={"cloud": p_drop}, on_crash=on_crash,
+            on_drop=on_drop, max_retries=max_retries, seed=3)
+        for policy in ALL_POLICIES:
+            arr = trace()
+            sim = chaos_sim(policy, plan)
+            res = sim.run(arr, horizon=400.0)
+            assert_chaos_conservation(sim, res, len(arr))
+            assert res.crashes >= 1, policy   # edge crash finds a pod
+
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    def test_legacy_single_pool_crash(self, policy):
+        """pods=1: the crash kills the deployment's whole replica set
+        (the legacy pool IS the pod) — conservation must still hold
+        through the replacement boot."""
+        plan = FaultPlan(crashes=(PodCrash(t=10.0, dep_key=EDGE),),
+                         seed=1)
+        arr = trace()
+        sim = chaos_sim(policy, plan, pods=1)
+        res = sim.run(arr, horizon=400.0)
+        assert_chaos_conservation(sim, res, len(arr))
+        assert res.crashes == 1
+
+    def test_no_restart_no_retry_fails_stranded_work(self):
+        """Both tiers crash for good with on_crash='fail': in-flight
+        victims fail immediately and whatever strands with no pod left
+        is failed by the end-of-run sweep — never lost."""
+        plan = FaultPlan(
+            crashes=tuple(PodCrash(t=5.0 + i, dep_key=k, restart=False)
+                          for i, k in enumerate(
+                              [EDGE, EDGE, CLOUD_KEY, CLOUD_KEY])),
+            on_crash="fail", seed=2)
+        arr = trace()
+        sim = chaos_sim("route_best", plan)
+        res = sim.run(arr, horizon=400.0)
+        assert_chaos_conservation(sim, res, len(arr))
+        assert len(res.failed) > 0
+        assert res.retried == 0
+
+
+class TestNoSlotResurrection:
+    """(ii) finishes into crashed capacity are loud, never silent."""
+
+    def far_future_plan(self):
+        # non-empty plan so the fault machinery is armed, but nothing
+        # fires during the manual drive
+        return FaultPlan(crashes=(PodCrash(t=1e9, dep_key=EDGE),))
+
+    def manual_sim(self):
+        sim = ClusterSimulator(
+            two_tier(), SimConfig(mode="laimr", seed=0,
+                                  pods_per_deployment=2,
+                                  faults=self.far_future_plan()))
+        sim._now = 0.0
+        return sim
+
+    def rq(self, k: int = 0) -> Request:
+        return Request(model="yolov5m", quality=QualityClass.BALANCED,
+                       arrival=0.001 * k)
+
+    def test_stale_finish_into_crashed_pod_raises(self):
+        sim = self.manual_sim()
+        fleet = sim.pools[EDGE]
+        fleet.submit(sim, self.rq(0))
+        pod_id = next(pid for pid, p in fleet.pods.items()
+                      if p.n_busy() > 0)
+        rid = next(r for r, rep in fleet.pods[pod_id].replicas.items()
+                   if rep.busy)
+        assert fleet.crash_pod(sim, PodCrash(t=0.0, dep_key=EDGE))
+        with pytest.raises(RuntimeError, match="resurrect"):
+            fleet.finish(sim, pod_id, rid)
+
+    def test_victims_own_service_end_is_voided_exactly_once(self):
+        """The crashed replica's scheduled service-end is swallowed
+        (the request was already re-admitted), but only ONCE — a second
+        finish for the same slot is a real double release and raises."""
+        sim = self.manual_sim()
+        fleet = sim.pools[EDGE]
+        req = self.rq(0)
+        fleet.submit(sim, req)
+        pod_id = next(pid for pid, p in fleet.pods.items()
+                      if p.n_busy() > 0)
+        rid = next(r for r, rep in fleet.pods[pod_id].replicas.items()
+                   if rep.busy)
+        slot = (EDGE, pod_id, rid)
+        assert slot in sim._inflight
+        fleet.crash_pod(sim, PodCrash(t=0.0, dep_key=EDGE))
+        assert slot in sim._void_finish
+        # the stale event arrives: swallowed silently, void entry spent
+        sim._on_service_end(EDGE, pod_id, rid, req)
+        assert slot not in sim._void_finish
+        # victim was re-admitted elsewhere (on_crash default: retry)
+        assert sim.n_retried == 1
+        # a SECOND finish for the spent slot is a genuine double
+        # release — loud, not swallowed
+        with pytest.raises(RuntimeError, match="resurrect"):
+            fleet.finish(sim, pod_id, rid)
+
+    def test_crash_then_replacement_does_not_reuse_slot_ids(self):
+        """A replacement pod must come up under a FRESH pod id — reusing
+        the crashed id would let the voided finish land on live work."""
+        sim = self.manual_sim()
+        fleet = sim.pools[EDGE]
+        dead = set(fleet.pods)
+        fleet.crash_pod(sim, PodCrash(t=0.0, dep_key=EDGE))
+        fleet.on_ready(sim)
+        assert not (set(fleet.pods) - dead) & dead
+        assert max(fleet.pods) > max(dead)
+
+    def test_podgroup_crash_release_raises(self):
+        """(iv of ISSUE 5, extended) serving-side mirror: a crashed
+        PodGroup pod leaves the rotation immediately and releasing its
+        slot raises."""
+        grp = PodGroup([SlotBank(2), SlotBank(2)])
+        slot = grp.admit_next()
+        assert slot is not None and grp.locate(slot)[0] == 0
+        grp.crash(0)
+        # a busy pod can be crashed (retire would refuse)
+        assert grp.n_free() == 2            # only pod 1 offers slots
+        assert grp.locate(grp.admit_next())[0] == 1
+        with pytest.raises(RuntimeError, match="resurrect"):
+            grp.release(slot)
+
+
+class TestDuplicateCrashRace:
+    """(iii) redundancy groups under pod loss."""
+
+    @pytest.mark.parametrize("on_crash", ["retry", "fail"])
+    def test_safetail_duplicate_pod_dies_one_terminal_outcome(self,
+                                                              on_crash):
+        """Crash pods on BOTH tiers while SafeTail keeps duplicates in
+        flight: whatever copy dies — primary or duplicate — the group
+        resolves to exactly one completion or one failure."""
+        plan = FaultPlan(
+            crashes=(PodCrash(t=8.0, dep_key=EDGE),
+                     PodCrash(t=12.0, dep_key=CLOUD_KEY),
+                     PodCrash(t=20.0, dep_key=EDGE),),
+            on_crash=on_crash, seed=5)
+        arr = trace()
+        # generous SLO so both tiers stay feasible -> duplicates flow
+        sim = chaos_sim("safetail", plan, slo=6.0)
+        res = sim.run(arr, horizon=400.0)
+        assert res.duplicates > 0
+        assert_chaos_conservation(sim, res, len(arr))
+
+    def test_reliable_duplicates_survive_crashes_too(self):
+        plan = FaultPlan(crashes=(PodCrash(t=8.0, dep_key=EDGE),
+                                  PodCrash(t=12.0, dep_key=CLOUD_KEY)),
+                         seed=5)
+        arr = trace()
+        sim = chaos_sim("reliable", plan, slo=6.0)
+        res = sim.run(arr, horizon=400.0)
+        assert res.duplicates > 0
+        assert_chaos_conservation(sim, res, len(arr))
+
+
+class TestChaosDeterminism:
+    """(iv) same seed + same plan => identical SimResult."""
+
+    def plan(self):
+        return FaultPlan(
+            crashes=(PodCrash(t=10.0, dep_key=EDGE),),
+            stragglers=(Straggler(t_start=5.0, t_end=25.0, dep_key=EDGE,
+                                  factor=3.0),),
+            drop_prob={"cloud": 0.2}, seed=7)
+
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    def test_two_runs_identical(self, policy):
+        digests = []
+        for _ in range(2):
+            arr = trace()
+            sim = chaos_sim(policy, self.plan())
+            res = sim.run(arr, horizon=400.0)
+            digests.append((
+                [r.latency for r in res.completed],
+                # req_id is a process-global counter; identify failed
+                # requests by arrival time across fresh traces
+                sorted(r.arrival for r in res.failed),
+                res.fault_counts()))
+        assert digests[0] == digests[1]
+
+    def test_reinstantiated_fleet_identical(self):
+        """Re-building the simulator (fresh cluster, fresh pools) with
+        the same pods_per_deployment reproduces the exact run — pod and
+        replica ids are derived deterministically, not from object
+        identity."""
+        outs = []
+        for _ in range(2):
+            arr = trace()
+            sim = ClusterSimulator(
+                two_tier(), SimConfig(mode="laimr", seed=11, slo=1.8,
+                                      jitter_sigma=0.2,
+                                      admission_window=0.1,
+                                      policy="reliable", redundancy=2,
+                                      pods_per_deployment=2,
+                                      faults=self.plan()))
+            res = sim.run(arr, horizon=400.0)
+            outs.append(([r.latency for r in res.completed],
+                         res.fault_counts(),
+                         res.slo_attainment(1.8)))
+        assert outs[0] == outs[1]
+
+
+class TestFaultPhysics:
+    """(v) each fault type does what it says — and only that."""
+
+    def test_straggler_factor_matches_window_and_pod(self):
+        plan = FaultPlan(stragglers=(
+            Straggler(t_start=10.0, t_end=20.0, dep_key=EDGE,
+                      factor=4.0),
+            Straggler(t_start=12.0, t_end=18.0, dep_key=EDGE, pod_id=0,
+                      factor=2.0)))
+        sim = ClusterSimulator(
+            two_tier(), SimConfig(mode="laimr", seed=0,
+                                  pods_per_deployment=2, faults=plan))
+        fleet = sim.pools[EDGE]
+        pod0, pod1 = fleet.pods[0], fleet.pods[1]
+        sim._now = 5.0                       # before every window
+        assert sim._straggler_factor(pod0) == 1.0
+        sim._now = 11.0                      # dep-wide window only
+        assert sim._straggler_factor(pod0) == 4.0
+        assert sim._straggler_factor(pod1) == 4.0
+        sim._now = 15.0                      # both windows; pod filter
+        assert sim._straggler_factor(pod0) == 8.0
+        assert sim._straggler_factor(pod1) == 4.0
+        sim._now = 20.0                      # t_end exclusive
+        assert sim._straggler_factor(pod0) == 1.0
+        cloud = sim.pools[CLOUD_KEY]
+        sim._now = 15.0                      # other deployment untouched
+        assert sim._straggler_factor(cloud.pods[0]) == 1.0
+
+    def test_straggles_are_counted_and_stretch_service(self):
+        arr = trace()
+        base = chaos_sim("route_best", FaultPlan())
+        res0 = base.run(arr, horizon=400.0)
+        arr2 = trace()
+        slow = chaos_sim("route_best", FaultPlan(stragglers=(
+            Straggler(t_start=0.0, t_end=60.0, dep_key=EDGE,
+                      factor=6.0),)))
+        res1 = slow.run(arr2, horizon=400.0)
+        assert res0.straggled == 0
+        assert res1.straggled > 0
+        # a straggled service is strictly longer than anything the
+        # healthy run produced on the same tier (factor 6 dwarfs the
+        # 0.2-sigma jitter); routing feedback may still reshuffle the
+        # AGGREGATE tail, so compare the per-request maximum, not P99
+        def edge_service(res):
+            return max((r.completion - r.start_service
+                        for r in res.completed
+                        if r.assigned_instance == EDGE), default=0.0)
+        assert edge_service(res1) > edge_service(res0)
+
+    def test_drops_only_touch_offloaded_dispatches(self):
+        """Loss probability is charged per OFFLOADED dispatch into a
+        tier: a certain-loss link on the HOME (edge) tier never fires,
+        because home admissions are not offloads."""
+        plan = FaultPlan(drop_prob={"edge": 1.0}, seed=9)
+        arr = trace()
+        sim = chaos_sim("route_best", plan)
+        res = sim.run(arr, horizon=400.0)
+        assert res.drops == 0 and not res.failed
+        assert_chaos_conservation(sim, res, len(arr))
+
+    def test_certain_drop_with_fail_policy_fails_offloads(self):
+        plan = FaultPlan(drop_prob={"cloud": 1.0}, on_drop="fail",
+                         seed=9)
+        arr = trace()
+        sim = chaos_sim("route_best", plan)
+        res = sim.run(arr, horizon=400.0)
+        assert res.drops > 0
+        assert len(res.failed) == res.drops      # no retries on "fail"
+        assert res.retried == 0
+        assert_chaos_conservation(sim, res, len(arr))
+
+    def test_certain_drop_with_retry_exhausts_then_fails(self):
+        plan = FaultPlan(drop_prob={"cloud": 1.0}, on_drop="retry",
+                         max_retries=2, seed=9)
+        arr = trace()
+        sim = chaos_sim("route_best", plan)
+        res = sim.run(arr, horizon=400.0)
+        assert res.drops > 0 and res.retried > 0
+        assert len(res.failed) > 0   # p=1.0: every retry drops again
+        assert_chaos_conservation(sim, res, len(arr))
+
+    def test_slo_attainment_counts_failures_against(self):
+        plan = FaultPlan(drop_prob={"cloud": 1.0}, on_drop="fail",
+                         seed=9)
+        arr = trace()
+        sim = chaos_sim("route_best", plan)
+        res = sim.run(arr, horizon=400.0)
+        n = len(arr)
+        within = sum(1 for r in res.completed
+                     if r.latency is not None and r.latency <= 1.8)
+        assert res.slo_attainment(1.8) == pytest.approx(within / n)
+        assert res.slo_attainment(1.8) < 1.0

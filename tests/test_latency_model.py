@@ -113,3 +113,52 @@ class TestCalibration:
         for lam, measured in [(2.0, 4.97), (3.0, 7.71), (4.0, 10.46)]:
             pred = float(fit.predict(lam))
             assert abs(pred - measured) / measured < 0.05
+
+
+class TestSloAttainProb:
+    """Closed-form P(latency <= slo) for the lognormal dispersion model
+    (ISSUE 6): the `reliable` policy's scoring primitive."""
+
+    def test_median_is_half(self):
+        # g is the lognormal MEDIAN: P(latency <= g) == 0.5 exactly
+        assert lm.slo_attain_prob(2.0, 0.25, 2.0) == pytest.approx(0.5)
+
+    def test_monotone_in_slo_and_g(self):
+        slos = np.linspace(0.5, 8.0, 30)
+        p = lm.slo_attain_prob(2.0, 0.4, slos)
+        assert np.all(np.diff(p) > 0)          # looser deadline helps
+        gs = np.linspace(0.5, 8.0, 30)
+        q = lm.slo_attain_prob(gs, 0.4, 2.0)
+        assert np.all(np.diff(q) < 0)          # slower service hurts
+
+    def test_wider_dispersion_drags_tail_probability(self):
+        # above the median, more dispersion lowers attainment
+        tight = lm.slo_attain_prob(1.0, 0.1, 2.0)
+        wide = lm.slo_attain_prob(1.0, 1.5, 2.0)
+        assert tight > wide
+        # zero dispersion degenerates to the deterministic step
+        assert lm.slo_attain_prob(1.0, 0.0, 2.0) == 1.0
+        assert lm.slo_attain_prob(3.0, 0.0, 2.0) == 0.0
+
+    def test_matches_simulated_lognormal_jitter(self):
+        """The closed form must match the simulator's own jitter model:
+        latency = g * LogNormal(0, sigma)."""
+        rng = np.random.default_rng(0)
+        g, sigma, slo = 1.3, 0.45, 1.8
+        draws = g * rng.lognormal(0.0, sigma, size=200_000)
+        emp = float((draws <= slo).mean())
+        assert lm.slo_attain_prob(g, sigma, slo) == pytest.approx(
+            emp, abs=3e-3)
+
+    def test_degenerate_inputs_clamp_not_nan(self):
+        assert lm.slo_attain_prob(0.0, 0.25, 1.0) == 1.0   # free service
+        assert lm.slo_attain_prob(1.0, 0.25, 0.0) == 0.0   # no deadline
+        assert lm.slo_attain_prob(np.inf, 0.25, 1.0) == 0.0
+        p = lm.slo_attain_prob([1.0, np.nan], 0.25, 1.0)
+        assert np.all(np.isfinite(p))
+
+    def test_latency_distribution_prices_availability(self):
+        d = lm.LatencyDistribution(point=1.0, sigma=0.25,
+                                   availability=0.8)
+        assert d.attain(50.0) == pytest.approx(0.8, abs=1e-6)
+        assert d.attain(1.0) == pytest.approx(0.4, abs=1e-6)

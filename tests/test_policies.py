@@ -33,7 +33,8 @@ from repro.control import (ADMITTED, DUPLICATE, OFFLOADED, REJECTED,
                            PodGroup, POLICIES, SlotBank, get_policy,
                            make_policy)
 from repro.control.policies import (GuardedAlgorithm1Policy,
-                                    RouteBestPolicy, RoutingPolicy,
+                                    ReliableSloPolicy, RouteBestPolicy,
+                                    RoutingPolicy,
                                     SafeTailRedundantPolicy)
 from repro.core.catalogue import Cluster, Deployment
 from repro.core.latency_model import CLOUD, PI4_EDGE, YOLOV5M
@@ -66,10 +67,12 @@ def outcome_tally(decs) -> dict:
 
 class TestRegistry:
     def test_registry_contents(self):
-        assert {"route_best", "guarded_alg1", "safetail"} <= set(POLICIES)
+        assert {"route_best", "guarded_alg1", "safetail",
+                "reliable"} <= set(POLICIES)
         assert get_policy("route_best") is RouteBestPolicy
         assert get_policy("guarded_alg1") is GuardedAlgorithm1Policy
         assert get_policy("safetail") is SafeTailRedundantPolicy
+        assert get_policy("reliable") is ReliableSloPolicy
         # PR-3 back-compat: the old single strategy keeps its name
         assert RoutingPolicy is RouteBestPolicy
 
@@ -463,6 +466,84 @@ class TestSafeTailSemantics:
         assert by[ADMITTED] + by[OFFLOADED] == 1
         assert by[DUPLICATE] == 0
         plane.check_conservation()
+
+
+class TestReliableSemantics:
+    """(iii, ISSUE 6) SLO-attainment routing + headroom-gated
+    duplication: the `reliable` strategy prices dispersion and link
+    loss, and only duplicates into genuine deadline headroom."""
+
+    def _policy(self, **cfg_kw) -> ReliableSloPolicy:
+        cl = two_tier()
+        plane = ControlPlane(cl, policy="reliable",
+                             config=AdmissionConfig(max_batch=64, **cfg_kw))
+        assert isinstance(plane.policy, ReliableSloPolicy)
+        return plane.policy
+
+    def test_uniform_distribution_matches_route_best(self):
+        """With identical sigma on every tier and lossless links the
+        attainment ordering is the g ordering — reliable picks the
+        same primaries route_best does."""
+        cl = two_tier()
+        cfg = AdmissionConfig(max_batch=64)
+        rel = ControlPlane(cl, policy="reliable", config=cfg).policy
+        rb = ControlPlane(cl, policy="route_best", config=cfg).policy
+        reqs = mk_reqs(8, slo=50.0)
+        d_rel = rel.decide(reqs, 0.0)
+        d_rb = rb.decide(reqs, 0.0)
+        np.testing.assert_array_equal(d_rel.primary, d_rb.primary)
+        np.testing.assert_array_equal(d_rel.offload, d_rb.offload)
+
+    def test_link_loss_shifts_the_winner(self):
+        """A lossy link to the lowest-g tier (cloud at zero load) makes
+        the intact tier the better bet despite its higher g."""
+        lossless = self._policy()
+        lossy = self._policy(link_loss={"cloud": 0.6})
+        win0 = int(lossless.decide(mk_reqs(1, slo=50.0), 0.0).primary[0])
+        win1 = int(lossy.decide(mk_reqs(1, slo=50.0), 0.0).primary[0])
+        assert lossless.table.tiers[win0] == "cloud"
+        assert lossy.table.tiers[win1] == "edge"
+
+    def test_link_jitter_widens_the_distribution(self):
+        """Extra per-tier jitter lowers attainment at a tight SLO, so
+        the jittery low-g tier loses to the steady one."""
+        steady = self._policy()
+        jittery = self._policy(link_jitter={"cloud": 3.0})
+        slo = 2.0   # tight enough that dispersion matters
+        w0 = int(steady.decide(mk_reqs(1, slo=slo), 0.0).primary[0])
+        w1 = int(jittery.decide(mk_reqs(1, slo=slo), 0.0).primary[0])
+        assert steady.table.tiers[w0] == "cloud"
+        assert jittery.table.tiers[w1] == "edge"
+
+    def test_duplicates_gated_on_headroom(self):
+        """Same window, two margins: with a sane margin the feasible
+        alternate receives a duplicate; with a margin wider than the
+        deadline no candidate has headroom and no duplicate is sent."""
+        roomy = self._policy(redundancy=2, headroom_margin=0.25)
+        d = roomy.decide(mk_reqs(1, slo=50.0), 0.0)
+        assert d.duplicates[0]          # alternate has 50 s of headroom
+        gated = self._policy(redundancy=2, headroom_margin=1000.0)
+        d = gated.decide(mk_reqs(1, slo=50.0), 0.0)
+        assert d.feasible[0]
+        assert d.duplicates[0] == ()    # no headroom -> no copy
+        single = self._policy(redundancy=1, headroom_margin=0.25)
+        d = single.decide(mk_reqs(1, slo=50.0), 0.0)
+        assert d.duplicates[0] == ()    # redundancy 1 never duplicates
+
+    def test_infeasible_degrades_to_route_best_fallback(self):
+        """No candidate can meet the deadline: reliable offloads via
+        the same cheapest-lane-upstream rule as route_best, with no
+        duplicates."""
+        cl = two_tier()
+        cfg = AdmissionConfig(max_batch=64, redundancy=2)
+        rel = ControlPlane(cl, policy="reliable", config=cfg).policy
+        rb = ControlPlane(cl, policy="route_best", config=cfg).policy
+        d_rel = rel.decide(mk_reqs(4, slo=1e-6), 0.0)
+        d_rb = rb.decide(mk_reqs(4, slo=1e-6), 0.0)
+        assert not d_rel.feasible.any()
+        np.testing.assert_array_equal(d_rel.primary, d_rb.primary)
+        np.testing.assert_array_equal(d_rel.offload, d_rb.offload)
+        assert all(d == () for d in d_rel.duplicates)
 
 
 class TestReleaseHardening:

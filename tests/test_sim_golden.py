@@ -15,7 +15,8 @@ import pytest
 from repro.core.catalogue import Cluster, Deployment, paper_cluster
 from repro.core.latency_model import CLOUD, PI4_EDGE, YOLOV5M
 from repro.core.scheduler import QualityClass
-from repro.core.simulator import ClusterSimulator, SimConfig
+from repro.core.simulator import (ClusterSimulator, FaultPlan, PodCrash,
+                                  SimConfig, Straggler)
 from repro.core.workload import (bounded_pareto_bursts, diurnal_arrivals,
                                  flash_crowd_arrivals, mixed_traffic,
                                  mmpp_arrivals, poisson_arrivals,
@@ -148,6 +149,110 @@ class TestMultiPodGoldenTraces:
                                       pods_per_deployment=2))
             runs.append(sim.run(arr, horizon=500.0).latencies())
         np.testing.assert_array_equal(runs[0], runs[1])
+
+
+# Fault injection (ISSUE 6): the faults-off equivalence contract plus
+# pinned digests for ONE seeded chaos scenario. An explicitly-passed
+# empty FaultPlan must be BIT-IDENTICAL to the fault-free digests above
+# — the fault hooks add no events and draw no randomness when disabled —
+# and the seeded crash run is pinned so future recovery-path changes
+# are loud, not silent.
+FAULTS_EDGE = "yolov5m@pi4-edge"
+
+
+def crash_plan() -> FaultPlan:
+    """The pinned chaos scenario: the edge pool loses a pod mid-burst
+    (replacement boots), an edge pod straggles 4x over [40, 80), and
+    the cloud uplink drops 10% of offloaded requests."""
+    return FaultPlan(
+        crashes=(PodCrash(t=30.0, dep_key=FAULTS_EDGE),),
+        stragglers=(Straggler(t_start=40.0, t_end=80.0,
+                              dep_key=FAULTS_EDGE, factor=4.0),),
+        drop_prob={"cloud": 0.1}, seed=3)
+
+
+GOLDEN_FAULTS = {
+    "laimr": dict(n=625, failed=1, retried=64, crashes=1, drops=64,
+                  straggled=57, p50=1.5251676409345265,
+                  p99=8.81221279870364),
+    "baseline": dict(n=626, failed=0, retried=1, crashes=1, drops=0,
+                     straggled=32, p50=73.3772141848768,
+                     p99=166.6923962618499),
+}
+
+
+class TestGoldenFaults:
+    @pytest.mark.parametrize("trace,mode", sorted(GOLDEN))
+    def test_empty_plan_bit_identical_single_pool(self, trace, mode):
+        arr = trace_for(trace)
+        sim = ClusterSimulator(
+            two_tier(), SimConfig(mode=mode, seed=11, slo=1.0,
+                                  faults=FaultPlan()))
+        assert sim._faults_on is False
+        res = sim.run(arr, horizon=500.0)
+        want = GOLDEN[(trace, mode)]
+        s = res.summary()
+        assert int(s["n"]) == want["n"]
+        assert res.offload_fast == want["offload_fast"]
+        assert s["p50"] == pytest.approx(want["p50"], rel=1e-9)
+        assert s["p99"] == pytest.approx(want["p99"], rel=1e-9)
+        assert not res.failed and res.fault_counts() == {
+            "crashes": 0, "drops": 0, "straggled": 0, "retried": 0,
+            "failed": 0}
+
+    @pytest.mark.parametrize("trace,mode", sorted(GOLDEN_MULTIPOD))
+    def test_empty_plan_bit_identical_multipod(self, trace, mode):
+        arr = trace_for(trace)
+        sim = ClusterSimulator(
+            two_tier(), SimConfig(mode=mode, seed=11, slo=1.0,
+                                  pods_per_deployment=2,
+                                  faults=FaultPlan()))
+        assert sim._faults_on is False
+        res = sim.run(arr, horizon=500.0)
+        want = GOLDEN_MULTIPOD[(trace, mode)]
+        s = res.summary()
+        assert int(s["n"]) == want["n"]
+        assert res.offload_fast == want["offload_fast"]
+        assert res.pods_booted == want["pods_booted"]
+        assert res.pods_drained == want["pods_drained"]
+        assert s["p50"] == pytest.approx(want["p50"], rel=1e-9)
+        assert s["p99"] == pytest.approx(want["p99"], rel=1e-9)
+
+    @pytest.mark.parametrize("mode", sorted(GOLDEN_FAULTS))
+    def test_crash_scenario_digest_stable(self, mode):
+        arr = trace_for("burst")
+        sim = ClusterSimulator(
+            two_tier(), SimConfig(mode=mode, seed=11, slo=1.0,
+                                  pods_per_deployment=2,
+                                  faults=crash_plan()))
+        res = sim.run(arr, horizon=500.0)
+        want = GOLDEN_FAULTS[mode]
+        s = res.summary()
+        assert int(s["n"]) == want["n"]
+        assert len(res.failed) == want["failed"]
+        assert res.retried == want["retried"]
+        assert res.crashes == want["crashes"]
+        assert res.drops == want["drops"]
+        assert res.straggled == want["straggled"]
+        assert s["p50"] == pytest.approx(want["p50"], rel=1e-9)
+        assert s["p99"] == pytest.approx(want["p99"], rel=1e-9)
+        # chaos conservation: every arrival reaches exactly one
+        # terminal outcome
+        assert len(res.completed) + len(res.failed) == len(arr)
+
+    @pytest.mark.parametrize("mode", sorted(GOLDEN_FAULTS))
+    def test_crash_scenario_repeatable_in_process(self, mode):
+        arr = trace_for("burst")
+        runs = []
+        for _ in range(2):
+            sim = ClusterSimulator(
+                two_tier(), SimConfig(mode=mode, seed=11, slo=1.0,
+                                      pods_per_deployment=2,
+                                      faults=crash_plan()))
+            res = sim.run(arr, horizon=500.0)
+            runs.append((res.latencies(), res.fault_counts()))
+        np.testing.assert_array_equal(runs[0][0], runs[1][0])
+        assert runs[0][1] == runs[1][1]
 
 
 def scenario(name: str):
