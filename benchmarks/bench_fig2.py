@@ -3,7 +3,6 @@ paper's own measurements and report fit quality ('tracks observed
 latencies within a few percent')."""
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.latency_model import (TABLE_IV_LAMBDA, TABLE_IV_LATENCY,
                                       TABLE_IV_N, calibrate,

@@ -9,12 +9,11 @@ consecutive requests differ, which is the paper's stated mechanism
 Microservice = one pool per model (the paper's design)."""
 from __future__ import annotations
 
-import dataclasses
 import heapq
 
 import numpy as np
 
-from repro.core.latency_model import EFFICIENTDET, PI4_EDGE, YOLOV5M
+from repro.core.latency_model import EFFICIENTDET, YOLOV5M
 from repro.core.workload import poisson_arrivals
 
 from benchmarks.common import finite_latencies, finite_row

@@ -5,8 +5,6 @@ results/perf. Prints markdown to stdout:
 """
 from __future__ import annotations
 
-import json
-import os
 
 from benchmarks.roofline import load_records, roofline_row
 

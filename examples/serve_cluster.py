@@ -25,7 +25,6 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import get_config, reduced
 from repro.core import SimConfig, ClusterSimulator, robot_trace

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 from repro.configs.base import get_config
 from repro.training import checkpoint
 from repro.training.data import DataConfig, SyntheticText
-from repro.training.train import make_train_state, train_step
+from repro.training.train import make_train_state
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=300)

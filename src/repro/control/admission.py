@@ -105,8 +105,8 @@ class AdmissionConfig:
     policy: str = "route_best"
     redundancy: int = 2
     latency_sigma: float = 0.25
-    link_loss: dict = dataclasses.field(default_factory=dict)
-    link_jitter: dict = dataclasses.field(default_factory=dict)
+    link_loss: dict[str, float] = dataclasses.field(default_factory=dict)
+    link_jitter: dict[str, float] = dataclasses.field(default_factory=dict)
     headroom_margin: float = 0.25
 
 
@@ -131,7 +131,7 @@ class AdmissionQueue:
     :meth:`drain` empties the buffer in decision order.
     """
 
-    def __init__(self, window: float, max_batch: int):
+    def __init__(self, window: float, max_batch: int) -> None:
         self.window = float(window)
         self.max_batch = int(max_batch)
         self._sched = MultiQueueScheduler()
@@ -179,7 +179,7 @@ class SlotBank:
     admission high forever. Double release raises instead.
     """
 
-    def __init__(self, slots: int):
+    def __init__(self, slots: int) -> None:
         self.slots = slots
         self.active = np.zeros((slots,), bool)
 

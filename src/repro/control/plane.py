@@ -129,6 +129,17 @@ class ControlPlane:
             raise AssertionError(
                 f"duplicate ledger drifted: {self.outcomes[DUPLICATE]} "
                 f"outcomes != {self.dup_dispatched} dispatched")
+        # closed vocabulary: every ledger bucket must be one of the
+        # declared outcome constants (incl. the auxiliary RETRIED
+        # tally) — a bucket added elsewhere without extending this
+        # contract is exactly the drift laimr-lint ledger-completeness
+        # exists to catch, and this guard is its runtime twin.
+        unknown = set(self.outcomes) - {ADMITTED, OFFLOADED, REJECTED,
+                                        FAILED, DUPLICATE, RETRIED}
+        if unknown:
+            raise AssertionError(
+                f"unledgered outcome bucket(s) {sorted(unknown)}: "
+                "extend check_conservation before counting them")
 
     def mark_failed(self, *, offloaded: bool) -> None:
         """Fault injection settled a request as lost (crash past its

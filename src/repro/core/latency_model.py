@@ -80,13 +80,17 @@ def utilisation(lam_r: jax.Array, r_demand: jax.Array, background: jax.Array,
     return (lam_r * r_demand + background) / r_max
 
 
-def processing_delay(l_ref, speedup, util, gamma) -> jax.Array:
+def processing_delay(l_ref: float | jax.Array, speedup: float | jax.Array,
+                     util: float | jax.Array,
+                     gamma: float | jax.Array) -> jax.Array:
     """Inference processing delay (Eq. 5): (L_m/S_mi)(1 + U^gamma)."""
     u = jnp.maximum(util, 0.0)
     return (l_ref / speedup) * (1.0 + jnp.power(u, gamma))
 
 
-def affine_power_law(lam_tilde, alpha, beta, gamma) -> jax.Array:
+def affine_power_law(lam_tilde: float | jax.Array, alpha: float | jax.Array,
+                     beta: float | jax.Array,
+                     gamma: float | jax.Array) -> jax.Array:
     """Affine power-law form (Eq. 8): alpha + beta * lam_tilde^gamma."""
     return alpha + beta * jnp.power(jnp.maximum(lam_tilde, 0.0), gamma)
 
@@ -104,7 +108,9 @@ def service_rate(m: ModelProfile, i: InstanceClass) -> float:
     return i.speedup / m.l_ref
 
 
-def g_fixed_replicas(lam_m, n_replicas, m: ModelProfile, i: InstanceClass,
+def g_fixed_replicas(lam_m: float | jax.Array | np.ndarray,
+                     n_replicas: int | jax.Array | np.ndarray,
+                     m: ModelProfile, i: InstanceClass,
                      gamma: float, *, unstable_value: float = jnp.inf) -> jax.Array:
     """g_mi(lambda), Eq. (15): end-to-end latency with the replica layout fixed.
 
@@ -121,7 +127,8 @@ def g_fixed_replicas(lam_m, n_replicas, m: ModelProfile, i: InstanceClass,
     return proc + i.net_rtt + q
 
 
-def g_fixed_replicas_np(lam_m, n_replicas, m: ModelProfile, i: InstanceClass,
+def g_fixed_replicas_np(lam_m: float, n_replicas: int | np.ndarray,
+                        m: ModelProfile, i: InstanceClass,
                         gamma: float) -> np.ndarray:
     """numpy twin of :func:`g_fixed_replicas` for control-plane call sites
     (autoscaler, capacity planner) where eager jnp dispatch is too slow.
@@ -135,7 +142,9 @@ def g_fixed_replicas_np(lam_m, n_replicas, m: ModelProfile, i: InstanceClass,
     return proc + i.net_rtt + q
 
 
-def g_fixed_traffic(n_replicas, lam_m, m: ModelProfile, i: InstanceClass,
+def g_fixed_traffic(n_replicas: int | jax.Array | np.ndarray,
+                    lam_m: float | jax.Array | np.ndarray,
+                    m: ModelProfile, i: InstanceClass,
                     gamma: float, *, unstable_value: float = jnp.inf) -> jax.Array:
     """g_mi(N), Eq. (17): latency as a function of the replica count.
 
@@ -165,7 +174,8 @@ _SQRT2 = math.sqrt(2.0)
 _erf = np.vectorize(math.erf, otypes=[np.float64])
 
 
-def slo_attain_prob(g, sigma, slo) -> np.ndarray:
+def slo_attain_prob(g: float | np.ndarray, sigma: float | np.ndarray,
+                    slo: float | np.ndarray) -> np.ndarray:
     """Closed-form P(latency <= slo) for a lognormal latency whose
     MEDIAN is the point estimate ``g`` and whose log-space dispersion is
     ``sigma`` (matching the simulator's multiplicative
@@ -218,7 +228,7 @@ class CalibratedModel:
     gamma: float
     mape: float  # mean absolute percentage error on the calibration set
 
-    def predict(self, lam_tilde) -> jax.Array:
+    def predict(self, lam_tilde: float | np.ndarray) -> jax.Array:
         return affine_power_law(jnp.asarray(lam_tilde, jnp.float32),
                                 self.alpha, self.beta, self.gamma)
 
@@ -296,7 +306,8 @@ def calibrate_from_table_iv(saturated_only: bool = True) -> CalibratedModel:
     The paper fits the per-replica law on the loaded region (the idle point
     lam_tilde <= 1 pins alpha ~= L_m = 0.73 which the fit recovers anyway).
     """
-    lam_tilde, lat = [], []
+    lam_tilde: list[float] = []
+    lat: list[float] = []
     for ri, n in enumerate(TABLE_IV_N):
         for ci, lam in enumerate(TABLE_IV_LAMBDA):
             lt = lam / n

@@ -50,7 +50,7 @@ def _log_erlang_b(a: jax.Array, c: jax.Array) -> jax.Array:
     a = jnp.asarray(a, jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32)
     c = jnp.asarray(c, jnp.int32)
 
-    def step(invb, k):
+    def step(invb: jax.Array, k: jax.Array) -> tuple[jax.Array, jax.Array]:
         invb_next = 1.0 + (k / a) * invb
         return invb_next, invb_next
 
@@ -218,7 +218,8 @@ class ErlangMemo:
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
-        self._cache: dict[tuple, float] = {}
+        # exact keys are (c, lam); bucketed keys are (c, bucket index)
+        self._cache: dict[tuple[int, float], float] = {}
 
     def wait(self, lam: float, c: int) -> float:
         """Expected M/M/c wait E[W_q](lam, c) at this memo's mu."""

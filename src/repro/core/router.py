@@ -225,11 +225,15 @@ _PREDICT_CACHE_CAP = 1 << 16  # wholesale-clear bound on the predict memo
 class Router:
     """Event-driven LA-IMR controller (Algorithm 1), one loop per instance."""
 
-    def __init__(self, cluster: Cluster, params: RouterParams = RouterParams(),
+    def __init__(self, cluster: Cluster,
+                 params: Optional[RouterParams] = None,
                  metrics: Optional[MetricsRegistry] = None,
                  rho_buckets: Optional[int] = None):
         self.cluster = cluster
-        self.params = params
+        # a RouterParams() default would be ONE instance shared by every
+        # Router built without explicit params (the PR-2 SimConfig bug
+        # class, now enforced by laimr-lint mutable-default)
+        self.params = params if params is not None else RouterParams()
         self.metrics = metrics or MetricsRegistry()
         # per-deployment in-memory telemetry (the paper's in-process state)
         self.telemetry: dict[str, ModelTelemetry] = {}

@@ -110,7 +110,7 @@ import numpy as np
 from repro.core.autoscaler import PMHPA, ReactiveAutoscaler, ScaleEvent
 from repro.core.catalogue import Cluster, Deployment
 from repro.core.router import Action, Router, RouterParams
-from repro.core.scheduler import MultiQueueScheduler, QualityClass, Request
+from repro.core.scheduler import MultiQueueScheduler, Request
 from repro.core.telemetry import MetricsRegistry, SlidingRate
 from repro.core.workload import Arrival
 

@@ -20,7 +20,6 @@ Oracle: ``repro.kernels.ref.attention``.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,6 @@ block's partial accumulator and erase the benefit.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

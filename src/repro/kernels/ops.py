@@ -16,7 +16,6 @@ from __future__ import annotations
 import os
 from typing import Optional
 
-import jax
 
 from repro.kernels import ref as _ref
 

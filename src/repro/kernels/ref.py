@@ -168,7 +168,6 @@ def routing_score(lam: jax.Array, alpha: jax.Array, beta: jax.Array,
     erlang_c_table: (I, T) — per-deployment expected wait at rho grid
     points rho = linspace(0, 1, T) (last entries may be large/BIG).
     """
-    R = lam.shape[0]
     T = erlang_c_table.shape[1]
     lam_ = lam.astype(jnp.float32)            # (R,) or per-candidate (R, I)
     if lam_.ndim == 1:

@@ -128,7 +128,7 @@ def routing_score(lam, alpha, beta, gamma, mu, n, rtt, slo, cost,
     )(lam, alpha, beta, gamma, mu, n, rtt, slo, cost, erlang_c_table)
 
 
-def build_erlang_table(mu, n, t: int = 65):
+def build_erlang_table(mu, n, t: int = 65):  # laimr-lint: disable=kernel-oracle -- shared table builder, not a kernel: both routing_score paths (Pallas and ref.py) consume its output, and the kernel-vs-oracle sweeps in test_kernels exercise it on every case
     """Per-deployment M/M/c wait over rho = linspace(0, 1, t) — the
     'in-memory table pre-computed by the analytic model' (§IV-B)."""
     import numpy as np

@@ -21,7 +21,6 @@ Each combo writes results/dryrun/<arch>__<shape>__<mesh>.json:
   wall_s      lower+compile wall time
 """
 import argparse
-import dataclasses
 import json
 import re
 import time

@@ -177,7 +177,7 @@ def _fusion_bytes(ins: Instr, comps: dict) -> float:
         upd = defs.get(root.operands[1], "") if len(root.operands) > 1 else ""
         return _type_bytes(upd) or full
     if root.op == "tuple":
-        total, all_dus = 0.0, True
+        total = 0.0
         for opname in root.operands:
             sub = next((i for i in body if i.name == opname), None)
             if sub is not None and sub.op == "dynamic-update-slice":
@@ -185,7 +185,6 @@ def _fusion_bytes(ins: Instr, comps: dict) -> float:
                     else ""
                 total += _type_bytes(upd)
             else:
-                all_dus = False
                 total += _type_bytes(sub.type_str) if sub is not None else 0.0
         if total > 0:
             return total

@@ -2,14 +2,13 @@
 correct, shardable, zero allocation. Consumed by launch/dryrun.py."""
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import SHAPES, ArchConfig, InputShape
-from repro.models import model, transformer
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import model
 from repro.training import optimizer as opt
 from repro.training.train import make_functional_step
 

@@ -9,7 +9,7 @@ is implemented in full.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -182,7 +182,6 @@ def prefill(params: PyTree, cfg: ArchConfig, frames: jax.Array,
 def decode_step(params: PyTree, cfg: ArchConfig, tokens: jax.Array,
                 cache: PyTree, pos: jax.Array) -> tuple[jax.Array, PyTree]:
     """One decoder token against self-KV + cross-KV caches."""
-    b = tokens.shape[0]
     spec = _spec(cfg, causal=True)
     x = params["embed"][tokens][:, None, :] + \
         layers.sinusoidal_positions(int(cfg.max_decoder_len),

@@ -12,8 +12,18 @@ No shrinking, no adaptive edge-case search — just seeded coverage of the
 declared domains, which is what keeps the invariant tests meaningful on a
 bare interpreter. Install the ``property`` extra (see pyproject.toml) to
 get real hypothesis back; nothing in the test modules changes.
+
+The fallback implementation is defined UNCONDITIONALLY (prefixed
+``stub_*``) and merely aliased to the public names when hypothesis is
+absent: it is load-bearing test infrastructure — the whole property
+wall rides on its seeded determinism — so ``tests/test_propstub.py``
+pins its behaviour in both environments.
 """
 from __future__ import annotations
+
+import inspect
+import random
+import zlib
 
 try:
     from hypothesis import given, settings  # noqa: F401
@@ -21,114 +31,132 @@ try:
 
     HAVE_HYPOTHESIS = True
 except ModuleNotFoundError:
-    import inspect
-    import random
-    import zlib
+    HAVE_HYPOTHESIS = False
 
+STUB_MAX_EXAMPLES_CAP = 25  # keep the fallback suite fast
+
+
+class _Strategy:
+    def draw(self, rng: random.Random):
+        raise NotImplementedError
+
+
+class _Floats(_Strategy):
+    def __init__(self, lo: float, hi: float):
+        self.lo, self.hi = float(lo), float(hi)
+
+    def draw(self, rng):
+        # hit the bounds occasionally — cheap stand-in for hypothesis'
+        # boundary bias
+        r = rng.random()
+        if r < 0.05:
+            return self.lo
+        if r < 0.10:
+            return self.hi
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = int(lo), int(hi)
+
+    def draw(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+
+class _Lists(_Strategy):
+    def __init__(self, elem: _Strategy, min_size: int = 0,
+                 max_size: int = 10):
+        self.elem = elem
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+
+    def draw(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        return [self.elem.draw(rng) for _ in range(n)]
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, seq):
+        self.seq = list(seq)
+
+    def draw(self, rng):
+        return rng.choice(self.seq)
+
+
+class _Booleans(_Strategy):
+    def draw(self, rng):
+        return rng.random() < 0.5
+
+
+class stub_st:  # noqa: N801 — mirrors `hypothesis.strategies as st`
+    @staticmethod
+    def floats(min_value, max_value, **_kw):
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=10, **_kw):
+        return _Lists(elem, min_size, max_size)
+
+    @staticmethod
+    def sampled_from(seq):
+        return _SampledFrom(seq)
+
+    @staticmethod
+    def booleans():
+        return _Booleans()
+
+
+class stub_settings:  # noqa: N801 — decorator that records max_examples
+    def __init__(self, max_examples: int = 10, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._stub_max_examples = self.max_examples
+        return fn
+
+
+def stub_seed_base(qualname: str) -> int:
+    """The per-test seed root: stable across processes and refactors of
+    this module (depends ONLY on the test's qualified name)."""
+    return zlib.adler32(qualname.encode())
+
+
+def stub_given(*strats: _Strategy):
+    """Parametrize over seeded example indices, drawing the declared
+    strategies inside the test body — the signature handed to pytest
+    keeps only the non-strategy parameters (e.g. ``self``) plus the
+    example index, so strategy parameters are never mistaken for
+    fixtures."""
     import pytest
 
-    HAVE_HYPOTHESIS = False
-    _MAX_EXAMPLES_CAP = 25  # keep the fallback suite fast
+    def deco(fn):
+        n = min(getattr(fn, "_stub_max_examples", 10),
+                STUB_MAX_EXAMPLES_CAP)
+        base = stub_seed_base(fn.__qualname__)
 
-    class _Strategy:
-        def draw(self, rng: random.Random):
-            raise NotImplementedError
+        def wrapper(*args, _prop_example=0):
+            rng = random.Random(base * 100_003 + _prop_example)
+            fn(*args, *[s.draw(rng) for s in strats])
 
-    class _Floats(_Strategy):
-        def __init__(self, lo: float, hi: float):
-            self.lo, self.hi = float(lo), float(hi)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        params = list(inspect.signature(fn).parameters.values())
+        kept = params[: len(params) - len(strats)]
+        wrapper.__signature__ = inspect.Signature(
+            kept + [inspect.Parameter(
+                "_prop_example",
+                inspect.Parameter.POSITIONAL_OR_KEYWORD)])
+        return pytest.mark.parametrize("_prop_example", range(n))(wrapper)
 
-        def draw(self, rng):
-            # hit the bounds occasionally — cheap stand-in for hypothesis'
-            # boundary bias
-            r = rng.random()
-            if r < 0.05:
-                return self.lo
-            if r < 0.10:
-                return self.hi
-            return rng.uniform(self.lo, self.hi)
+    return deco
 
-    class _Integers(_Strategy):
-        def __init__(self, lo: int, hi: int):
-            self.lo, self.hi = int(lo), int(hi)
 
-        def draw(self, rng):
-            return rng.randint(self.lo, self.hi)
-
-    class _Lists(_Strategy):
-        def __init__(self, elem: _Strategy, min_size: int = 0,
-                     max_size: int = 10):
-            self.elem = elem
-            self.min_size = min_size
-            self.max_size = max_size if max_size is not None else min_size + 10
-
-        def draw(self, rng):
-            n = rng.randint(self.min_size, self.max_size)
-            return [self.elem.draw(rng) for _ in range(n)]
-
-    class _SampledFrom(_Strategy):
-        def __init__(self, seq):
-            self.seq = list(seq)
-
-        def draw(self, rng):
-            return rng.choice(self.seq)
-
-    class _Booleans(_Strategy):
-        def draw(self, rng):
-            return rng.random() < 0.5
-
-    class st:  # noqa: N801 — mirrors `hypothesis.strategies as st`
-        @staticmethod
-        def floats(min_value, max_value, **_kw):
-            return _Floats(min_value, max_value)
-
-        @staticmethod
-        def integers(min_value, max_value):
-            return _Integers(min_value, max_value)
-
-        @staticmethod
-        def lists(elem, min_size=0, max_size=10, **_kw):
-            return _Lists(elem, min_size, max_size)
-
-        @staticmethod
-        def sampled_from(seq):
-            return _SampledFrom(seq)
-
-        @staticmethod
-        def booleans():
-            return _Booleans()
-
-    class settings:  # noqa: N801 — decorator that records max_examples
-        def __init__(self, max_examples: int = 10, **_kw):
-            self.max_examples = max_examples
-
-        def __call__(self, fn):
-            fn._stub_max_examples = self.max_examples
-            return fn
-
-    def given(*strats: _Strategy):
-        """Parametrize over seeded example indices, drawing the declared
-        strategies inside the test body — the signature handed to pytest
-        keeps only the non-strategy parameters (e.g. ``self``) plus the
-        example index, so strategy parameters are never mistaken for
-        fixtures."""
-
-        def deco(fn):
-            n = min(getattr(fn, "_stub_max_examples", 10), _MAX_EXAMPLES_CAP)
-            base = zlib.adler32(fn.__qualname__.encode())
-
-            def wrapper(*args, _prop_example=0):
-                rng = random.Random(base * 100_003 + _prop_example)
-                fn(*args, *[s.draw(rng) for s in strats])
-
-            wrapper.__name__ = fn.__name__
-            wrapper.__doc__ = fn.__doc__
-            params = list(inspect.signature(fn).parameters.values())
-            kept = params[: len(params) - len(strats)]
-            wrapper.__signature__ = inspect.Signature(
-                kept + [inspect.Parameter(
-                    "_prop_example",
-                    inspect.Parameter.POSITIONAL_OR_KEYWORD)])
-            return pytest.mark.parametrize("_prop_example", range(n))(wrapper)
-
-        return deco
+if not HAVE_HYPOTHESIS:
+    st = stub_st
+    settings = stub_settings
+    given = stub_given

@@ -11,6 +11,11 @@ The full tier-1 command (ROADMAP.md) runs everything.
 """
 import pytest  # noqa: F401  (kept for fixture/plugin extensions)
 
+# lint_fixtures holds intentionally-broken snippets for the laimr-lint
+# self-tests (including files named test_*.py inside miniature project
+# trees) — they are lint INPUTS, never test modules.
+collect_ignore = ["lint_fixtures"]
+
 
 def pytest_configure(config):
     config.addinivalue_line(

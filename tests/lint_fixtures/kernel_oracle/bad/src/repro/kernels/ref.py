@@ -1,0 +1,5 @@
+"""Miniature oracle module: gather has a twin, warp_scan does not."""
+
+
+def gather(x, idx):
+    return x[idx]

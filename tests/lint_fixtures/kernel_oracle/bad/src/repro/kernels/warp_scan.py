@@ -1,0 +1,12 @@
+"""Known-bad kernels: one with no oracle twin, one with an oracle but
+no test that pins kernel and oracle against each other."""
+
+
+def warp_scan(x, block=128):
+    # public kernel entry point, but ref.py has no warp_scan: flagged
+    return x
+
+
+def fused_gather(x, idx, block=128):
+    # ref.gather exists, but no test names both sides: flagged
+    return x[idx]

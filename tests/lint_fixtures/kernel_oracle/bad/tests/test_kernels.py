@@ -1,0 +1,10 @@
+"""A kernel test that never consults the oracle: it compares
+fused_gather against an inline recomputation, so a bug shared with the
+kernel's own logic passes silently — NOT a kernel/oracle pairing."""
+from repro.kernels.warp_scan import fused_gather
+
+
+def test_gather_roundtrip():
+    x = list(range(8))
+    idx = [3, 1, 2]
+    assert fused_gather(x, idx) == [x[i] for i in idx]

@@ -1,0 +1,10 @@
+"""Dispatch facade: public functions here are selectors over the
+kernel/oracle pair, not kernels — ops.py is excluded from pairing."""
+from repro.kernels import ref as _ref
+
+
+def gather(x, idx, impl="ref"):
+    if impl == "ref":
+        return _ref.gather(x, idx)
+    from repro.kernels.warp_scan import fused_gather
+    return fused_gather(x, idx)

@@ -1,0 +1,11 @@
+"""Known-clean kernel module: the public entry point has an oracle
+twin (fused_gather -> ref.gather) and a pinning test; the private
+helper is not an entry point."""
+
+
+def fused_gather(x, idx, block=128):
+    return _gather_blocked(x, idx, block)
+
+
+def _gather_blocked(x, idx, block):
+    return x[idx]

@@ -1,0 +1,11 @@
+"""Miniature benchmark helper that FORGOT failed work: percentiles are
+computed over completions only, so a policy that fails half its
+traffic still prints a pristine P99 — the drift ledger-completeness
+must flag."""
+import numpy as np
+
+
+def per_lambda_stats(completed):
+    lat = np.asarray([r.latency for r in completed])
+    return {"p50": float(np.percentile(lat, 50)),
+            "p99": float(np.percentile(lat, 99))}

@@ -1,0 +1,29 @@
+"""Miniature control plane with THREE ledger-completeness violations:
+
+* the outcomes ledger has no RETRIED bucket (declared constant
+  unledgered) and an ad-hoc LOST bucket (key without a constant);
+* check_conservation no longer references FAILED — the exact
+  "deleting an outcome constant from check_conservation" drift the
+  acceptance criteria require the check to catch.
+"""
+from repro.control.admission import (ADMITTED, FAILED, OFFLOADED,  # noqa
+                                     REJECTED, RETRIED)
+
+LOST = object()
+
+
+class ControlPlane:
+    def __init__(self):
+        self.decided = 0
+        self.outcomes = {ADMITTED: 0, OFFLOADED: 0, REJECTED: 0,
+                         FAILED: 0, LOST: 0}
+
+    def check_conservation(self):
+        total = (self.outcomes[ADMITTED] + self.outcomes[OFFLOADED]
+                 + self.outcomes[REJECTED])
+        if total != self.decided:
+            raise AssertionError("conservation broken")
+
+    def mark_failed(self):
+        self.outcomes[ADMITTED] -= 1
+        self.outcomes[FAILED] += 1

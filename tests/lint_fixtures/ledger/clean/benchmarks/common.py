@@ -1,0 +1,12 @@
+"""Miniature failed-aware benchmark helper: percentiles over finite
+completions, failure count reported alongside."""
+import numpy as np
+
+
+def per_lambda_stats(completed, failed=()):
+    lat = np.asarray([r.latency for r in completed
+                      if r.latency is not None])
+    return {"p50": float(np.percentile(lat, 50)),
+            "p99": float(np.percentile(lat, 99)),
+            "failed": len(failed) + sum(r.latency is None
+                                        for r in completed)}

@@ -1,0 +1,7 @@
+"""Miniature admission module: the outcome vocabulary."""
+
+ADMITTED = "admitted"
+OFFLOADED = "offloaded"
+REJECTED = "rejected"
+FAILED = "failed"
+RETRIED = "retried"

@@ -1,0 +1,26 @@
+"""Miniature control plane whose ledger is closed: every declared
+outcome is a ledger bucket, check_conservation references all of them,
+and the failure bucket is handled by the benchmark helper."""
+from repro.control.admission import (ADMITTED, FAILED, OFFLOADED,  # noqa
+                                     REJECTED, RETRIED)
+
+
+class ControlPlane:
+    def __init__(self):
+        self.decided = 0
+        self.outcomes = {ADMITTED: 0, OFFLOADED: 0, REJECTED: 0,
+                         FAILED: 0, RETRIED: 0}
+
+    def check_conservation(self):
+        total = (self.outcomes[ADMITTED] + self.outcomes[OFFLOADED]
+                 + self.outcomes[REJECTED] + self.outcomes[FAILED])
+        if total != self.decided:
+            raise AssertionError("conservation broken")
+        unknown = set(self.outcomes) - {ADMITTED, OFFLOADED, REJECTED,
+                                        FAILED, RETRIED}
+        if unknown:
+            raise AssertionError(f"unledgered buckets {unknown}")
+
+    def mark_failed(self):
+        self.outcomes[ADMITTED] -= 1
+        self.outcomes[FAILED] += 1

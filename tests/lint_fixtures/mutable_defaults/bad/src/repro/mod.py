@@ -1,0 +1,32 @@
+"""Known-bad fixture for mutable-default: every shared-default shape."""
+import dataclasses
+
+
+@dataclasses.dataclass
+class SimConfig:
+    seed: int = 0
+
+
+def append_to(item, bucket=[]):          # mutable literal: flagged
+    bucket.append(item)
+    return bucket
+
+
+def merge(extra, base={}):               # mutable literal: flagged
+    base.update(extra)
+    return base
+
+
+def run(arrivals, *, config=SimConfig()):   # the PR-2 shape: flagged
+    return arrivals, config
+
+
+def build(pool=list()):                  # mutable constructor: flagged
+    return pool
+
+
+@dataclasses.dataclass
+class Scenario:
+    # dataclasses accept this (only list/dict/set are rejected at
+    # runtime) yet every Scenario() shares ONE SimConfig: flagged
+    config: SimConfig = SimConfig()

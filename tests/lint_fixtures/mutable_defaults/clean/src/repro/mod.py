@@ -1,0 +1,30 @@
+"""Known-clean fixture for mutable-default: the sanctioned shapes."""
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class SimConfig:
+    seed: int = 0
+
+
+def append_to(item, bucket=None):
+    bucket = [] if bucket is None else bucket
+    bucket.append(item)
+    return bucket
+
+
+def run(arrivals, *, config: Optional[SimConfig] = None):
+    config = config if config is not None else SimConfig()
+    return arrivals, config
+
+
+def immutable_defaults(shape=(3, 4), tags=frozenset(), scale=float(1)):
+    # immutable factories are safe to share
+    return shape, tags, scale
+
+
+@dataclasses.dataclass
+class Scenario:
+    config: SimConfig = dataclasses.field(default_factory=SimConfig)
+    lambdas: list = dataclasses.field(default_factory=list)

@@ -1,0 +1,23 @@
+"""Known-bad fixture for rng-discipline: every forbidden RNG shape."""
+import numpy as np
+from numpy.random import rand  # module-level API import: flagged
+
+
+def jitter(n):
+    # hidden global stream: flagged
+    return np.random.normal(0.0, 1.0, n)
+
+
+def seed_everything():
+    # global seeding is still the module-level API: flagged
+    np.random.seed(0)
+
+
+def fresh_stream():
+    # unseeded: OS entropy, a different trace every run: flagged
+    return np.random.default_rng()
+
+
+def fresh_stream_bare():
+    from numpy.random import default_rng
+    return default_rng()  # unseeded via from-import: flagged

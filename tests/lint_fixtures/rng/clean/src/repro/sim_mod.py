@@ -1,0 +1,22 @@
+"""Known-clean fixture for rng-discipline: the sanctioned shapes."""
+import numpy as np
+
+
+def make_stream(seed: int) -> np.random.Generator:
+    # seeded constructor: fine (Generator annotation is fine too)
+    return np.random.default_rng(seed)
+
+
+def make_stream_kw(config) -> np.random.Generator:
+    return np.random.default_rng(seed=(config.seed, 7))
+
+
+def jitter(rng: np.random.Generator, n: int):
+    # threaded generator parameter: the whole point
+    return rng.normal(0.0, 1.0, n)
+
+
+def unrelated_random(obj):
+    # not numpy's global stream: an attribute that merely ends in a
+    # distribution name must not trip the check
+    return obj.random.normal()

@@ -1,0 +1,11 @@
+"""Known-bad fixture for sim-time-purity: wall clocks in sim physics."""
+import time
+from datetime import datetime
+from time import perf_counter
+
+
+def step(events):
+    t0 = time.time()            # flagged
+    tick = perf_counter()       # flagged (from-import alias)
+    stamp = datetime.now()      # flagged
+    return t0, tick, stamp, events

@@ -1,0 +1,13 @@
+"""Known-clean fixture for sim-time-purity: the simulated clock only."""
+
+
+def step(t_now: float, events):
+    # simulated time arrives as a parameter; no host clock anywhere
+    deadline = t_now + 0.05
+    return [e for e in events if e.at <= deadline]
+
+
+def format_timestamp(t_now: float) -> str:
+    # naming something "time" is fine; only host-clock calls are not
+    time_label = f"t={t_now:.3f}s"
+    return time_label

@@ -1,0 +1,10 @@
+"""Allowlist fixture: the launch dry-runner measures REAL elapsed time
+(compile/lowering walls), so the wall clock is legitimate here and the
+check's path allowlist must keep it out of scope."""
+import time
+
+
+def timed_lowering(fn):
+    t0 = time.time()    # allowlisted path: must NOT be flagged
+    fn()
+    return time.time() - t0

@@ -1,0 +1,10 @@
+"""Known-bad suppressions: missing justification and typo'd check id."""
+import numpy as np
+
+
+def jitter(n):
+    return np.random.normal(0.0, 1.0, n)  # laimr-lint: disable=rng-discipline
+
+
+def more_jitter(n):
+    return np.random.normal(0.0, 1.0, n)  # laimr-lint: disable=rngg-discipline -- typo'd id protects nothing

@@ -1,0 +1,6 @@
+"""Known-clean suppression: the finding is silenced WITH a reason."""
+import numpy as np
+
+
+def legacy_jitter(n):
+    return np.random.normal(0.0, 1.0, n)  # laimr-lint: disable=rng-discipline -- fixture demonstrating a justified suppression

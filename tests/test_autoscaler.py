@@ -1,8 +1,6 @@
 """PM-HPA (paper §IV-D, §V-A3) and the reactive baseline autoscaler."""
-import dataclasses
 
 import numpy as np
-import pytest
 
 from repro.core.autoscaler import PMHPA, ReactiveAutoscaler, desired_replicas
 from repro.core.catalogue import Cluster, Deployment

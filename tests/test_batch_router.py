@@ -14,7 +14,7 @@ import pytest
 from _propstub import given, settings, st
 from repro.core.catalogue import Cluster, Deployment
 from repro.core.latency_model import CLOUD, PI4_EDGE, YOLOV5M
-from repro.core.router import (RouterParams, select_instance,
+from repro.core.router import (select_instance,
                                select_instance_batch, select_instance_scalar)
 from repro.core.scheduler import QualityClass, Request
 from repro.serving.batch_router import (ADMITTED, OFFLOADED, REJECTED,

@@ -1,0 +1,157 @@
+"""Tests for tests/_propstub.py itself (ISSUE 7 satellite).
+
+The hypothesis fallback is load-bearing test infrastructure: every
+conservation / chaos / golden property wall in this repo rides on its
+seeded draws when the ``property`` extra is absent. These tests pin
+
+* seeded-draw determinism (same qualname + example index -> identical
+  values, across separate Random instances and wrapper invocations);
+* the strategy surface the walls use (floats/integers/lists/
+  sampled_from/booleans) including bounds, boundary bias and types;
+* the ``given``/``settings`` decorator mechanics: parametrized example
+  count, the max-examples cap, and signature surgery that keeps
+  strategy parameters invisible to pytest's fixture resolution.
+
+They run against the stub implementation DIRECTLY (``stub_*`` names),
+so they hold whether or not real hypothesis is installed.
+"""
+import inspect
+import random
+
+import pytest
+from _propstub import (HAVE_HYPOTHESIS, STUB_MAX_EXAMPLES_CAP, stub_given,
+                       stub_seed_base, stub_settings, stub_st)
+
+
+def draws(strategy, seed, n=50):
+    rng = random.Random(seed)
+    return [strategy.draw(rng) for _ in range(n)]
+
+
+class TestStrategySurface:
+    def test_floats_bounds_and_boundary_bias(self):
+        s = stub_st.floats(-2.5, 7.0)
+        vals = draws(s, seed=3, n=500)
+        assert all(-2.5 <= v <= 7.0 for v in vals)
+        assert all(isinstance(v, float) for v in vals)
+        # the 5%/5% boundary bias must actually emit the exact bounds
+        assert -2.5 in vals and 7.0 in vals
+
+    def test_integers_inclusive_bounds(self):
+        s = stub_st.integers(-3, 3)
+        vals = draws(s, seed=1, n=400)
+        assert set(vals) == set(range(-3, 4))
+
+    def test_lists_size_bounds_and_element_strategy(self):
+        s = stub_st.lists(stub_st.integers(0, 9), min_size=2, max_size=5)
+        vals = draws(s, seed=9, n=100)
+        assert all(2 <= len(v) <= 5 for v in vals)
+        assert all(0 <= x <= 9 for v in vals for x in v)
+
+    def test_sampled_from_draws_only_members(self):
+        s = stub_st.sampled_from(("a", "b", "c"))
+        vals = draws(s, seed=4, n=200)
+        assert set(vals) == {"a", "b", "c"}
+
+    def test_booleans_hits_both_values(self):
+        vals = draws(stub_st.booleans(), seed=7, n=100)
+        assert set(vals) == {True, False}
+
+    def test_extra_kwargs_tolerated_like_hypothesis(self):
+        # the walls pass hypothesis-only kwargs; the stub must accept
+        # them (allow_nan etc.) without exploding
+        stub_st.floats(0.0, 1.0, allow_nan=False, allow_infinity=False)
+        stub_st.lists(stub_st.booleans(), min_size=0, max_size=3,
+                      unique=False)
+
+
+class TestSeededDeterminism:
+    def test_same_seed_same_draws(self):
+        for mk in (lambda: stub_st.floats(0.0, 1.0),
+                   lambda: stub_st.integers(0, 1000),
+                   lambda: stub_st.lists(stub_st.integers(0, 5)),
+                   lambda: stub_st.booleans()):
+            assert draws(mk(), seed=42) == draws(mk(), seed=42)
+
+    def test_seed_base_depends_only_on_qualname(self):
+        assert stub_seed_base("TestX.test_y") == stub_seed_base(
+            "TestX.test_y")
+        assert stub_seed_base("TestX.test_y") != stub_seed_base(
+            "TestX.test_z")
+
+    def test_wrapper_redraws_identically_per_example(self):
+        got = []
+
+        @stub_given(stub_st.floats(0.0, 10.0), stub_st.integers(0, 99))
+        def probe(f, i):
+            got.append((f, i))
+
+        probe(_prop_example=3)
+        probe(_prop_example=3)
+        probe(_prop_example=4)
+        assert got[0] == got[1]
+        assert got[0] != got[2]
+
+    def test_distinct_tests_draw_distinct_streams(self):
+        a, b = [], []
+
+        @stub_given(stub_st.integers(0, 10**9))
+        def probe_a(x):
+            a.append(x)
+
+        @stub_given(stub_st.integers(0, 10**9))
+        def probe_b(x):
+            b.append(x)
+
+        probe_a(_prop_example=0)
+        probe_b(_prop_example=0)
+        assert a != b
+
+
+class TestGivenMechanics:
+    def test_parametrized_example_count_default(self):
+        @stub_given(stub_st.booleans())
+        def probe(x):
+            pass
+
+        marks = [m for m in probe.pytestmark if m.name == "parametrize"]
+        assert marks and list(marks[0].args[1]) == list(range(10))
+
+    def test_settings_max_examples_and_cap(self):
+        @stub_settings(max_examples=7)
+        def seven(x):
+            pass
+
+        @stub_settings(max_examples=10_000)
+        def capped(x):
+            pass
+
+        n7 = [m for m in stub_given(stub_st.booleans())(seven).pytestmark
+              if m.name == "parametrize"][0]
+        ncap = [m for m in
+                stub_given(stub_st.booleans())(capped).pytestmark
+                if m.name == "parametrize"][0]
+        assert list(n7.args[1]) == list(range(7))
+        assert list(ncap.args[1]) == list(range(STUB_MAX_EXAMPLES_CAP))
+
+    def test_signature_hides_strategy_params_keeps_self(self):
+        @stub_given(stub_st.booleans(), stub_st.integers(0, 1))
+        def probe(self, flag, n):
+            pass
+
+        params = list(inspect.signature(probe).parameters)
+        assert params == ["self", "_prop_example"]
+
+    def test_settings_ignores_hypothesis_only_kwargs(self):
+        stub_settings(max_examples=5, deadline=None,
+                      suppress_health_check=())
+
+
+class TestPublicAliases:
+    def test_fallback_is_exported_when_hypothesis_missing(self):
+        import _propstub
+        if HAVE_HYPOTHESIS:
+            pytest.skip("real hypothesis active: stub not aliased")
+        assert _propstub.st is stub_st
+        assert _propstub.given is stub_given
+        assert _propstub.settings is stub_settings

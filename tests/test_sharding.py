@@ -5,7 +5,6 @@ without 256 devices; the dry-run exercises the real thing.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import AbstractMesh
 from jax.sharding import PartitionSpec as P

@@ -30,7 +30,7 @@ from repro.core.catalogue import Cluster, Deployment
 from repro.core.latency_model import CLOUD, PI4_EDGE, YOLOV5M
 from repro.core.scheduler import QualityClass, Request
 from repro.core.simulator import ClusterSimulator, SimConfig, _PodFleet
-from repro.core.workload import bounded_pareto_bursts, poisson_arrivals
+from repro.core.workload import bounded_pareto_bursts
 from test_sim_golden import two_tier
 
 

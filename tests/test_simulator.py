@@ -133,7 +133,6 @@ class TestDrainCounterIdempotence:
         be decremented twice (regression for the O(1) free-list refactor:
         the seed's recount property was naturally idempotent)."""
         from repro.core.autoscaler import ScaleEvent
-        from repro.core.simulator import _Pool
 
         cl = two_tier(n_edge=4, edge_max=6)
         sim = ClusterSimulator(cl, SimConfig(mode="laimr", seed=0))

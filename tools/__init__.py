@@ -1,0 +1,1 @@
+# Repo-local tooling namespace (``python -m tools.laimr_lint``).

@@ -1,0 +1,27 @@
+"""laimr-lint: the repo's invariants as executable checks (ISSUE 7).
+
+Golden-trace digests, the conservation ledger and the kernel/oracle
+pairing are only as durable as the discipline that maintains them.
+This package turns that discipline into a dependency-free AST pass:
+
+==================== =============================================
+check id             invariant
+==================== =============================================
+rng-discipline       seeded, threaded RNG streams only under src/
+sim-time-purity      no wall clock in core/ and control/ physics
+mutable-default      no shared mutable defaults (PR-2 bug class)
+ledger-completeness  outcome constants <-> ledger <-> enforcement
+                     <-> failed-aware percentiles stay in sync
+kernel-oracle        every kernel has a ref.py twin + pinning test
+release-hardening    no swallowed release/finish exceptions
+==================== =============================================
+
+Run ``python -m tools.laimr_lint [paths]``; suppress a finding inline
+with ``# laimr-lint: disable=<check> -- <why>`` (the reason clause is
+mandatory and itself linted). See ``--list-checks`` and the
+"Invariants & static analysis" section of the top-level README.
+"""
+from tools.laimr_lint.engine import Linter, LintResult  # noqa: F401
+from tools.laimr_lint.findings import Finding  # noqa: F401
+
+__all__ = ["Linter", "LintResult", "Finding"]

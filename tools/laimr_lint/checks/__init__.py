@@ -1,0 +1,84 @@
+"""Check registry: one module per check, registered by decorator.
+
+Two plugin shapes:
+
+* :class:`FileCheck` — pure per-file AST pass. ``applies(rel)`` scopes
+  the check to a path family (relative to the lint root, posix form);
+  ``run_file`` yields findings for one parsed module.
+* :class:`ProjectCheck` — cross-file pass anchored at the lint root
+  (e.g. the conservation-ledger and kernel/oracle contracts, which
+  relate constants, methods and tests in *different* files).
+  ``run_project`` is invoked once per lint run, after per-file passes.
+
+Adding a check: drop a module in this package, subclass one of the two
+shapes, decorate with ``@register``, and give it a kebab-case ``id``
+plus a one-line ``description`` (surfaced by ``--list-checks``). Ship a
+known-bad and a known-clean fixture under ``tests/lint_fixtures/`` —
+``tests/test_laimr_lint.py`` asserts every registered check has both.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Iterator, Type
+
+from tools.laimr_lint.findings import Finding
+
+
+class FileCheck:
+    """Per-file AST check."""
+
+    id: str = ""
+    description: str = ""
+
+    def applies(self, rel: str) -> bool:
+        """Whether this check is in scope for ``rel`` (posix path
+        relative to the lint root)."""
+        return True
+
+    def run_file(self, rel: str, tree: ast.AST,
+                 source: str) -> Iterator[Finding]:
+        raise NotImplementedError
+
+
+class ProjectCheck:
+    """Cross-file check anchored at the lint root."""
+
+    id: str = ""
+    description: str = ""
+
+    def run_project(self, root: Path) -> Iterator[Finding]:
+        raise NotImplementedError
+
+
+REGISTRY: dict[str, "FileCheck | ProjectCheck"] = {}
+
+
+def register(cls: Type) -> Type:
+    inst = cls()
+    if not inst.id:
+        raise ValueError(f"{cls.__name__} has no check id")
+    if inst.id in REGISTRY:
+        raise ValueError(f"duplicate check id {inst.id!r}")
+    REGISTRY[inst.id] = inst
+    return cls
+
+
+def dotted_name(node: ast.AST) -> str:
+    """Best-effort dotted name of a Name/Attribute chain (``np.random.seed``
+    -> ``"np.random.seed"``); empty string for anything unresolvable."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def load_all() -> None:
+    """Import every check module so its ``@register`` runs."""
+    from tools.laimr_lint.checks import (bare_except,  # noqa: F401
+                                         kernel_oracle, ledger,
+                                         mutable_defaults, rng, simtime)

@@ -1,0 +1,93 @@
+"""release-hardening: never swallow slot release/finish errors (check 6).
+
+Double-release-raises is a load-bearing contract: ``SlotBank``,
+``ServingEngine``, ``PodGroup`` and the simulator's ``_PodFleet`` all
+raise on a second ``release``/``finish`` of the same slot, because the
+alternative is a free-slot count that drifts one admission high forever
+(the exact failure mode first-completion cancellation of SafeTail
+duplicates would otherwise hit). A ``try: ... except: pass`` around a
+release path converts that loud error back into silent drift — so in
+``src/repro/control/`` and ``src/repro/core/simulator.py`` any handler
+that (a) catches everything (bare ``except:`` or
+``except (Base)Exception``) and (b) does nothing with it (body of only
+``pass``/``...``/``continue``) is forbidden when the guarded code
+touches a ``release``/``finish``/``crash``/``retire`` call.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.laimr_lint.checks import FileCheck, dotted_name, register
+from tools.laimr_lint.findings import Finding
+
+_ID = "release-hardening"
+
+SCOPES = ("src/repro/control/", "src/repro/core/simulator.py")
+
+# slot-lifecycle method names whose errors must never be swallowed
+_RELEASE_NAMES = {"release", "finish", "crash", "retire", "mark_draining"}
+
+
+def _release_calls(nodes: list[ast.stmt]) -> list[str]:
+    out = []
+    for stmt in nodes:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Call):
+                name = dotted_name(node.func)
+                tail = name.split(".")[-1]
+                if tail in _RELEASE_NAMES or tail.endswith("_finish") \
+                        or tail.endswith("_release"):
+                    out.append(name or tail)
+    return out
+
+
+def _swallows(handler: ast.ExceptHandler) -> bool:
+    """True for a handler that catches everything and discards it."""
+    t = handler.type
+    catches_all = (
+        t is None
+        or (isinstance(t, (ast.Name, ast.Attribute))
+            and dotted_name(t).split(".")[-1] in ("Exception",
+                                                  "BaseException")))
+    if not catches_all:
+        return False
+    for stmt in handler.body:
+        if isinstance(stmt, ast.Pass) or isinstance(stmt, ast.Continue):
+            continue
+        if isinstance(stmt, ast.Expr) and \
+                isinstance(stmt.value, ast.Constant) and \
+                stmt.value.value is Ellipsis:
+            continue
+        return False    # the handler actually does something
+    return True
+
+
+@register
+class ReleaseHardening(FileCheck):
+    id = _ID
+    description = ("no bare-except/except-Exception-pass around slot "
+                   "release/finish paths in control/ and "
+                   "core/simulator.py (double-release-raises is a "
+                   "load-bearing contract)")
+
+    def applies(self, rel: str) -> bool:
+        return any(rel == s or rel.startswith(s) for s in SCOPES)
+
+    def run_file(self, rel: str, tree: ast.AST,
+                 source: str) -> Iterator[Finding]:
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Try):
+                continue
+            for handler in node.handlers:
+                if not _swallows(handler):
+                    continue
+                guarded = _release_calls(node.body)
+                if guarded:
+                    yield Finding(
+                        rel, handler.lineno, handler.col_offset, _ID,
+                        "exception-swallowing handler wraps slot "
+                        f"lifecycle call(s) {', '.join(guarded)}: a "
+                        "swallowed double-release silently drifts the "
+                        "free-slot ledger — let it raise or handle the "
+                        "specific expected exception")

@@ -1,0 +1,162 @@
+"""kernel-oracle: every Pallas kernel has a reference twin + test (5).
+
+The kernels under ``src/repro/kernels/`` are trusted only because each
+one is pinned against the pure-jnp oracle in ``kernels/ref.py`` by the
+(slow-marker) sweeps in ``tests/test_kernels.py`` / ``test_fused.py``.
+A kernel that lands without its oracle — or whose oracle comparison
+quietly disappears in a refactor — is an unverifiable fast path.
+
+Mechanics: every PUBLIC module-level function in a kernel module
+(``ref.py`` itself and the ``ops.py`` dispatch facade excluded) must
+
+* map to a public function in ``ref.py`` — name match after stripping
+  the implementation-flavour prefixes ``fused_`` / ``flash_``
+  (``fused_attention``/``flash_attention`` -> ``ref.attention``); and
+* be exercised by at least one test function that names BOTH sides:
+  the kernel entry point itself and ``ref.<oracle>`` (via the ``ref``
+  module alias), in the same test body.
+
+Genuine helpers with no oracle counterpart (e.g. a lookup-table
+builder the kernel and oracle share) are suppressed inline at their
+``def`` with a written reason — the suppression is the documentation.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Iterator
+
+from tools.laimr_lint.checks import ProjectCheck, register
+from tools.laimr_lint.findings import Finding
+
+_ID = "kernel-oracle"
+
+KERNELS_DIR = "src/repro/kernels"
+REF = "src/repro/kernels/ref.py"
+TEST_FILES = ("tests/test_kernels.py", "tests/test_fused.py")
+EXCLUDED_MODULES = {"__init__.py", "ref.py", "ops.py"}
+_PREFIXES = ("fused_", "flash_")
+
+
+def _public_defs(mod: ast.Module) -> list[ast.FunctionDef]:
+    return [n for n in mod.body
+            if isinstance(n, ast.FunctionDef)
+            and not n.name.startswith("_")]
+
+
+def _oracle_name(kernel: str) -> str:
+    for p in _PREFIXES:
+        if kernel.startswith(p) and len(kernel) > len(p):
+            return kernel[len(p):]
+    return kernel
+
+
+def _ref_aliases(mod: ast.Module) -> set[str]:
+    """Local names bound to the repro.kernels.ref module."""
+    out = set()
+    for node in ast.walk(mod):
+        if isinstance(node, ast.ImportFrom) \
+                and node.module == "repro.kernels":
+            for a in node.names:
+                if a.name == "ref":
+                    out.add(a.asname or "ref")
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "repro.kernels.ref":
+                    out.add(a.asname or "repro")
+    return out
+
+
+def _test_functions(mod: ast.Module) -> list[ast.FunctionDef]:
+    return [n for n in ast.walk(mod)
+            if isinstance(n, ast.FunctionDef)
+            and n.name.startswith("test_")]
+
+
+def _references(fn: ast.FunctionDef,
+                ref_aliases: set[str]) -> tuple[set[str], set[str]]:
+    """(plain identifiers, oracle attributes accessed via a ref alias)
+    used inside ``fn``."""
+    plain: set[str] = set()
+    oracle: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute):
+            if isinstance(node.value, ast.Name) \
+                    and node.value.id in ref_aliases:
+                oracle.add(node.attr)
+            else:
+                plain.add(node.attr)
+        elif isinstance(node, ast.Name):
+            plain.add(node.id)
+    return plain, oracle
+
+
+def _parse(path: Path) -> ast.Module | None:
+    try:
+        return ast.parse(path.read_text(), filename=str(path))
+    except (OSError, SyntaxError):
+        return None
+
+
+@register
+class KernelOracle(ProjectCheck):
+    id = _ID
+    description = ("every public kernel entry point under "
+                   "src/repro/kernels/ has a ref.py oracle twin and a "
+                   "test naming kernel and oracle together")
+
+    def run_project(self, root: Path) -> Iterator[Finding]:
+        kdir = root / KERNELS_DIR
+        if not kdir.is_dir():
+            return      # no kernel layer at this root
+        ref_mod = _parse(root / REF)
+        ref_names = {f.name for f in _public_defs(ref_mod)} \
+            if ref_mod else set()
+
+        # test corpus: per test function, what it references
+        corpus: list[tuple[set[str], set[str]]] = []
+        missing_tests = []
+        for rel in TEST_FILES:
+            mod = _parse(root / rel)
+            if mod is None:
+                missing_tests.append(rel)
+                continue
+            aliases = _ref_aliases(mod)
+            for fn in _test_functions(mod):
+                corpus.append(_references(fn, aliases))
+
+        for kfile in sorted(kdir.glob("*.py")):
+            if kfile.name in EXCLUDED_MODULES:
+                continue
+            mod = _parse(kfile)
+            if mod is None:
+                continue    # parse-error reported by the per-file pass
+            rel = f"{KERNELS_DIR}/{kfile.name}"
+            for fn in _public_defs(mod):
+                oracle = _oracle_name(fn.name)
+                if ref_mod is None:
+                    yield Finding(rel, fn.lineno, fn.col_offset, _ID,
+                                  f"kernel {fn.name} has no oracle: "
+                                  f"{REF} is missing/unparsable")
+                    continue
+                if oracle not in ref_names:
+                    yield Finding(
+                        rel, fn.lineno, fn.col_offset, _ID,
+                        f"kernel entry point {fn.name} has no "
+                        f"reference oracle ref.{oracle}: an "
+                        "unverifiable fast path (add the pure-jnp twin "
+                        "or suppress with a reason if it is a shared "
+                        "helper)")
+                    continue
+                paired = any(fn.name in plain and oracle in orc
+                             for plain, orc in corpus)
+                if not paired:
+                    where = " or ".join(TEST_FILES)
+                    extra = (" (test file(s) missing: "
+                             + ", ".join(missing_tests) + ")"
+                             if missing_tests else "")
+                    yield Finding(
+                        rel, fn.lineno, fn.col_offset, _ID,
+                        f"no test in {where} names both {fn.name} and "
+                        f"ref.{oracle} in one test body: the kernel is "
+                        f"not pinned against its oracle{extra}")

@@ -1,0 +1,193 @@
+"""ledger-completeness: the conservation contract is closed (check 4).
+
+``admitted + offloaded + rejected + failed == arrivals`` is only as
+strong as the bookkeeping around it. The outcome vocabulary lives in
+``src/repro/control/admission.py`` (module-level ``NAME = "name"``
+string constants); the ledger and its enforcement live in
+``src/repro/control/plane.py``; the failed-aware percentile handling
+lives in ``benchmarks/common.py``. Those three files must stay in sync
+by hand — precisely the kind of cross-file drift a reviewer misses, so
+this check walks all three ASTs and enforces:
+
+* every outcome constant is a key of ``ControlPlane``'s
+  ``self.outcomes = {...}`` ledger (a bucket nobody tallies is a
+  conservation hole);
+* every ledger key is a declared outcome constant (no ad-hoc string
+  buckets that bypass the vocabulary);
+* ``check_conservation`` references every outcome constant — adding an
+  outcome without extending the enforcement is the exact "next PR
+  silently breaks the ledger" failure this check exists for;
+* every outcome that ``mark_failed`` reclassifies INTO (the terminal
+  loss bucket) appears, by string value, in ``benchmarks/common.py`` —
+  otherwise failed work vanishes from the reported percentiles and a
+  policy that loses half its traffic still prints a pristine P99.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Iterator, Optional
+
+from tools.laimr_lint.checks import ProjectCheck, register
+from tools.laimr_lint.findings import Finding
+
+_ID = "ledger-completeness"
+
+ADMISSION = "src/repro/control/admission.py"
+PLANE = "src/repro/control/plane.py"
+COMMON = "benchmarks/common.py"
+
+
+def _parse(root: Path, rel: str) -> Optional[ast.Module]:
+    p = root / rel
+    if not p.is_file():
+        return None
+    try:
+        return ast.parse(p.read_text(), filename=str(p))
+    except SyntaxError:
+        return None     # parse-error is reported by the per-file pass
+
+
+def _outcome_constants(mod: ast.Module) -> dict[str, tuple[str, int]]:
+    """Module-level ``UPPER = "string"`` assignments: name -> (value,
+    line)."""
+    out = {}
+    for stmt in mod.body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name) \
+                and stmt.targets[0].id.isupper() \
+                and isinstance(stmt.value, ast.Constant) \
+                and isinstance(stmt.value.value, str):
+            out[stmt.targets[0].id] = (stmt.value.value, stmt.lineno)
+    return out
+
+
+def _find_def(mod: ast.Module, name: str) -> Optional[ast.FunctionDef]:
+    for node in ast.walk(mod):
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+def _names_in(node: ast.AST) -> set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _outcomes_dict(mod: ast.Module) -> Optional[ast.Dict]:
+    """The ``self.outcomes = {...}`` ledger literal, wherever it is."""
+    for node in ast.walk(mod):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Dict):
+            for t in node.targets:
+                if isinstance(t, ast.Attribute) and t.attr == "outcomes":
+                    return node.value
+    return None
+
+
+def _failed_buckets(fn: ast.FunctionDef) -> set[str]:
+    """Constants ``mark_failed`` increments: ``self.outcomes[X] += n``."""
+    out = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.AugAssign) and isinstance(node.op, ast.Add) \
+                and isinstance(node.target, ast.Subscript):
+            sub = node.target
+            if isinstance(sub.value, ast.Attribute) \
+                    and sub.value.attr == "outcomes" \
+                    and isinstance(sub.slice, ast.Name):
+                out.add(sub.slice.id)
+    return out
+
+
+def _string_constants(mod: ast.Module) -> set[str]:
+    return {n.value for n in ast.walk(mod)
+            if isinstance(n, ast.Constant) and isinstance(n.value, str)}
+
+
+@register
+class LedgerCompleteness(ProjectCheck):
+    id = _ID
+    description = ("cross-file conservation contract: every outcome "
+                   "constant in control/admission.py is ledgered in "
+                   "plane.ControlPlane.outcomes, enforced by "
+                   "check_conservation, and (for failure buckets) "
+                   "handled by benchmarks/common.py percentiles")
+
+    def run_project(self, root: Path) -> Iterator[Finding]:
+        admission = _parse(root, ADMISSION)
+        if admission is None:
+            return      # contract files absent: check not applicable
+        constants = _outcome_constants(admission)
+        if not constants:
+            yield Finding(ADMISSION, 1, 0, _ID,
+                          "no outcome constants (UPPER = \"str\") found "
+                          "— the conservation vocabulary is gone")
+            return
+        plane = _parse(root, PLANE)
+        if plane is None:
+            yield Finding(ADMISSION, 1, 0, _ID,
+                          f"{PLANE} missing/unparsable: outcome "
+                          "constants have no ledger to land in")
+            return
+
+        ledger = _outcomes_dict(plane)
+        if ledger is None:
+            yield Finding(PLANE, 1, 0, _ID,
+                          "no `self.outcomes = {...}` ledger literal "
+                          "found in the control plane")
+            ledger_keys: set[str] = set()
+        else:
+            ledger_keys = {k.id for k in ledger.keys
+                           if isinstance(k, ast.Name)}
+            for name, (_, line) in constants.items():
+                if name not in ledger_keys:
+                    yield Finding(
+                        PLANE, ledger.lineno, ledger.col_offset, _ID,
+                        f"outcome constant {name} (declared "
+                        f"{ADMISSION}:{line}) is not a key of the "
+                        "self.outcomes ledger: its tally would be "
+                        "dropped from conservation")
+            for key in sorted(ledger_keys - set(constants)):
+                yield Finding(
+                    PLANE, ledger.lineno, ledger.col_offset, _ID,
+                    f"ledger key {key} is not an outcome constant "
+                    f"declared in {ADMISSION}: ad-hoc buckets bypass "
+                    "the outcome vocabulary")
+
+        cons = _find_def(plane, "check_conservation")
+        if cons is None:
+            yield Finding(PLANE, 1, 0, _ID,
+                          "check_conservation is missing: the "
+                          "conservation contract is unenforced")
+        else:
+            seen = _names_in(cons)
+            for name, (_, line) in constants.items():
+                if name not in seen:
+                    yield Finding(
+                        PLANE, cons.lineno, cons.col_offset, _ID,
+                        f"outcome constant {name} (declared "
+                        f"{ADMISSION}:{line}) is never referenced by "
+                        "check_conservation: the ledger can drift in "
+                        "that bucket without tripping the contract")
+
+        mark = _find_def(plane, "mark_failed")
+        common = _parse(root, COMMON)
+        if mark is not None:
+            loss_values = sorted(
+                constants[n][0] for n in _failed_buckets(mark)
+                if n in constants)
+            if common is None:
+                if loss_values:
+                    yield Finding(
+                        PLANE, mark.lineno, mark.col_offset, _ID,
+                        f"{COMMON} missing/unparsable: failure "
+                        f"bucket(s) {loss_values} have no failed-aware "
+                        "percentile handling")
+            else:
+                strings = _string_constants(common)
+                for v in loss_values:
+                    if v not in strings:
+                        yield Finding(
+                            COMMON, 1, 0, _ID,
+                            f"terminal loss bucket '{v}' (incremented "
+                            "by ControlPlane.mark_failed) is never "
+                            f"mentioned in {COMMON}: failed work would "
+                            "vanish from reported percentiles")

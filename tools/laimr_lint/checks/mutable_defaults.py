@@ -1,0 +1,97 @@
+"""mutable-default: no shared mutable default values (check 3).
+
+The PR-2 bug class, mechanised. ``ClusterSimulator.__init__`` once took
+``config: SimConfig = SimConfig()`` — ONE config instance shared by
+every simulator constructed without an explicit config, so a test that
+mutated it leaked state into every later run. Python's classic
+``def f(x=[])`` is the same trap; dataclasses reject ``list``/``dict``/
+``set`` field defaults at runtime but happily accept any *other*
+mutable instance (``cfg: SimConfig = SimConfig()``), which is exactly
+the PR-2 shape.
+
+Flagged, in any ``def`` default or ``@dataclass`` field default:
+
+* mutable literals/comprehensions (``[]``, ``{}``, set/dict/list comps);
+* calls — constructing ANY object in a default shares it across calls
+  or instances — except a small allowlist of immutable factories
+  (``tuple``/``frozenset``/numbers/strings) and ``dataclasses.field``
+  (whose ``default_factory`` is the correct fix).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.laimr_lint.checks import FileCheck, dotted_name, register
+from tools.laimr_lint.findings import Finding
+
+_ID = "mutable-default"
+
+_MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                     ast.DictComp, ast.SetComp, ast.GeneratorExp)
+# calls whose results are immutable (or, for field(), the sanctioned
+# per-instance factory mechanism)
+_IMMUTABLE_FACTORIES = {"tuple", "frozenset", "int", "float", "bool",
+                        "str", "bytes", "complex", "field"}
+
+
+def _flag(node: ast.AST) -> str | None:
+    """Reason string when ``node`` is a shared-mutable default."""
+    if isinstance(node, _MUTABLE_LITERALS):
+        return "mutable literal"
+    if isinstance(node, ast.Call):
+        name = dotted_name(node.func)
+        if name.split(".")[-1] in _IMMUTABLE_FACTORIES:
+            return None
+        return f"call to {name or '<expression>'}()"
+    return None
+
+
+def _is_dataclass_decorated(cls: ast.ClassDef) -> bool:
+    for dec in cls.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if dotted_name(target).split(".")[-1] == "dataclass":
+            return True
+    return False
+
+
+@register
+class MutableDefault(FileCheck):
+    id = _ID
+    description = ("no mutable default arguments on def/dataclass "
+                   "fields (the PR-2 shared-SimConfig bug class); use "
+                   "None or dataclasses.field(default_factory=...)")
+
+    def run_file(self, rel: str, tree: ast.AST,
+                 source: str) -> Iterator[Finding]:
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defaults = list(node.args.defaults) + \
+                    [d for d in node.args.kw_defaults if d is not None]
+                for d in defaults:
+                    why = _flag(d)
+                    if why:
+                        yield Finding(
+                            rel, d.lineno, d.col_offset, _ID,
+                            f"{why} as default of {node.name}(): one "
+                            "instance is shared across every call — "
+                            "default to None (or field(default_factory"
+                            "=...)) and construct per call")
+            elif isinstance(node, ast.ClassDef) \
+                    and _is_dataclass_decorated(node):
+                for stmt in node.body:
+                    value = None
+                    if isinstance(stmt, ast.AnnAssign):
+                        value = stmt.value
+                    elif isinstance(stmt, ast.Assign):
+                        value = stmt.value
+                    if value is None:
+                        continue
+                    why = _flag(value)
+                    if why:
+                        yield Finding(
+                            rel, value.lineno, value.col_offset, _ID,
+                            f"{why} as dataclass field default in "
+                            f"{node.name}: shared by every instance "
+                            "(dataclasses only reject list/dict/set) — "
+                            "use field(default_factory=...)")

@@ -1,0 +1,87 @@
+"""rng-discipline: seeded, threaded RNG streams only (ISSUE 7 check 1).
+
+Every golden-trace digest in ``tests/test_sim_golden.py`` — and every
+chaos-wall determinism property in ``tests/test_faults.py`` — holds only
+because simulation randomness flows from ``SimConfig.seed`` through
+explicitly threaded ``np.random.Generator`` objects. Two authoring
+mistakes silently break that:
+
+* the legacy module-level API (``np.random.rand/seed/normal/...``)
+  draws from one hidden global stream, so any new call site perturbs
+  every digest downstream of it;
+* ``np.random.default_rng()`` with no seed gives OS entropy — a fresh
+  trace per run, undiagnosable golden-test flakes.
+
+This check forbids both anywhere in scope: the only legal constructor
+is ``default_rng(<seed expression>)``, and generators must otherwise
+arrive as parameters (``rng: np.random.Generator``) or be derived from
+a config seed. Type references (``np.random.Generator`` annotations)
+are untouched — only *calls* are examined.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.laimr_lint.checks import FileCheck, dotted_name, register
+from tools.laimr_lint.findings import Finding
+
+_ID = "rng-discipline"
+
+
+def _has_seed(call: ast.Call) -> bool:
+    """default_rng(...) counts as seeded when any argument is passed
+    (positional seed / SeedSequence / keyword ``seed=``)."""
+    return bool(call.args) or any(kw.arg == "seed" for kw in call.keywords)
+
+
+@register
+class RngDiscipline(FileCheck):
+    id = _ID
+    description = ("no module-level np.random.* calls, no unseeded "
+                   "default_rng(): RNG streams must be seeded and "
+                   "threaded (golden-digest determinism)")
+
+    def applies(self, rel: str) -> bool:
+        return rel.startswith("src/")
+
+    def run_file(self, rel: str, tree: ast.AST,
+                 source: str) -> Iterator[Finding]:
+        # local aliases of numpy.random.default_rng pulled in by
+        # ``from numpy.random import default_rng [as name]``
+        rng_aliases: set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom) \
+                    and node.module == "numpy.random":
+                for a in node.names:
+                    if a.name == "default_rng":
+                        rng_aliases.add(a.asname or a.name)
+                    else:
+                        yield Finding(
+                            rel, node.lineno, node.col_offset, _ID,
+                            f"import of numpy.random.{a.name}: the "
+                            "module-level RNG API draws from a hidden "
+                            "global stream; thread a seeded "
+                            "np.random.Generator instead")
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name in rng_aliases or name.endswith(".default_rng"):
+                tail = name.split(".")
+                if len(tail) >= 3 and tail[-2] != "random":
+                    continue    # some_other.thing.default_rng: not numpy's
+                if not _has_seed(node):
+                    yield Finding(
+                        rel, node.lineno, node.col_offset, _ID,
+                        "unseeded default_rng(): draws OS entropy, so "
+                        "every run produces a fresh trace — pass a seed "
+                        "derived from the config (e.g. "
+                        "default_rng(config.seed))")
+            elif ".random." in f".{name}." and \
+                    name.split(".random.")[0] in ("np", "numpy"):
+                yield Finding(
+                    rel, node.lineno, node.col_offset, _ID,
+                    f"call to {name}: module-level np.random API uses "
+                    "the hidden global stream and breaks golden-digest "
+                    "determinism; use a threaded, seeded "
+                    "np.random.Generator")

@@ -1,0 +1,76 @@
+"""sim-time-purity: no wall clock inside simulated physics (check 2).
+
+The discrete-event simulator and the shared control plane advance a
+*simulated* clock (``t_now`` threaded through every call). A stray
+``time.time()`` / ``perf_counter()`` / ``datetime.now()`` couples
+decisions to the host's wall clock: results stop being a pure function
+of (arrival trace, seed, config), and every golden digest and chaos
+determinism property silently degrades to "usually passes".
+
+Scope: ``src/repro/core/`` and ``src/repro/control/`` — the modules
+whose outputs are digest-pinned. The wall clock is legitimate in
+benchmark harnesses and the launch dry-runner (they measure *real*
+elapsed time), so ``benchmarks/`` and ``src/repro/launch/dryrun.py``
+are allowlisted should the scope ever widen to cover them.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.laimr_lint.checks import FileCheck, dotted_name, register
+from tools.laimr_lint.findings import Finding
+
+_ID = "sim-time-purity"
+
+SCOPES = ("src/repro/core/", "src/repro/control/")
+ALLOWLIST = ("src/repro/launch/dryrun.py", "benchmarks/")
+
+# functions of the ``time`` module that read a host clock
+_TIME_FNS = {"time", "time_ns", "monotonic", "monotonic_ns",
+             "perf_counter", "perf_counter_ns", "process_time",
+             "process_time_ns"}
+# zero-arg-ish constructors on datetime/date that read the host clock
+_DATETIME_FNS = {"now", "utcnow", "today"}
+
+
+@register
+class SimTimePurity(FileCheck):
+    id = _ID
+    description = ("time.time/perf_counter/datetime.now forbidden in "
+                   "src/repro/core and src/repro/control: simulated "
+                   "physics must be a pure function of (trace, seed, "
+                   "config)")
+
+    def applies(self, rel: str) -> bool:
+        if any(rel == a or rel.startswith(a) for a in ALLOWLIST):
+            return False
+        return any(rel.startswith(s) for s in SCOPES)
+
+    def run_file(self, rel: str, tree: ast.AST,
+                 source: str) -> Iterator[Finding]:
+        # names imported straight off the time module:
+        # ``from time import perf_counter [as pc]``
+        clock_aliases: set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom) and node.module == "time":
+                for a in node.names:
+                    if a.name in _TIME_FNS:
+                        clock_aliases.add(a.asname or a.name)
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            parts = name.split(".")
+            wall = (
+                name in clock_aliases
+                or (len(parts) >= 2 and parts[-2] == "time"
+                    and parts[-1] in _TIME_FNS)
+                or (len(parts) >= 2 and parts[-2] in ("datetime", "date")
+                    and parts[-1] in _DATETIME_FNS)
+            )
+            if wall:
+                yield Finding(
+                    rel, node.lineno, node.col_offset, _ID,
+                    f"wall-clock call {name}() in simulated-physics "
+                    "code: use the threaded simulation clock (t_now) — "
+                    "host time makes runs irreproducible")

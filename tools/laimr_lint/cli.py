@@ -1,0 +1,115 @@
+"""``python -m tools.laimr_lint [paths...]`` — the repo invariant wall.
+
+Exit 0 when clean, 1 on findings, 2 on usage errors. Output formats:
+
+* ``text`` (default) — one machine-greppable line per finding,
+  ``path:line:col: check-id: message``;
+* ``json``   — ``{"findings": [...], "suppressed": [...], ...}``;
+* ``github`` — a markdown table for CI job summaries.
+
+When ``$GITHUB_STEP_SUMMARY`` is set the markdown rendering is ALSO
+appended there automatically, so the CI lint job gets a human-readable
+summary without piping tricks.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from tools.laimr_lint.engine import Linter, LintResult
+
+
+def _render_text(res: LintResult) -> str:
+    lines = [f.render() for f in res.findings]
+    lines.append(f"laimr-lint: {len(res.findings)} finding(s), "
+                 f"{len(res.suppressed)} suppressed, "
+                 f"{res.files_checked} file(s) checked")
+    return "\n".join(lines)
+
+
+def _render_json(res: LintResult) -> str:
+    def enc(f):
+        return {"path": f.path, "line": f.line, "col": f.col,
+                "check": f.check, "message": f.message}
+    return json.dumps({
+        "findings": [enc(f) for f in res.findings],
+        "suppressed": [enc(f) for f in res.suppressed],
+        "files_checked": res.files_checked,
+    }, indent=2)
+
+
+def _render_github(res: LintResult) -> str:
+    out = ["## laimr-lint", ""]
+    if res.findings:
+        out += [f"**{len(res.findings)} finding(s)** "
+                f"({res.files_checked} files checked, "
+                f"{len(res.suppressed)} suppressed):", "",
+                "| location | check | message |",
+                "| --- | --- | --- |"]
+        for f in res.findings:
+            msg = f.message.replace("|", "\\|")
+            out.append(f"| `{f.path}:{f.line}` | `{f.check}` | {msg} |")
+    else:
+        out.append(f"clean — {res.files_checked} files checked, "
+                    f"{len(res.suppressed)} suppression(s) in effect")
+    return "\n".join(out)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="laimr-lint",
+        description="AST invariant checker for the LA-IMR repo: "
+                    "determinism, conservation and kernel-oracle "
+                    "contracts as machine-enforced checks.")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files/dirs to lint, relative to --root "
+                         "(default: src)")
+    ap.add_argument("--root", default=".",
+                    help="project root the cross-file contracts anchor "
+                         "at (default: cwd)")
+    ap.add_argument("--format", choices=("text", "json", "github"),
+                    default="text")
+    ap.add_argument("--select", metavar="IDS",
+                    help="comma-separated check ids to run (default: "
+                         "all)")
+    ap.add_argument("--list-checks", action="store_true",
+                    help="print registered checks and exit")
+    args = ap.parse_args(argv)
+
+    try:
+        linter = Linter(args.root,
+                        select=args.select.split(",") if args.select
+                        else None)
+    except ValueError as e:
+        print(f"laimr-lint: {e}", file=sys.stderr)
+        return 2
+
+    if args.list_checks:
+        from tools.laimr_lint.checks import REGISTRY
+        for cid in sorted(REGISTRY):
+            print(f"{cid}: {REGISTRY[cid].description}")
+        return 0
+
+    paths = args.paths or ["src"]
+    missing = [p for p in paths
+               if not os.path.exists(os.path.join(args.root, p))]
+    if missing:
+        print(f"laimr-lint: no such path(s): {', '.join(missing)}",
+              file=sys.stderr)
+        return 2
+
+    res = linter.run(paths)
+    render = {"text": _render_text, "json": _render_json,
+              "github": _render_github}[args.format]
+    print(render(res))
+
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary and args.format != "github":
+        try:
+            with open(summary, "a") as fh:
+                fh.write(_render_github(res) + "\n")
+        except OSError:
+            pass    # a broken summary sink must not mask lint status
+    return res.exit_code

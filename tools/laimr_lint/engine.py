@@ -1,0 +1,170 @@
+"""Lint engine: file collection, check dispatch, suppression filtering.
+
+The engine is deliberately dependency-free (stdlib ``ast`` only) so the
+CI lint job can run it before any toolchain install, and so it works on
+the bare container. Paths are resolved relative to a single *lint root*
+(default: the current directory) — per-file checks scope themselves by
+root-relative path, and cross-file :class:`ProjectCheck` passes anchor
+their contract files at the same root, which is how the fixture trees
+under ``tests/lint_fixtures/`` exercise them in miniature.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Iterable, Optional
+
+from tools.laimr_lint import checks as checks_pkg
+from tools.laimr_lint.checks import FileCheck, ProjectCheck
+from tools.laimr_lint.findings import (BAD_SUPPRESSION, PARSE_ERROR, Finding,
+                                       parse_suppressions)
+
+# directory names never descended into during collection (an explicitly
+# given path is always honoured, so the fixture self-tests can still
+# point the engine straight at tests/lint_fixtures/<case>)
+EXCLUDED_DIRS = {"__pycache__", ".git", ".github", "lint_fixtures",
+                 "results", ".claude"}
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: list[Finding]
+    suppressed: list[Finding]
+    files_checked: int
+
+    @property
+    def exit_code(self) -> int:
+        return 1 if self.findings else 0
+
+
+def _collect(root: Path, paths: Iterable[str]) -> list[Path]:
+    out: list[Path] = []
+    for p in paths:
+        path = (root / p) if not Path(p).is_absolute() else Path(p)
+        if path.is_file() and path.suffix == ".py":
+            out.append(path)
+        elif path.is_dir():
+            for f in sorted(path.rglob("*.py")):
+                if not any(part in EXCLUDED_DIRS
+                           for part in f.relative_to(path).parts[:-1]):
+                    out.append(f)
+    # de-dup while preserving order
+    seen: set[Path] = set()
+    uniq = []
+    for f in out:
+        if f not in seen:
+            seen.add(f)
+            uniq.append(f)
+    return uniq
+
+
+def _rel(root: Path, path: Path) -> str:
+    try:
+        return path.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        return path.as_posix()
+
+
+class Linter:
+    """One lint run: ``Linter(root).run(paths)`` -> :class:`LintResult`."""
+
+    def __init__(self, root: str | Path = ".",
+                 select: Optional[Iterable[str]] = None):
+        checks_pkg.load_all()
+        self.root = Path(root)
+        registry = checks_pkg.REGISTRY
+        if select is not None:
+            wanted = set(select)
+            unknown = wanted - set(registry)
+            if unknown:
+                raise ValueError(
+                    f"unknown check id(s): {', '.join(sorted(unknown))} "
+                    f"(known: {', '.join(sorted(registry))})")
+            registry = {k: v for k, v in registry.items() if k in wanted}
+        self.file_checks = [c for c in registry.values()
+                            if isinstance(c, FileCheck)]
+        self.project_checks = [c for c in registry.values()
+                               if isinstance(c, ProjectCheck)]
+        self.known_ids = set(checks_pkg.REGISTRY) | {BAD_SUPPRESSION,
+                                                     PARSE_ERROR}
+
+    # -------------------------------------------------------------- #
+    def run(self, paths: Iterable[str]) -> LintResult:
+        files = _collect(self.root, paths)
+        raw: list[Finding] = []
+        sources: dict[str, str] = {}
+        for f in files:
+            rel = _rel(self.root, f)
+            try:
+                source = f.read_text()
+            except OSError as e:
+                raw.append(Finding(rel, 1, 0, PARSE_ERROR,
+                                   f"unreadable: {e}"))
+                continue
+            sources[rel] = source
+            try:
+                tree = ast.parse(source, filename=str(f))
+            except SyntaxError as e:
+                raw.append(Finding(rel, e.lineno or 1, e.offset or 0,
+                                   PARSE_ERROR, f"syntax error: {e.msg}"))
+                continue
+            for check in self.file_checks:
+                if check.applies(rel):
+                    raw.extend(check.run_file(rel, tree, source))
+        for check in self.project_checks:
+            raw.extend(check.run_project(self.root))
+        return self._apply_suppressions(raw, sources, len(files))
+
+    # -------------------------------------------------------------- #
+    def _suppressions_for(self, rel: str,
+                          sources: dict[str, str]) -> dict[int, dict]:
+        """line -> {checks, reason} for ``rel``, loading the file lazily
+        (project checks may attribute findings to files outside the
+        collected set)."""
+        if rel not in sources:
+            p = self.root / rel
+            try:
+                sources[rel] = p.read_text()
+            except OSError:
+                sources[rel] = ""
+        return {s.line: {"checks": set(s.checks), "reason": s.reason}
+                for s in parse_suppressions(sources[rel])}
+
+    def _apply_suppressions(self, raw: list[Finding],
+                            sources: dict[str, str],
+                            n_files: int) -> LintResult:
+        by_file: dict[str, dict[int, dict]] = {}
+        findings: list[Finding] = []
+        suppressed: list[Finding] = []
+        for f in raw:
+            if f.path not in by_file:
+                by_file[f.path] = self._suppressions_for(f.path, sources)
+            sup = by_file[f.path].get(f.line)
+            if sup and f.check in sup["checks"] and sup["reason"]:
+                suppressed.append(f)
+            else:
+                findings.append(f)
+        # suppression hygiene on every file we actually read: a
+        # suppression without a justification, or naming an unknown
+        # check id, is itself a finding.
+        for rel in sorted(sources):
+            if rel not in by_file:
+                by_file[rel] = self._suppressions_for(rel, sources)
+            for line, sup in sorted(by_file[rel].items()):
+                if not sup["reason"]:
+                    findings.append(Finding(
+                        rel, line, 0, BAD_SUPPRESSION,
+                        "suppression without justification: write "
+                        "`# laimr-lint: disable=<check> -- <reason>` — "
+                        "the reason clause is mandatory"))
+                unknown = sup["checks"] - self.known_ids
+                if unknown:
+                    findings.append(Finding(
+                        rel, line, 0, BAD_SUPPRESSION,
+                        "suppression names unknown check id(s) "
+                        f"{', '.join(sorted(unknown))}: it protects "
+                        "nothing (typo?)"))
+        findings.sort(key=lambda f: (f.path, f.line, f.col, f.check))
+        suppressed.sort(key=lambda f: (f.path, f.line, f.col, f.check))
+        return LintResult(findings, suppressed, n_files)

@@ -1,0 +1,64 @@
+"""Finding records and the inline-suppression grammar.
+
+A finding pins one invariant violation to ``file:line:col`` plus a
+stable check id, so both humans and CI can consume the output. The
+suppression grammar is deliberately strict::
+
+    # laimr-lint: disable=<check-id>[,<check-id>...] -- <justification>
+
+The ``-- <justification>`` clause is REQUIRED: a suppression exists to
+record *why* an invariant does not apply at this line, and an
+unexplained one is itself reported (check id ``bad-suppression``).
+Unknown check ids in a suppression are reported too — a typo'd
+suppression silently protecting nothing is worse than none.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+SUPPRESS_RE = re.compile(
+    r"#\s*laimr-lint:\s*disable=([A-Za-z0-9_,-]+)"
+    r"(?:\s*--\s*(?P<reason>.*\S))?\s*$")
+
+# meta check ids emitted by the engine itself (not pluggable)
+BAD_SUPPRESSION = "bad-suppression"
+PARSE_ERROR = "parse-error"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One violation: machine-readable location + check id + message."""
+
+    path: str       # path relative to the lint root (posix separators)
+    line: int       # 1-based
+    col: int        # 0-based, ast convention
+    check: str      # stable check id, e.g. "rng-discipline"
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.check}: " \
+               f"{self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    """A parsed ``# laimr-lint: disable=...`` comment."""
+
+    line: int
+    checks: tuple[str, ...]
+    reason: Optional[str]   # None when the justification clause is missing
+
+
+def parse_suppressions(source: str) -> list[Suppression]:
+    """Extract every suppression comment in ``source`` (line-scoped: a
+    suppression applies to findings reported on its own line)."""
+    out = []
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = SUPPRESS_RE.search(text)
+        if m:
+            checks = tuple(c.strip() for c in m.group(1).split(",")
+                           if c.strip())
+            out.append(Suppression(i, checks, m.group("reason")))
+    return out
