@@ -59,6 +59,8 @@ from repro.core.workload import mixed_traffic
 
 SLO = 1.8
 POLICIES = ("route_best", "guarded_alg1", "safetail", "reliable")
+# policies the chunked JAX twin models (repro.core.jaxsim scope)
+JAX_POLICIES = ("route_best", "guarded_alg1")
 WINDOWS = (0.05, 0.2)
 SMOKE_WINDOWS = (0.1,)
 PODS = (1, 2, 4)
@@ -68,16 +70,37 @@ SMOKE_PODS = (1, 2)
 def run_cell(arrivals: list, policy: str, window: float, seed: int,
              pods: int = 1, redundancy: int = 2, cluster=None,
              label: str = "", slo: float = SLO,
-             faults: FaultPlan = None) -> dict:
+             faults: FaultPlan = None, backend: str = "event") -> dict:
     faults = faults if faults is not None else FaultPlan()
     sim = ClusterSimulator(
         cluster if cluster is not None else experiment_cluster(),
         SimConfig(mode="laimr", seed=seed, slo=slo, jitter_sigma=0.2,
                   admission_window=window, policy=policy,
                   redundancy=redundancy, pods_per_deployment=pods,
-                  faults=faults))
+                  faults=faults, backend=backend))
     res = sim.run(arrivals, horizon=None)
     n_arr = len(arrivals)
+    if backend == "jax":
+        # The chunked twin has no control-plane ledger (routing happens
+        # inside the scan); conservation is SimResult-count based: one
+        # latency sample per arrival, none failed (empty FaultPlan).
+        where = label or f"{policy}@{window}/pods={pods}/jax"
+        if res.n_arrivals != n_arr or res.failed_count() != 0:
+            raise SystemExit(
+                f"policy matrix BROKE CONSERVATION: {where}: "
+                f"{res.n_arrivals} samples ({res.failed_count()} failed) "
+                f"!= {n_arr} arrivals")
+        s = res.summary()
+        return {
+            "n": int(s["n"]) if s["n"] == s["n"] else 0,
+            "p50": s["p50"], "p99": s["p99"],
+            "offload_rate": res.offload_fast / n_arr,
+            "duplicate_rate": 0.0, "dup_cancelled": 0, "flushes": 0,
+            "pods_booted": res.pods_booted,
+            "pods_drained": res.pods_drained,
+            "slo_attain": res.slo_attainment(slo),
+            **res.fault_counts(),
+        }
     # generalised conservation, enforced per cell (now per pod count too;
     # under fault injection FAILED is a terminal outcome, so the invariant
     # is completed + failed == arrivals — with no faults failed must be 0
@@ -222,9 +245,18 @@ def faults_main(print_csv: bool = True, smoke: bool = False,
 
 
 def main(print_csv: bool = True, smoke: bool = False, policies=None,
-         windows=None, pods=None, seed: int = 7) -> dict:
+         windows=None, pods=None, seed: int = 7,
+         backend: str = "event") -> dict:
     horizon = 60.0 if smoke else 240.0
     pols = tuple(policies) if policies is not None else POLICIES
+    if backend == "jax":
+        # the chunked twin models route_best/guarded_alg1 only (no
+        # redundant dispatch) — see repro.core.jaxsim scope
+        dropped = [p for p in pols if p not in JAX_POLICIES]
+        pols = tuple(p for p in pols if p in JAX_POLICIES)
+        if dropped and print_csv:
+            print(f"# backend=jax: skipping unsupported policies "
+                  f"{','.join(dropped)}")
     widths = tuple(windows) if windows is not None else \
         (SMOKE_WINDOWS if smoke else WINDOWS)
     pod_counts = tuple(pods) if pods is not None else \
@@ -234,18 +266,20 @@ def main(print_csv: bool = True, smoke: bool = False, policies=None,
     rows = []
     if print_csv:
         print("# policy x burst scenario x admission-window width x "
-              "pods (laimr, unified control plane; conservation "
-              "enforced per cell)")
+              f"pods (laimr, unified control plane, backend={backend}; "
+              "conservation enforced per cell)")
         print("policy,scenario,window_s,pods,n,p50_s,p99_s,offload_rate,"
               "duplicate_rate,flushes")
     for pol in pols:
         for name, arr in traces.items():
             for w in widths:
                 for np_ in pod_counts:
-                    row = run_cell(arr, pol, w, seed, pods=np_)
+                    row = run_cell(arr, pol, w, seed, pods=np_,
+                                   backend=backend)
                     out[(pol, name, w, np_)] = row
                     rows.append({"policy": pol, "scenario": name,
-                                 "window": w, "pods": np_, **row})
+                                 "window": w, "pods": np_,
+                                 "backend": backend, **row})
                     if not finite_row(
                             row,
                             f"policy_matrix:{pol}:{name}@{w}/p{np_}"):
@@ -267,7 +301,7 @@ def main(print_csv: bool = True, smoke: bool = False, policies=None,
               f"cell")
     write_bench_json("policy_matrix", {
         "slo": SLO, "seed": seed, "horizon": horizon, "smoke": smoke,
-        "pod_counts": list(pod_counts), "rows": rows})
+        "backend": backend, "pod_counts": list(pod_counts), "rows": rows})
     return out
 
 
@@ -281,6 +315,11 @@ if __name__ == "__main__":
                     help="comma-separated window widths in seconds")
     ap.add_argument("--pods", default=None,
                     help="comma-separated pods_per_deployment counts")
+    ap.add_argument("--backend", default="event",
+                    choices=("event", "jax"),
+                    help="simulator backend for the main matrix "
+                         "(jax = chunked lax.scan twin, "
+                         "route_best/guarded_alg1 only)")
     ap.add_argument("--faults", action="store_true",
                     help="run the chaos matrix (policy x fault plan) "
                          "instead of the burst/window/pods matrix")
@@ -289,6 +328,9 @@ if __name__ == "__main__":
     pol_arg = [p.strip() for p in args.policies.split(",")] \
         if args.policies else None
     if args.faults:
+        if args.backend != "event":
+            raise SystemExit("--faults requires --backend event (the "
+                             "jax twin refuses fault plans)")
         faults_main(smoke=args.smoke, policies=pol_arg, seed=args.seed)
     else:
         main(smoke=args.smoke, policies=pol_arg,
@@ -296,4 +338,4 @@ if __name__ == "__main__":
              if args.windows else None,
              pods=[int(p) for p in args.pods.split(",")]
              if args.pods else None,
-             seed=args.seed)
+             seed=args.seed, backend=args.backend)

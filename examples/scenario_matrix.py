@@ -19,6 +19,12 @@ first-fit spillover, pod-granular scale-out boot lag, emptiest-pod
 drain — compare against the default monolithic pools to see how pod
 granularity reshapes the tail.
 
+``--backend jax`` (ISSUE 8) runs the laimr rows through the chunked
+``lax.scan`` twin (:mod:`repro.core.jaxsim`) instead of the event loop —
+distribution-pinned, ~50x faster at fleet scale; the baseline rows stay
+on the event loop (the twin models the laimr controller only). Not
+combinable with ``--faults`` or redundant policies.
+
 ``--faults`` (ISSUE 6) injects a demo chaos plan into every run of BOTH
 controller modes — the home deployment's pod crashes a third of the way
 in (replacement boots after the startup delay), an edge pod straggles
@@ -110,6 +116,11 @@ def main() -> None:
     ap.add_argument("--pods", type=int, default=1,
                     help="pods per deployment (1 = legacy monolithic "
                          "pool; >1 = pod-level fleet physics)")
+    ap.add_argument("--backend", default="event",
+                    choices=("event", "jax"),
+                    help="laimr-row simulator backend (jax = chunked "
+                         "lax.scan twin; baseline rows always run the "
+                         "event loop)")
     ap.add_argument("--faults", action="store_true",
                     help="inject the demo chaos plan (crash + straggler "
                          "+ lossy uplink) into both controller modes")
@@ -118,9 +129,13 @@ def main() -> None:
                          "(reporting only; routing is unchanged)")
     args = ap.parse_args()
 
+    if args.backend == "jax" and args.faults:
+        raise SystemExit("--backend jax refuses fault plans "
+                         "(repro.core.jaxsim scope)")
     lane = args.policy if args.window > 0 else "scalar alg1"
     print(f"# laimr mode: {lane} (window={args.window}, "
-          f"pods={args.pods}, faults={'on' if args.faults else 'off'})")
+          f"pods={args.pods}, backend={args.backend}, "
+          f"faults={'on' if args.faults else 'off'})")
     header = (f"{'scenario':<9} {'n':>6}  "
               f"{'laimr p50/p99':>16}  {'base p50/p99':>16}  "
               f"{'offl':>5}  {'p99 delta':>9}")
@@ -140,7 +155,9 @@ def main() -> None:
                           admission_window=args.window,
                           policy=args.policy,
                           pods_per_deployment=args.pods,
-                          faults=faults))
+                          faults=faults,
+                          backend=args.backend if mode == "laimr"
+                          else "event"))
             res = sim.run(trace)
             row[mode] = (res.summary(), res.offload_fast, res)
         (sl, offl, rl), (sb, _, rb) = row["laimr"], row["baseline"]

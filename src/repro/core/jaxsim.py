@@ -1,0 +1,670 @@
+"""Chunked JAX twin of the discrete-event fleet simulator (ISSUE 8).
+
+``simulate`` runs the SAME physics the event loop integrates — the
+Eq. 5 utilisation-dependent service law, the Algorithm-1 offload guard
+and fractional bulk offload, the PM-HPA inverse-model feasibility scan
+with scale-in hysteresis, boot-lagged scale enactment, first-fit pod
+admission — but as one ``lax.scan`` over fixed-width time buckets
+instead of a Python heap loop. Deployments/pods are dense ``(I, P)``
+arrays, arrivals are pre-binned ``(B, S)`` count tensors (one column
+per model stream), and each bucket's routing is one batched pass
+through the same f32 score/select semantics the control plane uses
+(``router.score_instances`` / ``select_instance_batch``; the local
+Erlang-C helper is gather-identical to ``queueing.mmc_wait`` for
+``c <= ERL_N``, just with the fixed scan shortened from 512 to the
+fleet's actual replica ceiling — the 512-step scan would dominate
+per-bucket cost).
+
+Equivalence contract (the PR-1 scalar-twin discipline, relaxed one
+level): the event loop stays the ORACLE. ``backend="event"`` is
+bit-identical to every golden digest; ``backend="jax"`` is
+DISTRIBUTION-pinned — P50/P99 and offload rates match the oracle
+within :data:`TOLERANCES` (tests/test_jaxsim.py sweeps scenario x
+policy x pods), while arrival conservation is exact: every arrival
+produces exactly one latency sample (``SimResult.latency_trace`` with
+``n_arrivals`` recording the trace size). Known, deliberate
+approximations — all covered by the declared tolerances:
+
+* telemetry (1 s sliding rates, per-arrival EWMA decay) advances per
+  bucket, not per event; within-bucket ordering is lost;
+* the fractional bulk offload (Alg. 1 line 21) rounds ``m * phi``
+  deterministically with a per-deployment carry instead of drawing a
+  uniform per request;
+* service-time jitter enters capacity as its lognormal mean
+  ``exp(sigma^2 / 2)`` during the scan; per-request draws from the
+  seeded generator are applied in the latency post-pass;
+* queueing delay is reconstructed from the scan's served-work ledger
+  (first bucket whose cumulative completions cover the jobs ahead of
+  the arrival), so a request's wait reflects the service rates of the
+  buckets it actually queued through;
+* pod scale-in marks pods draining (no new admissions, capacity runs
+  until the backlog empties) instead of respilling their queues.
+
+Scope: ``mode="laimr"``, the scalar Algorithm-1 path
+(``admission_window == 0``) and the ``route_best`` / ``guarded_alg1``
+windowed policies, empty ``FaultPlan``. Anything else raises
+``ValueError`` — the twin refuses to silently diverge from physics it
+does not model (safetail/reliable redundancy, fault injection, the
+reactive baseline autoscaler).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.catalogue import Cluster
+from repro.core.router import BIG, RouterParams, select_instance_batch
+from repro.core.workload import Arrival
+
+__all__ = ["simulate", "TOLERANCES"]
+
+# Declared distribution-equivalence tolerances vs the event-loop oracle
+# (tests/test_jaxsim.py asserts them per scenario x policy x pods cell;
+# bench_sim_throughput enforces them on the 1M-arrival flash trace).
+# Percentiles are relative, offload rate is absolute (rates live in
+# [0, 1] and the oracle's own seed-to-seed spread is a few points).
+TOLERANCES = {"p50_rel": 0.25, "p99_rel": 0.35, "offload_abs": 0.12}
+
+
+# --------------------------------------------------------------------- #
+# static (hashable) scan configuration — jit cache key
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class _Static:
+    mode: str            # "scalar" | "route_best" | "guarded_alg1"
+    multi: bool          # pods_per_deployment > 1
+    dt: float
+    window: float        # router sliding-window width [s]
+    erl_n: int           # Erlang scan length (>= every n_max)
+    n_probe: int         # PM-HPA feasibility grid size
+    ewma_alpha: float
+    rho_low: float
+    util_cap: float
+    gamma_runtime: float
+    e_jitter: float      # E[lognormal(0, sigma)] = exp(sigma^2 / 2)
+
+
+def _erlang_wait(lam: jax.Array, c: jax.Array, mu: jax.Array,
+                 n_steps: int) -> jax.Array:
+    """Expected M/M/c wait — gather-identical to ``queueing.mmc_wait``
+    (same inverse-Erlang-B recurrence, f32) for ``c <= n_steps``; the
+    scan is shortened from MAX_SERVERS=512 to the fleet's replica
+    ceiling because it runs every bucket."""
+    lam = jnp.asarray(lam, jnp.float32)
+    mu = jnp.asarray(mu, jnp.float32)
+    c = jnp.asarray(c, jnp.int32)
+    a = lam / mu
+
+    def step(invb, k):
+        invb = 1.0 + (k / a) * invb
+        return invb, invb
+
+    _, invbs = jax.lax.scan(
+        step, jnp.ones_like(a), jnp.arange(1, n_steps + 1, dtype=jnp.float32))
+    idx = jnp.clip(c - 1, 0, n_steps - 1)
+    invb_c = jnp.squeeze(
+        jnp.take_along_axis(invbs, jnp.expand_dims(idx, 0), axis=0), 0)
+    b = 1.0 / invb_c
+    c_f = jnp.asarray(c, jnp.float32)
+    rho = lam / (c_f * mu)
+    cc = b / jnp.maximum(1.0 - rho * (1.0 - b), 1e-30)
+    cc = jnp.clip(cc, 0.0, 1.0)
+    q = cc / jnp.maximum(c_f * mu - lam, 1e-12)
+    return jnp.where(rho < 1.0, q, BIG)
+
+
+# --------------------------------------------------------------------- #
+# the scan (jitted once per (shapes, _Static) combination)
+# --------------------------------------------------------------------- #
+def _scan(consts: dict, carry0: tuple, xs: tuple, st: _Static):
+    I = consts["alpha"].shape[0]  # noqa: E741 - candidate count, paper's I
+    erl = st.erl_n
+
+    def score(lam, n, rtt):
+        """router.score_instances semantics (f32): affine power law +
+        Erlang-C, BIG when unstable."""
+        lam_tilde = lam / jnp.maximum(n, 1.0)
+        proc = consts["alpha_k"] + consts["beta_k"] * jnp.power(
+            jnp.maximum(lam_tilde, 0.0), consts["gamma_k"])
+        q = _erlang_wait(lam, n.astype(jnp.int32), consts["mu_k"], erl)
+        g = proc + rtt + q
+        rho = lam / jnp.maximum(n * consts["mu_k"], 1e-12)
+        return jnp.where(rho < 1.0, g, BIG)
+
+    def hpa_tick(op):
+        nr, bl, drn, ring, pend, droll, ewma, ctr, b = op
+        # Router.refresh_telemetry: decay EWMA toward the sliding rate,
+        # then PMHPA.export (inverse-model n*, hysteresis) + reconcile.
+        rate_now = droll / st.window
+        ewma = st.ewma_alpha * ewma + (1.0 - st.ewma_alpha) * rate_now
+        n_cur = jnp.maximum(((~drn) * nr).sum(axis=1), 1.0)
+        lam = ewma[:, None]                                   # (I, 1)
+        ngrid = jnp.arange(1, st.n_probe + 1, dtype=jnp.float32)[None, :]
+        rho_n = lam / (ngrid * consts["mu"][:, None])
+        q = _erlang_wait(
+            jnp.broadcast_to(lam, (I, st.n_probe)),
+            jnp.broadcast_to(ngrid, (I, st.n_probe)).astype(jnp.int32),
+            jnp.broadcast_to(consts["mu"][:, None], (I, st.n_probe)), erl)
+        # desired_replicas: util WITHOUT the sim's util_cap clamp, and
+        # the CALIBRATION gamma (dep.gamma), not gamma_runtime.
+        util = jnp.maximum(
+            (lam / ngrid * consts["r_demand"][:, None]
+             + consts["background"][:, None]) / consts["r_max"][:, None], 0.0)
+        proc = consts["svc_base"][:, None] * (
+            1.0 + jnp.power(util, consts["gamma_cal"][:, None]))
+        feas = (rho_n < 1.0) & (proc + q <= consts["tau_hpa"][:, None])
+        any_f = feas.any(axis=1)
+        n_star = jnp.where(any_f, jnp.argmax(feas, axis=1) + 1.0,
+                           float(st.n_probe))
+        n_star = jnp.where(ewma <= 0.0, 1.0, n_star)
+        rho_cur = ewma / jnp.maximum(n_cur * consts["mu"], 1e-12)
+        n_star = jnp.where((n_star < n_cur) & (rho_cur >= st.rho_low),
+                           n_cur, n_star)
+        want = jnp.clip(n_star, 1.0, consts["n_max"])
+        fire = want != n_cur
+        ctr = ctr.at[4].add(fire.sum().astype(jnp.float32))                       # scale events
+        boot_col = jnp.mod(b + consts["k_boot"], ring.shape[1])
+        onehot = jax.nn.one_hot(boot_col, ring.shape[1], dtype=jnp.float32)
+        if st.multi:
+            spp = consts["spp"]
+            active = (nr > 0.0) & (~drn)
+            n_act = active.sum(axis=1).astype(jnp.float32)
+            cur_pods = n_act + pend
+            want_pods = jnp.clip(jnp.ceil(want / spp), 1.0,
+                                 consts["max_pods"])
+            boot = jnp.maximum(want_pods - cur_pods, 0.0) * fire
+            ring = ring + boot[:, None] * onehot
+            pend = pend + boot
+            ready_tot = nr.sum(axis=1)
+            do_drain = fire & (want_pods < cur_pods) & \
+                (want < ready_tot + pend * spp)
+            k = jnp.where(do_drain,
+                          jnp.minimum(cur_pods - want_pods, n_act - 1.0), 0.0)
+            key = jnp.where(active, bl, jnp.inf)
+            rank = jnp.argsort(jnp.argsort(key, axis=1),
+                               axis=1).astype(jnp.float32)
+            sel = active & (rank < k[:, None])
+            drn = drn | sel
+            ctr = ctr.at[3].add(sel.sum().astype(jnp.float32))  # pods drained
+        else:
+            current = nr.sum(axis=1) + pend
+            diff = jnp.where(fire, want - current, 0.0)
+            boot = jnp.maximum(diff, 0.0)
+            ring = ring + boot[:, None] * onehot
+            pend = pend + boot
+            down = jnp.maximum(-diff, 0.0)
+            nr0 = nr[:, 0]
+            nr = nr.at[:, 0].set(
+                jnp.where(down > 0.0, jnp.maximum(1.0, nr0 - down), nr0))
+        return nr, bl, drn, ring, pend, droll, ewma, ctr, b
+
+    def body(carry, x):
+        (nr, bl, drn, ring, pend, pring, proll, dring, droll,
+         ewma, bcarry, ctr) = carry
+        a_row, is_tick, b = x
+
+        # -- 1. boots mature (replica-granular single / pod-granular) --
+        rslot = jnp.mod(b, ring.shape[1])
+        mature = ring[:, rslot]
+        ring = ring.at[:, rslot].set(0.0)
+        pend = pend - mature
+        if st.multi:
+            inactive = (nr <= 0.0) & (~drn)
+            crank = jnp.cumsum(inactive.astype(jnp.float32), axis=1)
+            act = inactive & (crank <= mature[:, None])
+            nr = jnp.where(act, consts["spp"][:, None], nr)
+            ctr = ctr.at[2].add(act.sum().astype(jnp.float32))  # pods booted
+        else:
+            nr = nr.at[:, 0].add(mature)
+
+        # -- 2. HPA tick (refresh EWMA -> export n* -> reconcile) ------
+        nr, bl, drn, ring, pend, droll, ewma, ctr, _ = jax.lax.cond(
+            is_tick, hpa_tick, lambda op: op,
+            (nr, bl, drn, ring, pend, droll, ewma, ctr, b))
+
+        # -- 3. routing (one batched score/select per bucket) ----------
+        wslot = jnp.mod(b, dring.shape[1])
+        droll_d = droll - dring[:, wslot]          # drop the oldest bucket
+        m_home = a_row.astype(jnp.float32) @ consts["H"]      # (I,)
+        n_route = jnp.maximum(((~drn) * nr).sum(axis=1), 1.0)
+
+        if st.mode == "scalar":
+            # Algorithm 1 per bucket: the guard's sliding rate includes
+            # the bucket's own home arrivals (on_arrival returns the
+            # rate WITH the new sample), the bulk pass reads the EWMA.
+            lam_guard = (droll_d + m_home) / st.window
+            lam2 = jnp.concatenate([lam_guard, ewma])
+            g2 = score(lam2, jnp.tile(n_route, 2), 0.0)
+            g_inst, g_hat = g2[:I], g2[I:]
+            has_up = consts["has_up"]
+            off = (g_inst > consts["tau_req"]) & has_up & (m_home > 0.0)
+            m_off = jnp.where(off, m_home, 0.0)
+            m_stay = m_home - m_off
+            at_cap = n_route >= consts["n_max"] - 0.5
+            elig = (~off) & has_up & at_cap & \
+                (g_hat > consts["tau_req"]) & (m_stay > 0.0)
+            phi = jnp.clip((g_hat - consts["tau_req"])
+                           / jnp.maximum(g_hat, 1e-12), 0.0, 1.0)
+            frac = m_stay * phi + bcarry
+            m_bulk = jnp.where(elig, jnp.minimum(jnp.floor(frac), m_stay),
+                               0.0)
+            bcarry = jnp.where(elig, frac - m_bulk, bcarry)
+            moved = m_off + m_bulk
+            arrivals_dep = m_stay - m_bulk + moved @ consts["U"]
+            obs = m_home + m_off @ consts["U"]
+            ctr = ctr.at[0].add(m_off.sum())
+            ctr = ctr.at[1].add(jnp.where(elig, m_stay * phi, 0.0).sum())
+        else:
+            # Windowed plane: lam_matrix smear is the flush batch's mean
+            # self-load (r+1)/window over the batch rows. Arrivals are
+            # bucketed by FLUSH time, so this bucket's count IS the
+            # flush batch: mean smear = (m_tot + 1) / (2 * window).
+            m_tot = a_row.sum().astype(jnp.float32)
+            smear = (m_tot + 1.0) / (2.0 * st.window)
+            lam_c = droll_d / st.window + smear
+            g = score(lam_c, n_route, consts["rtt"])
+            if st.mode == "guarded_alg1":
+                hidx = consts["home_s"]
+                g_home = g[hidx]
+                g_inst = jnp.where(g_home < jnp.float32(BIG),
+                                   g_home - consts["rtt"][hidx], g_home)
+                off_s = (g_inst > consts["tau_s"]) & consts["has_up_s"]
+                target = jnp.where(off_s, consts["up_s"], hidx)
+            else:                                  # route_best
+                S = consts["home_s"].shape[0]
+                gm = jnp.broadcast_to(g[None, :], (S, I))
+                idx, ok = select_instance_batch(
+                    gm, consts["slo_rows"], consts["cost"],
+                    consts["lane_rows"])
+                target = jnp.where(ok, idx, consts["fb_col"])
+                off_s = (~ok) & consts["fb_off"]
+            m_s = a_row.astype(jnp.float32)
+            th = jax.nn.one_hot(target, I, dtype=jnp.float32)  # (S, I)
+            arrivals_dep = (m_s[:, None] * th).sum(axis=0)
+            obs = arrivals_dep
+            if st.mode == "guarded_alg1":
+                # the guard observes the HOME tier for offloaded rows on
+                # top of the plane's target settle (guarded.decide)
+                hh = jax.nn.one_hot(consts["home_s"], I, dtype=jnp.float32)
+                obs = obs + ((m_s * off_s)[:, None] * hh).sum(axis=0)
+            ctr = ctr.at[0].add((m_s * off_s).sum())
+
+        # Per-arrival EWMA decay, closed form for m observations. This
+        # runs in EVERY mode: scalar on_request and the windowed
+        # plane's _settle (plus guarded's home observation) all go
+        # through ModelTelemetry.on_arrival, which advances the EWMA
+        # once per observed arrival — the HPA tick refresh only adds
+        # one extra decay step on top.
+        lam_end = (droll_d + obs) / st.window
+        a_m = jnp.power(st.ewma_alpha, obs)
+        ewma = a_m * ewma + (1.0 - a_m) * lam_end
+
+        # -- 4. pod admission: first-fit idle slots, then equalise -----
+        m = arrivals_dep
+        active = (nr > 0.0) & (~drn)
+        idle = jnp.maximum(jnp.floor(nr - bl), 0.0) * active
+        cum_excl = jnp.cumsum(idle, axis=1) - idle
+        take = jnp.floor(jnp.clip(m[:, None] - cum_excl, 0.0, idle))
+        rem = m - take.sum(axis=1)
+        n_act = jnp.maximum(active.sum(axis=1).astype(jnp.float32), 1.0)
+        base = jnp.floor(rem / n_act)
+        extra = rem - base * n_act
+        key = jnp.where(active, bl + take, jnp.inf)
+        rank = jnp.argsort(jnp.argsort(key, axis=1), axis=1)
+        xasg = take + active * (base[:, None]
+                                + (rank < extra[:, None]))
+
+        # -- 5. Eq. 5 service physics per pod --------------------------
+        bl_start = bl
+        proll_d = proll - pring[:, :, wslot]
+        lam_pool = (proll_d + xasg) / st.window
+        n_eff = jnp.maximum(nr, 1e-9)
+        lam_til = jnp.where(nr > 1.0, lam_pool / n_eff, lam_pool)
+        util = jnp.clip(
+            (lam_til * consts["r_demand"][:, None]
+             + consts["background"][:, None]) / consts["r_max"][:, None],
+            0.0, st.util_cap)
+        s_det = consts["svc_base"][:, None] * (
+            1.0 + jnp.power(util, st.gamma_runtime))
+        cap = nr * st.dt / (s_det * st.e_jitter)
+        load = bl + xasg
+        served = jnp.minimum(load, cap)
+        bl = load - served
+        emptied = drn & (bl <= 1e-6)
+        nr = jnp.where(emptied, 0.0, nr)
+        drn = drn & ~emptied
+
+        # -- 6. telemetry rings ----------------------------------------
+        pring = pring.at[:, :, wslot].set(xasg)
+        proll = proll_d + xasg
+        dring = dring.at[:, wslot].set(obs)
+        droll = droll_d + obs
+
+        carry = (nr, bl, drn, ring, pend, pring, proll, dring, droll,
+                 ewma, bcarry, ctr)
+        ys = (bl_start, xasg, s_det, nr, served)
+        return carry, ys
+
+    return jax.lax.scan(body, carry0, xs)
+
+
+_scan_jit = jax.jit(_scan, static_argnames=("st",))
+
+
+# --------------------------------------------------------------------- #
+def _validate(cluster: Cluster, cfg) -> str:
+    """Reject configurations the twin does not model. Returns the scan
+    mode string."""
+    if cfg.mode != "laimr":
+        raise ValueError(
+            "backend='jax' models mode='laimr' only (the reactive "
+            "baseline autoscaler is event-loop only)")
+    if not cfg.faults.empty():
+        raise ValueError("backend='jax' does not model fault injection; "
+                         "use backend='event' for FaultPlan runs")
+    if cfg.control_rho_buckets is not None:
+        raise ValueError("backend='jax' does not model rho-bucketed "
+                         "control (control_rho_buckets)")
+    if cfg.admission_window <= 0.0:
+        return "scalar"
+    if cfg.policy not in ("route_best", "guarded_alg1"):
+        raise ValueError(
+            f"backend='jax' supports policies route_best/guarded_alg1 in "
+            f"window mode, not {cfg.policy!r} (redundant-dispatch racing "
+            "is event-loop only)")
+    return cfg.policy
+
+
+def simulate(cluster: Cluster, cfg, arrivals: list[Arrival],
+             horizon: Optional[float] = None):
+    """Run the chunked twin. Pure in (cluster, cfg, arrivals): the
+    cluster's ``n_replicas`` and telemetry are never mutated."""
+    from repro.core.simulator import SimResult  # simulator imports us lazily
+
+    mode = _validate(cluster, cfg)
+    if not arrivals:
+        return SimResult(completed=[], scale_events=[], offload_fast=0,
+                         offload_bulk=0.0, n_events=0,
+                         latency_trace=np.zeros(0), n_arrivals=0,
+                         backend="jax")
+
+    params: RouterParams = cfg.router
+    dt = float(cfg.bucket_width)
+    if dt <= 0.0:
+        raise ValueError("bucket_width must be > 0")
+    window = float(params.window)
+    deps = list(cluster)
+    I = len(deps)  # noqa: E741
+    keys = [d.key for d in deps]
+    dindex = {k: i for i, k in enumerate(keys)}
+
+    # ---- static per-deployment constants (f32 like the score path) ----
+    alpha = np.array([d.alpha for d in deps], np.float32)
+    beta = np.array([d.beta for d in deps], np.float32)
+    gamma_cal = np.array([d.gamma for d in deps], np.float32)
+    mu = np.array([d.mu for d in deps], np.float32)
+    rtt = np.array([d.instance.net_rtt for d in deps], np.float32)
+    cost = np.array([d.instance.cost for d in deps], np.float32)
+    n0 = np.array([d.n_replicas for d in deps], np.float32)
+    n_max = np.array([d.n_max for d in deps], np.float32)
+    svc_base = np.array([d.model.l_ref / d.instance.speedup for d in deps],
+                        np.float32)
+    r_demand = np.array([d.model.r_demand for d in deps], np.float32)
+    background = np.array([d.instance.background for d in deps], np.float32)
+    r_max = np.array([d.instance.r_max for d in deps], np.float32)
+
+    up = np.full(I, -1, np.int64)
+    for i, d in enumerate(deps):
+        u = cluster.upstream_of(d)
+        if u is not None and u.key != d.key:
+            up[i] = dindex[u.key]
+    U = np.zeros((I, I), np.float32)
+    for i in range(I):
+        if up[i] >= 0:
+            U[i, up[i]] = 1.0
+
+    # Request-guard tau (Router.slo_budget) and the PM-HPA export tau
+    # (x * L_m, NO rtt and NO cfg.slo override — PMHPA.export's own).
+    if cfg.slo is not None:
+        tau_req = np.full(I, cfg.slo, np.float32)
+    else:
+        tau_req = params.x * svc_base + \
+            (rtt if params.slo_includes_rtt else 0.0)
+        tau_req = tau_req.astype(np.float32)
+    tau_hpa = (params.x * svc_base).astype(np.float32)
+
+    # ---- streams: one column per model, home = edge-first binding -----
+    model_names: list[str] = []
+    sidx_of: dict[str, int] = {}
+    midx = np.empty(len(arrivals), np.int64)
+    for j, a in enumerate(arrivals):
+        s = sidx_of.get(a.model)
+        if s is None:
+            s = sidx_of[a.model] = len(model_names)
+            model_names.append(a.model)
+        midx[j] = s
+    S = len(model_names)
+    home_s = np.empty(S, np.int64)
+    for s, mname in enumerate(model_names):
+        cands = [i for i, d in enumerate(deps) if d.model.name == mname]
+        if not cands:
+            raise ValueError(f"no deployment serves model {mname!r}")
+        edge = [i for i in cands if deps[i].instance.tier == "edge"]
+        home_s[s] = (edge or cands)[0]
+    H = np.zeros((S, I), np.float32)
+    H[np.arange(S), home_s] = 1.0
+
+    # windowed-policy per-stream tables (lane masks, slo rows, the
+    # route_best infeasible fallback = cheapest_lane_upstream, static)
+    lane_rows = np.zeros((S, I), bool)
+    for s in range(S):
+        q = deps[home_s[s]].quality
+        lane = np.array([d.quality == q for d in deps])
+        lane_rows[s] = lane if lane.any() else True
+    slo_rows = np.broadcast_to(tau_req, (S, I)).copy()
+    fb_col = np.empty(S, np.int64)
+    fb_off = np.zeros(S, bool)
+    for s in range(S):
+        lane = np.flatnonzero(lane_rows[s])
+        ci = int(lane[np.argmin(cost[lane])])
+        u = int(up[ci])
+        fb_col[s], fb_off[s] = (u, True) if u >= 0 else (ci, False)
+
+    # ---- bucketise arrivals -------------------------------------------
+    t_arr = np.fromiter((a.t for a in arrivals), np.float64,
+                        count=len(arrivals))
+    M = len(arrivals)
+    adm_delay = None
+    if mode != "scalar":
+        # The plane buffers each arrival until its window flushes
+        # (open + admission_window, or early when the max_batch-th
+        # submit closes the window). Routing, settle telemetry and
+        # queueing all happen at FLUSH time in the oracle — so bucket
+        # by flush time and carry the arrival->flush delay into the
+        # final latency (it is part of the measured response time).
+        w_adm = float(cfg.admission_window)
+        mb = max(1, int(cfg.admission_max_batch))
+        t_flush = np.empty(M, np.float64)
+        j = 0
+        while j < M:
+            close = t_arr[j] + w_adm
+            k = min(int(np.searchsorted(t_arr, close, side="right")),
+                    j + mb)
+            if k == j + mb and t_arr[k - 1] < close:
+                close = float(t_arr[k - 1])   # max_batch early close
+            t_flush[j:k] = close
+            j = k
+        adm_delay = t_flush - t_arr
+        t_arr = t_flush
+    t_last = float(t_arr[-1])
+    tail = int(math.ceil(3.0 * window / dt))
+    B = int(t_last / dt) + 1 + tail
+    bs_arr = np.minimum((t_arr / dt).astype(np.int64), B - 1)
+    A = np.bincount(bs_arr * S + midx, minlength=B * S) \
+        .reshape(B, S).astype(np.int32)
+    if adm_delay is not None:
+        # per-bucket mean flush delay (every request in a bucket shares
+        # its window's flush instant, so the in-bucket spread is < w)
+        dsum = np.bincount(bs_arr, weights=adm_delay, minlength=B)
+        dcnt = np.maximum(np.bincount(bs_arr, minlength=B), 1)
+        dmean = dsum / dcnt
+    else:
+        dmean = np.zeros(B, np.float64)
+
+    end = horizon if horizon is not None else t_last + 120.0
+    tick_mask = np.zeros(B, bool)
+    k = 1
+    while k * cfg.hpa_period <= end:
+        bt = int(k * cfg.hpa_period / dt)
+        if bt >= B:
+            break
+        tick_mask[bt] = True
+        k += 1
+
+    # ---- pods / boot ring / rate rings --------------------------------
+    P = max(1, int(cfg.pods_per_deployment))
+    multi = P > 1
+    spp = np.maximum(1.0, np.ceil(n0 / P)).astype(np.float32)
+    max_pods = np.maximum(1.0, np.floor(n_max / spp)).astype(np.float32) \
+        if multi else np.ones(I, np.float32)
+    if multi:
+        pmax = int(max(np.ceil(n0 / spp).max(), max_pods.max()))
+    else:
+        pmax = 1
+    nr0 = np.zeros((I, pmax), np.float32)
+    for i in range(I):
+        if multi:
+            rem = n0[i]
+            p = 0
+            while rem > 0 and p < pmax:
+                nr0[i, p] = min(spp[i], rem)
+                rem -= nr0[i, p]
+                p += 1
+        else:
+            nr0[i, 0] = n0[i]
+    startup = np.array([d.startup_delay for d in deps], np.float64)
+    k_boot = np.maximum(1, np.round(startup / dt)).astype(np.int64)
+    R = int(k_boot.max()) + 1
+    W = max(1, int(round(window / dt)))
+
+    st = _Static(
+        mode=mode, multi=multi, dt=dt, window=window,
+        erl_n=int(max(64, n_max.max())),
+        n_probe=64, ewma_alpha=float(params.ewma_alpha),
+        rho_low=float(params.rho_low), util_cap=float(cfg.util_cap),
+        gamma_runtime=float(cfg.gamma_runtime),
+        e_jitter=float(np.exp(cfg.jitter_sigma ** 2 / 2.0)))
+
+    consts = {
+        "alpha": alpha, "beta": beta, "gamma_cal": gamma_cal, "mu": mu,
+        "rtt": rtt, "cost": cost, "n_max": n_max, "svc_base": svc_base,
+        "r_demand": r_demand, "background": background, "r_max": r_max,
+        "tau_req": tau_req, "tau_hpa": tau_hpa,
+        "has_up": up >= 0, "U": U, "H": H,
+        "home_s": home_s, "up_s": np.maximum(up[home_s], 0),
+        "has_up_s": up[home_s] >= 0, "tau_s": tau_req[home_s],
+        "lane_rows": lane_rows, "slo_rows": slo_rows.astype(np.float32),
+        "fb_col": fb_col, "fb_off": fb_off,
+        "spp": spp, "max_pods": max_pods,
+        "k_boot": k_boot.astype(np.int32),
+        # scoring constants, tiled x2 for the scalar mode's stacked
+        # (guard-rate, EWMA) call
+        "alpha_k": None, "beta_k": None, "gamma_k": None, "mu_k": None,
+    }
+    tile = 2 if mode == "scalar" else 1
+    consts["alpha_k"] = np.tile(alpha, tile)
+    consts["beta_k"] = np.tile(beta, tile)
+    consts["gamma_k"] = np.tile(gamma_cal, tile)
+    consts["mu_k"] = np.tile(mu, tile)
+    consts = {k2: jnp.asarray(v) for k2, v in consts.items()}
+
+    carry0 = (
+        jnp.asarray(nr0),                          # n_ready (I, P)
+        jnp.zeros((I, pmax), jnp.float32),         # backlog
+        jnp.zeros((I, pmax), bool),                # draining
+        jnp.zeros((I, R), jnp.float32),            # boot ring
+        jnp.zeros(I, jnp.float32),                 # pending boot units
+        jnp.zeros((I, pmax, W), jnp.float32),      # per-pod rate ring
+        jnp.zeros((I, pmax), jnp.float32),         # per-pod rolling sum
+        jnp.zeros((I, W), jnp.float32),            # dep telemetry ring
+        jnp.zeros(I, jnp.float32),                 # dep rolling sum
+        jnp.zeros(I, jnp.float32),                 # EWMA
+        jnp.zeros(I, jnp.float32),                 # bulk-offload carry
+        jnp.zeros(5, jnp.float32),                 # counters
+    )
+    xs = (jnp.asarray(A), jnp.asarray(tick_mask),
+          jnp.arange(B, dtype=jnp.int32))
+
+    carry_out, ys = _scan_jit(consts, carry0, xs, st)
+    ctr = np.asarray(carry_out[-1], np.float64)
+    bl_start = np.asarray(ys[0], np.float64)       # (B, I, P)
+    xasg = np.rint(np.asarray(ys[1], np.float64)).astype(np.int64)
+    s_det = np.asarray(ys[2], np.float64)
+    nr_b = np.asarray(ys[3], np.float64)
+    served = np.asarray(ys[4], np.float64)
+
+    routed = int(xasg.sum())
+    if routed != M:
+        raise RuntimeError(
+            f"jaxsim conservation violation: routed {routed} != "
+            f"{M} arrivals")
+
+    # ---- latency post-pass: walk the served-work ledger ---------------
+    rng = np.random.default_rng(cfg.seed)
+    jit_all = rng.lognormal(mean=0.0, sigma=cfg.jitter_sigma, size=M)
+    lat = np.empty(M, np.float64)
+    cursor = 0
+    e_jit = st.e_jitter
+    for i in range(I):
+        for p in range(pmax):
+            xc = xasg[:, i, p]
+            tot = int(xc.sum())
+            if tot == 0:
+                continue
+            nz = np.flatnonzero(xc)
+            bsc = np.repeat(nz, xc[nz])
+            ends = np.cumsum(xc[nz])
+            ks = np.arange(tot) - np.repeat(ends - xc[nz], xc[nz])
+            n_b = np.maximum(nr_b[bsc, i, p], 1.0)
+            need = bl_start[bsc, i, p] + ks - n_b + 1.0
+            C = np.concatenate([[0.0], np.cumsum(served[:, i, p])])
+            target = C[bsc] + need
+            idx = np.searchsorted(C[1:], target, side="left")
+            idx_c = np.minimum(idx, B - 1)
+            sb = served[idx_c, i, p]
+            frac = np.clip((target - C[idx_c]) / np.maximum(sb, 1e-12),
+                           0.0, 1.0)
+            start = (idx_c + frac) * dt
+            over = idx >= B
+            if over.any():
+                s_l = s_det[B - 1, i, p] * e_jit
+                n_l = max(nr_b[B - 1, i, p], 1.0)
+                start = np.where(
+                    over, B * dt + (target - C[B]) * s_l / n_l, start)
+            wait = np.maximum(start - (bsc + 0.5) * dt, 0.0)
+            queued = need > 0.0
+            wait = np.where(queued, wait, 0.0)
+            own_b = np.where(queued, idx_c, bsc)
+            own = s_det[own_b, i, p] * jit_all[cursor:cursor + tot]
+            lat[cursor:cursor + tot] = (wait + own + float(rtt[i])
+                                        + dmean[bsc])
+            cursor += tot
+    assert cursor == M
+
+    return SimResult(
+        completed=[], scale_events=[],
+        offload_fast=int(round(ctr[0])),
+        offload_bulk=float(ctr[1]),
+        # comparable event accounting: one arrival + one service end per
+        # request, plus one control step per bucket (the event loop
+        # counts arrivals, service ends, ticks, flushes, boots)
+        n_events=2 * M + B,
+        pods_booted=int(round(ctr[2])) if multi else 0,
+        pods_drained=int(round(ctr[3])) if multi else 0,
+        pod_stats={}, failed=[],
+        latency_trace=lat, n_arrivals=M, backend="jax")

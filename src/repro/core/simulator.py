@@ -643,6 +643,24 @@ class SimConfig:
     # draws come from a separate RNG stream that is never created for
     # an empty plan. tests/test_faults.py walls the semantics.
     faults: "FaultPlan" = dataclasses.field(default_factory=FaultPlan)
+    # Simulation backend (ISSUE 8). "event" (default) is the discrete
+    # event loop — the oracle, bit-identical to every golden digest.
+    # "jax" runs the chunked lax.scan time-bucket twin in
+    # repro.core.jaxsim: same physics laws (Eq. 5 service model, Alg. 1
+    # guard, PM-HPA feasibility scan, pod waterfill admission) applied
+    # per fixed-width bucket instead of per event. The jax backend is
+    # DISTRIBUTION-pinned, not event-pinned: P50/P99/offload-rate match
+    # the oracle within declared tolerances (tests/test_jaxsim.py),
+    # while arrival conservation stays exact. It supports
+    # mode="laimr", the scalar Alg.1 path and the route_best /
+    # guarded_alg1 windowed policies, and an empty FaultPlan; anything
+    # else raises rather than silently diverging.
+    backend: str = "event"
+    # Bucket width (seconds) for backend="jax". Smaller buckets track
+    # the oracle's telemetry dynamics more closely at the cost of scan
+    # length; 0.05 s (1/20 of the 1 s sliding-rate window) is the
+    # tolerance-tested default.
+    bucket_width: float = 0.05
 
 
 @dataclasses.dataclass
@@ -671,6 +689,14 @@ class SimResult:
     crashes: int = 0
     drops: int = 0
     straggled: int = 0
+    # jax backend (ISSUE 8): per-request latency samples as one dense
+    # array instead of Request objects (the bucketed twin does not track
+    # request identity). When set, latencies()/percentile()/summary()
+    # read it directly; ``completed`` stays empty. n_arrivals records
+    # the trace size for conservation checks.
+    latency_trace: Optional[np.ndarray] = None
+    n_arrivals: int = 0
+    backend: str = "event"
 
     def fault_counts(self) -> dict[str, int]:
         """Per-fault-type accounting of the run."""
@@ -678,12 +704,36 @@ class SimResult:
                 "straggled": self.straggled, "retried": self.retried,
                 "failed": len(self.failed)}
 
+    def failed_count(self) -> int:
+        """Total requests with NO finite latency — the ``failed`` list
+        plus any completion carrying a None/non-finite latency (the same
+        rule ``benchmarks.common.split_latencies`` applies). This is the
+        denominator-side twin of latencies(): every arrival lands in
+        exactly one of the two buckets."""
+        n_bad = sum(1 for r in self.completed
+                    if r.latency is None or not np.isfinite(r.latency))
+        if self.latency_trace is not None:
+            lat = np.asarray(self.latency_trace, dtype=np.float64)
+            n_bad += int(lat.size - np.count_nonzero(np.isfinite(lat)))
+        return len(self.failed) + n_bad
+
     def slo_attainment(self, slo: Optional[float] = None) -> float:
         """Fraction of ARRIVALS (not completions) that finished within
         their SLO — failed requests count against attainment, which is
         what makes this the right metric under fault injection. Uses
         each request's own ``slo`` when set, else ``slo``; with no
-        deadline anywhere, completion itself is attainment."""
+        deadline anywhere, completion itself is attainment. A jax-backend
+        result carries latencies as ``latency_trace`` (no Request
+        objects, so no per-request SLO override — every sample is held
+        to the ``slo`` argument)."""
+        if self.latency_trace is not None:
+            total = self.n_arrivals
+            if total == 0:
+                return float("nan")
+            finite = self.latency_trace[np.isfinite(self.latency_trace)]
+            if slo is None:
+                return len(finite) / total
+            return float((finite <= slo).sum()) / total
         total = len(self.completed) + len(self.failed)
         if total == 0:
             return float("nan")
@@ -695,7 +745,17 @@ class SimResult:
         return ok / total
 
     def latencies(self) -> np.ndarray:
-        return np.array([r.latency for r in self.completed if r.latency is not None])
+        """FINITE latencies only. A completion with a None or non-finite
+        latency is a failure, never a percentile sample — the same
+        split ``benchmarks.common.split_latencies`` applies, so an
+        all-failed run reports through the ``failed`` bucket instead of
+        silently yielding NaN statistics (see failed_count())."""
+        if self.latency_trace is not None:
+            lat = np.asarray(self.latency_trace, dtype=np.float64)
+            return lat[np.isfinite(lat)]
+        lat = np.array([r.latency for r in self.completed
+                        if r.latency is not None], dtype=np.float64)
+        return lat[np.isfinite(lat)] if lat.size else lat
 
     def percentile(self, p: float) -> float:
         lat = self.latencies()
@@ -703,9 +763,13 @@ class SimResult:
 
     def summary(self) -> dict[str, float]:
         lat = self.latencies()
+        failed = float(self.failed_count())
         if lat.size == 0:
-            return {k: float("nan") for k in
-                    ("mean", "p50", "p95", "p99", "max", "std", "iqr", "n")}
+            out = {k: float("nan") for k in
+                   ("mean", "p50", "p95", "p99", "max", "std", "iqr")}
+            out["n"] = 0.0
+            out["failed"] = failed
+            return out
         q1, q3 = np.percentile(lat, [25, 75])
         return {
             "mean": float(lat.mean()), "p50": float(np.percentile(lat, 50)),
@@ -713,6 +777,7 @@ class SimResult:
             "p99": float(np.percentile(lat, 99)),
             "max": float(lat.max()), "std": float(lat.std()),
             "iqr": float(q3 - q1), "n": float(lat.size),
+            "failed": failed,
         }
 
 
@@ -1277,6 +1342,17 @@ class ClusterSimulator:
 
     # ------------------------------------------------------------------ #
     def run(self, arrivals: list[Arrival], horizon: Optional[float] = None) -> SimResult:
+        if self.cfg.backend == "jax":
+            # Chunked lax.scan twin (ISSUE 8). Pure function of
+            # (cluster, cfg, arrivals): never mutates this simulator's
+            # pools/telemetry, so the same ClusterSimulator instance
+            # could still run the event loop afterwards.
+            from repro.core.jaxsim import simulate as _jax_simulate
+            return _jax_simulate(self.cluster, self.cfg, arrivals, horizon)
+        if self.cfg.backend != "event":
+            raise ValueError(
+                f"unknown SimConfig.backend {self.cfg.backend!r} "
+                "(expected 'event' or 'jax')")
         self._now = 0.0
         for arr in arrivals:
             self._push(arr.t, _ARRIVAL, arr)

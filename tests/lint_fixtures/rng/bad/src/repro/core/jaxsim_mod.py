@@ -1,0 +1,15 @@
+"""Known-bad fixture for rng-discipline: stdlib ``random`` in sim code
+— the jaxsim post-pass bug class (ISSUE 8). Same hidden-global-stream
+hazard as the numpy module API, same verdict."""
+import random
+from random import shuffle  # module-API import: flagged
+
+
+def jitter_post_pass(n):
+    random.seed(0)  # global seeding: flagged
+    # hidden interpreter-wide stream: flagged
+    return [random.gauss(0.0, 1.0) for _ in range(n)]
+
+
+def fresh_instance():
+    return random.Random()  # unseeded: OS entropy: flagged

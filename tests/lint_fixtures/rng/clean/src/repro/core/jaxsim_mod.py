@@ -1,0 +1,20 @@
+"""Known-clean fixture for rng-discipline: the sanctioned stdlib
+shapes a jaxsim-style post-pass may use (ISSUE 8)."""
+import random
+
+import numpy as np
+
+
+def make_stdlib_stream(seed: int) -> random.Random:
+    # seeded instance: the threaded stdlib twin of default_rng(seed)
+    return random.Random(seed)
+
+
+def post_pass_jitter(rng: np.random.Generator, n: int):
+    # a Generator METHOD happens to be named ``random``: not the
+    # stdlib module API, must not trip the import-tracking
+    return rng.random(n)
+
+
+def seeded_numpy(cfg):
+    return np.random.default_rng((cfg.seed, 7))

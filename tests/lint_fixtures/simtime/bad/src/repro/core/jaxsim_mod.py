@@ -1,0 +1,10 @@
+"""Known-bad fixture for sim-time-purity: host clocks inside a scan
+post-pass — the jaxsim bug class (ISSUE 8). CLOCK_MONOTONIC is still
+the host's clock."""
+import time
+
+
+def latency_post_pass(trace):
+    t0 = time.clock_gettime(time.CLOCK_MONOTONIC)   # flagged
+    wall = time.perf_counter()                      # flagged
+    return trace, wall - t0

@@ -1,0 +1,7 @@
+"""Known-clean fixture for sim-time-purity: the bucketed twin's clock
+is reconstructed from bucket indices, never read from the host."""
+
+
+def latency_post_pass(bucket_starts, waits, dt: float):
+    # simulated time only: bucket start + queueing wait + mid-bucket
+    return [t + w + 0.5 * dt for t, w in zip(bucket_starts, waits)]

@@ -1,0 +1,271 @@
+"""Distribution-equivalence wall for the chunked JAX twin (ISSUE 8).
+
+The contract split: ``backend="event"`` stays BIT-identical to every
+golden digest (re-pinned here with the backend spelled out), while
+``backend="jax"`` is DISTRIBUTION-pinned — P50/P99 within the relative
+tolerances and offload rate within the absolute tolerance that
+``repro.core.jaxsim.TOLERANCES`` declares, per scenario x policy x pods
+cell, against a fresh event-loop oracle. Conservation is NOT a
+tolerance: every arrival must produce exactly one latency sample, and
+two jax runs of the same seeded config must be bit-identical.
+
+The oracle run MUTATES its cluster (scaling bumps ``n_replicas`` in
+place), so every run here builds a fresh ``scenario(name)`` cluster —
+sharing one cluster object across backends is the classic way to get a
+false divergence.
+
+Also rides along: the ISSUE-8 satellite regressions for failed-aware
+``SimResult.summary``/``percentile`` (aligned with
+``benchmarks.common.split_latencies``) and the latency-trace-aware
+``slo_attainment``/``failed_count`` accounting.
+"""
+import numpy as np
+import pytest
+
+from _propstub import given, settings, st
+from benchmarks.common import split_latencies
+from repro.core.jaxsim import TOLERANCES
+from repro.core.scheduler import QualityClass, Request
+from repro.core.simulator import (ClusterSimulator, FaultPlan, SimConfig,
+                                  SimResult)
+from test_sim_golden import GOLDEN, SCENARIOS, scenario, trace_for, two_tier
+
+
+def rq(arrival: float, latency=None) -> Request:
+    r = Request(model="yolov5m", quality=QualityClass.BALANCED,
+                arrival=arrival)
+    if latency is not None:
+        r.completion = arrival + latency
+    return r
+
+
+def cfg_for(window: float, policy: str, pods: int,
+            backend: str) -> SimConfig:
+    return SimConfig(mode="laimr", seed=5, slo=1.8, jitter_sigma=0.2,
+                     admission_window=window, policy=policy,
+                     pods_per_deployment=pods, backend=backend)
+
+
+def run_pair(name: str, window: float, policy: str, pods: int):
+    """(oracle SimResult, twin SimResult) on fresh clusters per run."""
+    out = []
+    for backend in ("event", "jax"):
+        cluster, arr = scenario(name)
+        sim = ClusterSimulator(cluster, cfg_for(window, policy, pods,
+                                                backend))
+        out.append((sim.run(arr), len(arr)))
+    (oracle, n1), (twin, n2) = out
+    assert n1 == n2
+    return oracle, twin, n1
+
+
+# The policy-config axis of the equivalence sweep: scalar Alg. 1 and
+# both windowed plane policies, single-pool and pod-split. (window,
+# policy, pods); policy is ignored when window == 0.
+CONFIGS = [
+    pytest.param(0.0, "route_best", 1, id="scalar"),
+    pytest.param(0.0, "route_best", 2, id="scalar-pods2"),
+    pytest.param(0.1, "route_best", 1, id="route_best-w0.1"),
+    pytest.param(0.1, "guarded_alg1", 1, id="guarded-w0.1"),
+    pytest.param(0.1, "route_best", 2, id="route_best-w0.1-pods2"),
+    pytest.param(0.1, "guarded_alg1", 2, id="guarded-w0.1-pods2"),
+]
+
+# Fast tier-1 subset: every config appears, every scenario appears,
+# including the calibration sweep's worst cells (diurnal/guarded was the
+# largest p50 and offload gap; poisson/route_best-pods2 the largest
+# p99). The full 6x6 product runs under -m slow.
+SMOKE_CELLS = [
+    ("poisson", 0.0, "route_best", 1),
+    ("flash", 0.0, "route_best", 2),
+    ("mmpp", 0.1, "route_best", 1),
+    ("poisson", 0.1, "route_best", 2),
+    ("diurnal", 0.1, "guarded_alg1", 1),
+    ("bursts", 0.1, "guarded_alg1", 2),
+    ("mixed", 0.1, "guarded_alg1", 1),
+]
+
+
+def assert_equivalent(name, window, policy, pods):
+    oracle, twin, n = run_pair(name, window, policy, pods)
+
+    # conservation is exact, not a tolerance: one sample per arrival
+    assert twin.backend == "jax"
+    assert twin.n_arrivals == n
+    assert twin.latency_trace.size == n
+    assert twin.failed_count() == 0
+    assert np.isfinite(twin.latency_trace).all()
+    assert len(oracle.completed) + len(oracle.failed) == n
+
+    # distributions within the declared tolerances
+    for q, tol in ((50.0, TOLERANCES["p50_rel"]),
+                   (99.0, TOLERANCES["p99_rel"])):
+        ref = oracle.percentile(q)
+        got = twin.percentile(q)
+        assert ref > 0
+        rel = abs(got - ref) / ref
+        assert rel <= tol, (f"{name} w={window} {policy} pods={pods} "
+                            f"P{q:.0f}: {got:.4f} vs {ref:.4f} "
+                            f"(rel {rel:.3f} > {tol})")
+    d_off = abs(twin.offload_fast - oracle.offload_fast) / n
+    assert d_off <= TOLERANCES["offload_abs"], (
+        f"{name} w={window} {policy} pods={pods} offload rate: "
+        f"{twin.offload_fast}/{n} vs {oracle.offload_fast}/{n} "
+        f"(abs {d_off:.3f})")
+
+
+class TestDistributionEquivalence:
+    @pytest.mark.parametrize("name,window,policy,pods", SMOKE_CELLS)
+    def test_smoke_cells(self, name, window, policy, pods):
+        assert_equivalent(name, window, policy, pods)
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("window,policy,pods", CONFIGS)
+    @pytest.mark.parametrize("name", SCENARIOS)
+    def test_full_matrix(self, name, window, policy, pods):
+        assert_equivalent(name, window, policy, pods)
+
+
+class TestTwinDeterminism:
+    @given(st.sampled_from(SCENARIOS),
+           st.sampled_from([(0.0, "route_best", 1),
+                            (0.1, "route_best", 1),
+                            (0.1, "guarded_alg1", 2)]))
+    @settings(max_examples=8, deadline=None)
+    def test_bit_identical_reruns_and_conservation(self, name, config):
+        window, policy, pods = config
+        traces = []
+        for _ in range(2):
+            cluster, arr = scenario(name)
+            sim = ClusterSimulator(cluster, cfg_for(window, policy, pods,
+                                                    "jax"))
+            res = sim.run(arr)
+            assert res.n_arrivals == len(arr)
+            assert res.latency_trace.size == len(arr)
+            assert (res.latency_trace > 0).all()
+            assert 0 <= res.offload_fast <= len(arr)
+            traces.append(np.asarray(res.latency_trace))
+        np.testing.assert_array_equal(traces[0], traces[1])
+
+    def test_cluster_never_mutated(self):
+        """The twin is pure in (cluster, cfg, arrivals): the event loop
+        bumps ``n_replicas`` in place, the jax backend must not."""
+        cluster, arr = scenario("flash")
+        before = [d.n_replicas for d in cluster]
+        ClusterSimulator(cluster, cfg_for(0.0, "route_best", 1,
+                                          "jax")).run(arr)
+        assert [d.n_replicas for d in cluster] == before
+
+    def test_empty_trace(self):
+        cluster, _ = scenario("poisson")
+        res = ClusterSimulator(cluster, cfg_for(0.0, "route_best", 1,
+                                                "jax")).run([])
+        assert res.n_arrivals == 0
+        assert res.latency_trace.size == 0
+        assert np.isnan(res.percentile(50.0))
+
+
+class TestEventBackendUntouched:
+    """``backend="event"`` (spelled out) must keep reproducing the exact
+    golden digests — the jax wiring may not perturb the oracle path."""
+
+    @pytest.mark.parametrize("trace,mode", sorted(GOLDEN))
+    def test_golden_digests(self, trace, mode):
+        arr = trace_for(trace)
+        sim = ClusterSimulator(two_tier(),
+                               SimConfig(mode=mode, seed=11, slo=1.0,
+                                         backend="event"))
+        res = sim.run(arr, horizon=500.0)
+        want = GOLDEN[(trace, mode)]
+        s = res.summary()
+        assert int(s["n"]) == want["n"]
+        assert res.offload_fast == want["offload_fast"]
+        assert s["p50"] == pytest.approx(want["p50"], rel=1e-9)
+        assert s["p99"] == pytest.approx(want["p99"], rel=1e-9)
+        assert res.backend == "event"
+        assert res.latency_trace is None
+
+
+class TestUnsupportedConfigs:
+    """The twin refuses physics it does not model instead of silently
+    diverging."""
+
+    def setup_method(self):
+        self.cluster, self.arr = scenario("poisson")
+
+    def run_cfg(self, **kw):
+        cfg = SimConfig(mode="laimr", seed=5, backend="jax", **kw)
+        return ClusterSimulator(self.cluster, cfg).run(self.arr)
+
+    def test_baseline_mode_rejected(self):
+        cfg = SimConfig(mode="baseline", seed=5, backend="jax")
+        with pytest.raises(ValueError, match="laimr"):
+            ClusterSimulator(self.cluster, cfg).run(self.arr)
+
+    def test_faults_rejected(self):
+        with pytest.raises(ValueError, match="fault"):
+            self.run_cfg(faults=FaultPlan(drop_prob={"cloud": 0.1}))
+
+    def test_redundant_policy_rejected(self):
+        with pytest.raises(ValueError, match="safetail"):
+            self.run_cfg(admission_window=0.1, policy="safetail")
+
+    def test_rho_buckets_rejected(self):
+        with pytest.raises(ValueError, match="rho"):
+            self.run_cfg(control_rho_buckets=4)
+
+    def test_bad_bucket_width_rejected(self):
+        with pytest.raises(ValueError, match="bucket_width"):
+            self.run_cfg(bucket_width=0.0)
+
+    def test_unknown_backend_rejected(self):
+        cfg = SimConfig(mode="laimr", seed=5, backend="tpu")
+        with pytest.raises(ValueError, match="backend"):
+            ClusterSimulator(self.cluster, cfg).run(self.arr)
+
+
+class TestFailedAwareSummary:
+    """ISSUE-8 satellite: SimResult percentile/summary must follow the
+    ``split_latencies`` rule — non-finite completions are failures, and
+    failures never pollute the percentile pool."""
+
+    def test_summary_counts_failures_like_split_latencies(self):
+        completed = [rq(0.0, 1.0), rq(1.0, 3.0), rq(2.0)]
+        failed = [rq(3.0)]
+        res = SimResult(completed=completed, scale_events=[],
+                        offload_fast=0, offload_bulk=0.0, failed=failed)
+        lat, n_failed = split_latencies(completed, failed)
+        s = res.summary()
+        assert res.failed_count() == n_failed == 2
+        assert int(s["n"]) == lat.size == 2
+        assert int(s["failed"]) == 2
+        assert s["p50"] == pytest.approx(np.percentile(lat, 50.0))
+
+    def test_all_failed_yields_nan_not_silence(self):
+        res = SimResult(completed=[], scale_events=[], offload_fast=0,
+                        offload_bulk=0.0, failed=[rq(0.0), rq(1.0)])
+        s = res.summary()
+        assert int(s["failed"]) == 2
+        assert int(s["n"]) == 0
+        assert np.isnan(s["p50"]) and np.isnan(s["p99"])
+
+    def test_trace_backed_result_uses_trace(self):
+        trace = np.array([1.0, 2.0, 3.0, 4.0])
+        res = SimResult(completed=[], scale_events=[], offload_fast=1,
+                        offload_bulk=0.0, latency_trace=trace,
+                        n_arrivals=4, backend="jax")
+        assert res.failed_count() == 0
+        assert res.percentile(50.0) == pytest.approx(
+            np.percentile(trace, 50.0))
+        assert int(res.summary()["n"]) == 4
+
+    def test_trace_slo_attainment_counts_arrivals(self):
+        trace = np.array([0.5, 1.5, np.inf, 0.8])
+        res = SimResult(completed=[], scale_events=[], offload_fast=0,
+                        offload_bulk=0.0, latency_trace=trace,
+                        n_arrivals=4, backend="jax")
+        assert res.failed_count() == 1
+        # 2 of 4 ARRIVALS met slo=1.0; the inf sample counts against
+        assert res.slo_attainment(1.0) == pytest.approx(0.5)
+        # with no deadline, completion itself is attainment: 3 of 4
+        assert res.slo_attainment(None) == pytest.approx(0.75)

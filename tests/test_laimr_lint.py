@@ -70,12 +70,17 @@ class TestRngDiscipline:
     def test_every_bad_shape_flagged(self):
         res = run(FIXTURES / "rng" / "bad", ["src"])
         rng = [f for f in res.findings if f.check == "rng-discipline"]
-        # module-API import, np.random.normal, np.random.seed, and two
-        # unseeded default_rng constructions
-        assert len(rng) == 5
+        # numpy (sim_mod.py): module-API import, np.random.normal,
+        # np.random.seed, two unseeded default_rng constructions;
+        # stdlib (jaxsim_mod.py, ISSUE 8): from-import, random.seed,
+        # random.gauss, unseeded random.Random()
+        assert len(rng) == 9
         msgs = " ".join(f.message for f in rng)
         assert "unseeded default_rng" in msgs
         assert "np.random.seed" in msgs
+        assert "stdlib random module API" in msgs
+        assert "unseeded random.Random()" in msgs
+        assert "import of random.shuffle" in msgs
 
     def test_out_of_scope_paths_ignored(self, tmp_path):
         # same bad code OUTSIDE src/ (e.g. a script) is out of scope
@@ -88,9 +93,14 @@ class TestRngDiscipline:
 
 
 class TestSimTimePurity:
-    def test_all_three_clock_shapes_flagged(self):
+    def test_all_clock_shapes_flagged(self):
+        # engine.py: time.time / perf_counter alias / datetime.now;
+        # jaxsim_mod.py (ISSUE 8): clock_gettime + perf_counter in a
+        # scan post-pass
         res = run(FIXTURES / "simtime" / "bad", ["src"])
-        assert ids_of(res).count("sim-time-purity") == 3
+        assert ids_of(res).count("sim-time-purity") == 5
+        msgs = " ".join(f.message for f in res.findings)
+        assert "time.clock_gettime" in msgs
 
     def test_dryrun_allowlist_holds(self):
         # the clean tree INCLUDES launch/dryrun.py calling time.time()

@@ -17,6 +17,14 @@ is ``default_rng(<seed expression>)``, and generators must otherwise
 arrive as parameters (``rng: np.random.Generator``) or be derived from
 a config seed. Type references (``np.random.Generator`` annotations)
 are untouched — only *calls* are examined.
+
+The stdlib ``random`` module is held to the same discipline (extended
+for the jaxsim post-pass, ISSUE 8): module-level calls
+(``random.random()``, ``random.seed()``, ``random.gauss()``, …) draw
+from the interpreter-wide hidden stream, exactly the numpy bug class.
+The sanctioned shape is a threaded ``random.Random(<seed>)`` instance;
+an argument-less ``random.Random()`` seeds from OS entropy and is
+flagged like an unseeded ``default_rng()``.
 """
 from __future__ import annotations
 
@@ -48,9 +56,27 @@ class RngDiscipline(FileCheck):
     def run_file(self, rel: str, tree: ast.AST,
                  source: str) -> Iterator[Finding]:
         # local aliases of numpy.random.default_rng pulled in by
-        # ``from numpy.random import default_rng [as name]``
+        # ``from numpy.random import default_rng [as name]``, and of
+        # the stdlib random MODULE itself (``import random [as name]``)
+        # — tracking the import is what keeps Generator methods
+        # (``rng.random()``) and unrelated ``obj.random.x()`` attribute
+        # chains out of scope.
         rng_aliases: set[str] = set()
+        stdlib_aliases: set[str] = set()
         for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "random":
+                        stdlib_aliases.add(a.asname or a.name)
+            if isinstance(node, ast.ImportFrom) and node.module == "random":
+                for a in node.names:
+                    if a.name != "Random":
+                        yield Finding(
+                            rel, node.lineno, node.col_offset, _ID,
+                            f"import of random.{a.name}: the stdlib "
+                            "random module API draws from the "
+                            "interpreter-wide hidden stream; thread a "
+                            "seeded random.Random instance instead")
             if isinstance(node, ast.ImportFrom) \
                     and node.module == "numpy.random":
                 for a in node.names:
@@ -66,6 +92,26 @@ class RngDiscipline(FileCheck):
             if not isinstance(node, ast.Call):
                 continue
             name = dotted_name(node.func)
+            parts = name.split(".")
+            if len(parts) == 2 and parts[0] in stdlib_aliases:
+                if parts[1] == "Random":
+                    if not node.args and not node.keywords:
+                        yield Finding(
+                            rel, node.lineno, node.col_offset, _ID,
+                            "unseeded random.Random(): seeds from OS "
+                            "entropy, so every run produces a fresh "
+                            "trace — pass a seed derived from the "
+                            "config (e.g. random.Random(config.seed))")
+                else:
+                    # module-level API and SystemRandom alike: hidden
+                    # global stream / OS entropy, never reproducible
+                    yield Finding(
+                        rel, node.lineno, node.col_offset, _ID,
+                        f"call to {name}: stdlib random module API uses "
+                        "the interpreter-wide hidden stream and breaks "
+                        "golden-digest determinism; use a threaded, "
+                        "seeded random.Random instance")
+                continue
             if name in rng_aliases or name.endswith(".default_rng"):
                 tail = name.split(".")
                 if len(tail) >= 3 and tail[-2] != "random":

@@ -27,9 +27,11 @@ SCOPES = ("src/repro/core/", "src/repro/control/")
 ALLOWLIST = ("src/repro/launch/dryrun.py", "benchmarks/")
 
 # functions of the ``time`` module that read a host clock
+# (clock_gettime added with the jaxsim wall, ISSUE 8: a scan post-pass
+# timing itself with CLOCK_MONOTONIC is still a host clock)
 _TIME_FNS = {"time", "time_ns", "monotonic", "monotonic_ns",
              "perf_counter", "perf_counter_ns", "process_time",
-             "process_time_ns"}
+             "process_time_ns", "clock_gettime", "clock_gettime_ns"}
 # zero-arg-ish constructors on datetime/date that read the host clock
 _DATETIME_FNS = {"now", "utcnow", "today"}
 
