@@ -58,6 +58,7 @@ from __future__ import annotations
 import dataclasses
 from typing import ClassVar, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -182,10 +183,105 @@ class RoutingPolicyBase:
         # Pallas-path Erlang table, rebuilt only when replica counts move
         self._erlang_table = None
         self._erlang_key: Optional[tuple] = None
+        # device-resident candidate columns (ISSUE 9 satellite): the six
+        # static columns upload ONCE per policy, n re-uploads only when a
+        # replica count moves — previously every flush re-ran
+        # jnp.asarray on all seven. host_uploads counts column uploads
+        # so the churn regression test can pin the invariant.
+        self._dev_cols: Optional[dict] = None
+        self._n_key: Optional[tuple] = None
+        self.host_uploads: int = 0
 
     @property
     def deps(self) -> list[Deployment]:
         return self.table.deps
+
+    # ---------------- fused-backend plumbing --------------------------- #
+    @property
+    def fused(self) -> bool:
+        """True when the whole window decision runs on the fused kernel
+        path (ISSUE 9 tentpole) rather than score-matrix + Python."""
+        return self.cfg.backend in ("pallas", "pallas-interpret")
+
+    def _impl(self) -> str:
+        """ops-dispatch impl for this backend: interpret kernels for
+        ``pallas-interpret``; real Pallas lowering on a TPU host, the
+        jitted oracle otherwise (``backend="pallas"`` now *works* on CPU
+        instead of crashing in lowering — same fused single-launch
+        decision, XLA-compiled)."""
+        if self.cfg.backend == "pallas-interpret":
+            return "interp"
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+    def _device_static(self) -> dict:
+        """The candidate table's device residency (see __init__)."""
+        tbl = self.table
+        if self._dev_cols is None:
+            self._dev_cols = {
+                "alpha": jnp.asarray(tbl.alpha), "beta": jnp.asarray(tbl.beta),
+                "gamma": jnp.asarray(tbl.gamma), "mu": jnp.asarray(tbl.mu),
+                "rtt": jnp.asarray(tbl.rtt), "cost": jnp.asarray(tbl.cost),
+            }
+            self.host_uploads += 6
+        n = tbl.n()
+        key = tuple(int(x) for x in n)
+        if self._n_key != key:
+            self._dev_cols["n"] = jnp.asarray(n)
+            self._n_key = key
+            self.host_uploads += 1
+        return self._dev_cols
+
+    def _erlang(self):
+        """(I, T) Erlang-C wait table memo, keyed like the n column."""
+        tbl = self.table
+        n = tbl.n()
+        key = tuple(int(x) for x in n)
+        if self._erlang_key != key:
+            from repro.kernels.routing_score import build_erlang_table
+            self._erlang_table = build_erlang_table(
+                tbl.mu, n.astype(np.int64), t=self.cfg.erlang_table_size)
+            self._erlang_key = key
+        return self._erlang_table
+
+    def _pad_block(self, r: int) -> tuple[int, int]:
+        """(block_r, padded rows) for a window of r requests: rows pad to
+        the next power of two (>= 8) capped at ``cfg.block_r``, so the
+        jitted/interpret launches see a handful of bucketed shapes across
+        arbitrary flush sizes instead of one compile per batch size."""
+        p2 = 1 << max(3, (r - 1).bit_length())
+        block = min(self.cfg.block_r, p2)
+        return block, ((r + block - 1) // block) * block
+
+    def _fused_rows(self, lam: np.ndarray, slo: np.ndarray,
+                    mask: np.ndarray):
+        """Per-flush device inputs for the fused kernels: lane masks fold
+        into the SLO rows (excluded candidate -> slo = -1, infeasible
+        since g >= 0), rows pad to the shape bucket. Returns
+        (lam (P, I) device, slo (P, I) device, r, block_r)."""
+        slo_eff = np.where(mask, slo, np.float32(-1.0)).astype(np.float32)
+        r = lam.shape[0]
+        block, padded = self._pad_block(r)
+        if padded > r:
+            zrow = np.zeros((padded - r, lam.shape[1]), np.float32)
+            lam = np.concatenate([lam.astype(np.float32), zrow], axis=0)
+            slo_eff = np.concatenate([slo_eff, zrow], axis=0)
+        return (jnp.asarray(lam, jnp.float32), jnp.asarray(slo_eff),
+                r, block)
+
+    def _fused_topk(self, lam: np.ndarray, slo: np.ndarray,
+                    mask: np.ndarray, k: int, margin: float = 0.0):
+        """Whole-window top-k decision in one fused launch: route_best
+        primary in column 0, the next k-1 feasible candidates ascending
+        by g (headroom-gated by ``margin``) after it, -1 padding.
+        Returns host (idx (R, k), g (R, k), ok (R,))."""
+        from repro.kernels import ops
+        cols = self._device_static()
+        lam_d, slo_d, r, block = self._fused_rows(lam, slo, mask)
+        idx, g, ok = ops.routing_topk(
+            lam_d, cols["alpha"], cols["beta"], cols["gamma"], cols["mu"],
+            cols["n"], cols["rtt"], slo_d, cols["cost"], self._erlang(),
+            k=k, margin=float(margin), impl=self._impl(), block_r=block)
+        return np.asarray(idx)[:r], np.asarray(g)[:r], np.asarray(ok)[:r]
 
     # ---------------- strategy hook ----------------------------------- #
     def decide(self, reqs: list[Request], t_now: float) -> WindowDecision:
@@ -224,16 +320,15 @@ class RoutingPolicyBase:
         Returns (idx (R,), ok (R,), g_best (R,) or None, g (R, I) or
         None) — exactly one of g_best/g is provided, depending on the
         backend."""
-        tbl = self.table
-        if self.cfg.backend in ("pallas", "pallas-interpret"):
+        if self.fused:
             idx, g_best, ok = self._pallas_select(lam, slo, mask)
             return idx, ok, g_best, None
         # the scores stay on device between score and select — pulling
         # them to host in between costs a full round trip per flush
+        cols = self._device_static()
         g = score_instances_batch(
-            jnp.asarray(lam), jnp.asarray(tbl.alpha), jnp.asarray(tbl.beta),
-            jnp.asarray(tbl.gamma), jnp.asarray(tbl.mu),
-            jnp.asarray(tbl.n()), jnp.asarray(tbl.rtt))
+            jnp.asarray(lam), cols["alpha"], cols["beta"], cols["gamma"],
+            cols["mu"], cols["n"], cols["rtt"])
         idx, ok = self.select_batch(g, slo, mask)
         return idx, ok, None, np.asarray(g)
 
@@ -244,7 +339,7 @@ class RoutingPolicyBase:
         through without a transfer). The ONE selection semantics every
         strategy shares. Returns (idx (R,), ok (R,))."""
         idx, ok = select_instance_batch(jnp.asarray(g), jnp.asarray(slo),
-                                        jnp.asarray(self.table.cost),
+                                        self._device_static()["cost"],
                                         jnp.asarray(mask))
         return np.asarray(idx), np.asarray(ok)
 
@@ -263,14 +358,12 @@ class RoutingPolicyBase:
 
     def score_matrix(self, lam: np.ndarray) -> np.ndarray:
         """(R, I) predicted-latency matrix through the vmap scorer — the
-        semantics reference every strategy shares (the fused Pallas path
-        is a route_best-only optimisation; guard/redundancy strategies
-        need the full matrix)."""
-        tbl = self.table
+        semantics reference every strategy shares, and the fallback path
+        for strategies running without a fused backend."""
+        cols = self._device_static()
         return np.asarray(score_instances_batch(
-            jnp.asarray(lam), jnp.asarray(tbl.alpha), jnp.asarray(tbl.beta),
-            jnp.asarray(tbl.gamma), jnp.asarray(tbl.mu),
-            jnp.asarray(tbl.n()), jnp.asarray(tbl.rtt)))
+            jnp.asarray(lam), cols["alpha"], cols["beta"], cols["gamma"],
+            cols["mu"], cols["n"], cols["rtt"]))
 
     def score_row(self, lam_row: np.ndarray) -> np.ndarray:
         """(I,) scores for one request — the engine-overflow re-score
@@ -285,30 +378,13 @@ class RoutingPolicyBase:
         restrictions fold into the SLO rows — an excluded candidate gets
         slo = -1, and g >= 0 always, so it is infeasible exactly as the
         vmap path's ``(g <= slo) & mask``."""
-        from repro.kernels.routing_score import (build_erlang_table,
-                                                 routing_score)
-        tbl = self.table
-        n = tbl.n()
-        key = tuple(int(x) for x in n)
-        if self._erlang_key != key:
-            self._erlang_table = build_erlang_table(
-                tbl.mu, n.astype(np.int64), t=self.cfg.erlang_table_size)
-            self._erlang_key = key
-        slo_eff = np.where(mask, slo, np.float32(-1.0)).astype(np.float32)
-        r = lam.shape[0]
-        block = min(self.cfg.block_r, r)
-        pad = (-r) % block
-        if pad:
-            zrow = np.zeros((pad, lam.shape[1]), np.float32)
-            lam = np.concatenate([lam.astype(np.float32), zrow], axis=0)
-            slo_eff = np.concatenate([slo_eff, zrow], axis=0)
-        idx, g_best, ok = routing_score(
-            jnp.asarray(lam, jnp.float32), jnp.asarray(tbl.alpha),
-            jnp.asarray(tbl.beta), jnp.asarray(tbl.gamma),
-            jnp.asarray(tbl.mu), jnp.asarray(n), jnp.asarray(tbl.rtt),
-            jnp.asarray(slo_eff), jnp.asarray(tbl.cost), self._erlang_table,
-            block_r=block,
-            interpret=(self.cfg.backend == "pallas-interpret"))
+        from repro.kernels import ops
+        cols = self._device_static()
+        lam_d, slo_d, r, block = self._fused_rows(lam, slo, mask)
+        idx, g_best, ok = ops.routing_score(
+            lam_d, cols["alpha"], cols["beta"], cols["gamma"], cols["mu"],
+            cols["n"], cols["rtt"], slo_d, cols["cost"], self._erlang(),
+            impl=self._impl(), block_r=block)
         return (np.asarray(idx)[:r], np.asarray(g_best)[:r],
                 np.asarray(ok)[:r])
 

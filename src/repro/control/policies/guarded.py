@@ -36,27 +36,63 @@ class GuardedAlgorithm1Policy(RoutingPolicyBase):
 
     name = "guarded_alg1"
 
+    def _fused_guard(self, lam: np.ndarray, tau: np.ndarray,
+                     home: np.ndarray, up: np.ndarray):
+        """Score + guard + pick in ONE ``routing_guard`` launch (ISSUE 9
+        tentpole) — no (R, I) matrix ever reaches the host. Padded rows
+        carry up = -1 so the guard holds them home; they are sliced off.
+        Returns host (primary (R,) int64, g_sel (R,), offload (R,))."""
+        from repro.kernels import ops
+        import jax.numpy as jnp
+        cols = self._device_static()
+        r = lam.shape[0]
+        block, padded = self._pad_block(r)
+        lam32 = lam.astype(np.float32)
+        tau32 = tau.astype(np.float32)
+        home32 = home.astype(np.int32)
+        up32 = up.astype(np.int32)
+        if padded > r:
+            pad = padded - r
+            lam32 = np.concatenate(
+                [lam32, np.zeros((pad, lam.shape[1]), np.float32)])
+            tau32 = np.concatenate([tau32, np.zeros(pad, np.float32)])
+            home32 = np.concatenate([home32, np.zeros(pad, np.int32)])
+            up32 = np.concatenate([up32, np.full(pad, -1, np.int32)])
+        idx, g_sel, off = ops.routing_guard(
+            jnp.asarray(lam32), cols["alpha"], cols["beta"], cols["gamma"],
+            cols["mu"], cols["n"], cols["rtt"], jnp.asarray(tau32),
+            jnp.asarray(home32), jnp.asarray(up32), self._erlang(),
+            impl=self._impl(), block_r=block)
+        return (np.asarray(idx)[:r].astype(np.int64),
+                np.asarray(g_sel)[:r], np.asarray(off)[:r])
+
     def decide(self, reqs: list[Request], t_now: float) -> WindowDecision:
         lam = self.lam_matrix(reqs, t_now)
         slo = self.slo_rows(reqs)
         mask = self.mask_rows(reqs)
-        # the guard needs the full score matrix (home AND upstream
-        # columns), so every backend goes through the vmap scorer — the
-        # fused Pallas score+select is a route_best-only optimisation.
-        g = self.score_matrix(lam)
 
         tbl = self.table
         rows = np.arange(len(reqs))
         home = np.array([self.home_index(rq) for rq in reqs], np.int64)
         up = tbl.upstream[home]                       # -1 at the top tier
-        g_home = g[rows, home]
-        # controllable latency: strip the tier RTT except for the BIG
-        # (unstable-pool) sentinel, which must stay above any tau
-        g_inst = np.where(g_home < np.float32(BIG),
-                          g_home - tbl.rtt[home], g_home)
         tau = slo[rows, home]
-        offload = (g_inst > tau) & (up >= 0)          # Alg. 1 line 10
-        primary = np.where(offload, up, home)
+        if self.fused:
+            # whole decision in one kernel launch; the plane re-scores
+            # lazily through score_row on the rare engine-overflow path
+            primary, g_sel, offload = self._fused_guard(lam, tau, home, up)
+            g = None
+            predicted = g_sel.astype(np.float64)
+        else:
+            # vmap fallback: full score matrix, then the vectorised guard
+            g = self.score_matrix(lam)
+            g_home = g[rows, home]
+            # controllable latency: strip the tier RTT except for the BIG
+            # (unstable-pool) sentinel, which must stay above any tau
+            g_inst = np.where(g_home < np.float32(BIG),
+                              g_home - tbl.rtt[home], g_home)
+            offload = (g_inst > tau) & (up >= 0)      # Alg. 1 line 10
+            primary = np.where(offload, up, home)
+            predicted = g[rows, primary].astype(np.float64)
         # Alg. 1 line 7: the request ARRIVES at its home instance before
         # the guard protects it, so the home tier's telemetry must see
         # the arrival even when the request then offloads — otherwise
@@ -67,7 +103,6 @@ class GuardedAlgorithm1Policy(RoutingPolicyBase):
         deps = self.deps
         for r in np.flatnonzero(offload):
             self.router.tel(deps[int(home[r])].key).on_arrival(t_now)
-        predicted = g[rows, primary].astype(np.float64)
         # feasible=False everywhere: guarded requests bind straight
         # through the upstream cascade (home or one hop up) — Algorithm 1
         # has no feasible-alternates argmin to fall back on.

@@ -60,19 +60,61 @@ class ReliableSloPolicy(RoutingPolicyBase):
              for t in tiers], np.float64)
         self._avail = np.array(
             [1.0 - cfg.link_loss.get(t, 0.0) for t in tiers], np.float64)
+        # fused-path device residency of the distribution columns (built
+        # lazily on the first fused flush)
+        self._dist_cols = None
+
+    def _fused_attain(self, lam: np.ndarray, slo: np.ndarray,
+                      mask: np.ndarray, k: int, margin: float):
+        """Whole-window attainment-argmax decision in one
+        ``routing_attain`` launch: primary = argmax of the
+        delivery-weighted attainment probability, duplicate columns
+        headroom-gated, the (R, I) matrix device-only. Returns host
+        (idx (R, k), g (R, k), ok (R,))."""
+        from repro.kernels import ops
+        import jax.numpy as jnp
+        if self._dist_cols is None:
+            self._dist_cols = (jnp.asarray(self._sigma, jnp.float32),
+                               jnp.asarray(self._avail, jnp.float32))
+            self.host_uploads += 2
+        sigma, avail = self._dist_cols
+        cols = self._device_static()
+        lam_d, slo_d, r, block = self._fused_rows(lam, slo, mask)
+        idx, g, ok = ops.routing_attain(
+            lam_d, cols["alpha"], cols["beta"], cols["gamma"], cols["mu"],
+            cols["n"], cols["rtt"], slo_d, sigma, avail, self._erlang(),
+            k=k, margin=float(margin), impl=self._impl(), block_r=block)
+        return np.asarray(idx)[:r], np.asarray(g)[:r], np.asarray(ok)[:r]
 
     def decide(self, reqs: list[Request], t_now: float) -> WindowDecision:
         lam = self.lam_matrix(reqs, t_now)
         slo = self.slo_rows(reqs)
         mask = self.mask_rows(reqs)
-        # attainment needs the full (R, I) matrix, like safetail's top-k
-        g = self.score_matrix(lam)
-        p = self._avail[None, :] * slo_attain_prob(
-            g, self._sigma[None, :], slo)
-
         k_extra = max(int(self.cfg.redundancy) - 1, 0)
         margin = float(self.cfg.headroom_margin)
         r_n = len(reqs)
+
+        if self.fused:
+            idx_k, g_k, ok = self._fused_attain(lam, slo, mask,
+                                                k=k_extra + 1, margin=margin)
+            feasible = np.asarray(ok, bool).copy()
+            primary = idx_k[:, 0].astype(np.int64)
+            offload = np.zeros(r_n, bool)
+            predicted = g_k[:, 0].astype(np.float64)
+            for r in np.flatnonzero(~feasible):
+                primary[r], offload[r] = self.cheapest_lane_upstream(mask[r])
+            duplicates = tuple(
+                tuple(int(j) for j in row if j >= 0)
+                for row in idx_k[:, 1:])
+            return WindowDecision(primary=primary, feasible=feasible,
+                                  offload=offload, predicted=predicted,
+                                  lam=lam, slo=slo, mask=mask, g=None,
+                                  duplicates=duplicates)
+
+        # vmap fallback: attainment over the full (R, I) matrix
+        g = self.score_matrix(lam)
+        p = self._avail[None, :] * slo_attain_prob(
+            g, self._sigma[None, :], slo)
         primary = np.zeros(r_n, np.int64)
         offload = np.zeros(r_n, bool)
         feasible = np.zeros(r_n, bool)

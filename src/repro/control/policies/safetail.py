@@ -44,18 +44,42 @@ class SafeTailRedundantPolicy(RoutingPolicyBase):
         lam = self.lam_matrix(reqs, t_now)
         slo = self.slo_rows(reqs)
         mask = self.mask_rows(reqs)
-        # redundancy needs the full (R, I) matrix for the top-k scan, so
-        # score through the vmap path and select on the same scores.
+        k_extra = max(int(self.cfg.redundancy) - 1, 0)
+        r_n = len(reqs)
+
+        if self.fused:
+            # primary + every duplicate column in ONE routing_topk
+            # launch (ISSUE 9): the (R, I) matrix never reaches the
+            # host, only the (R, k) winners do.
+            idx_k, g_k, ok = self._fused_topk(lam, slo, mask,
+                                              k=k_extra + 1)
+            feasible = np.asarray(ok, bool).copy()
+            primary = idx_k[:, 0].astype(np.int64)
+            offload = np.zeros(r_n, bool)
+            # column 0 of g_k is the winner's g on feasible rows and the
+            # row-min score on infeasible rows — the same predicted
+            # fallback the vmap loop computes
+            predicted = g_k[:, 0].astype(np.float64)
+            for r in np.flatnonzero(~feasible):
+                # route_best's infeasible fallback, no duplicates
+                primary[r], offload[r] = self.cheapest_lane_upstream(mask[r])
+            duplicates = tuple(
+                tuple(int(j) for j in row if j >= 0)
+                for row in idx_k[:, 1:])
+            return WindowDecision(primary=primary, feasible=feasible,
+                                  offload=offload, predicted=predicted,
+                                  lam=lam, slo=slo, mask=mask, g=None,
+                                  duplicates=duplicates)
+
+        # vmap fallback: full (R, I) matrix, then the per-row top-k scan
         g = self.score_matrix(lam)
         idx, ok = self.select_batch(g, slo, mask)
 
-        k_extra = max(int(self.cfg.redundancy) - 1, 0)
-        r_n = len(reqs)
         primary = np.zeros(r_n, np.int64)
         offload = np.zeros(r_n, bool)
         predicted = np.zeros(r_n, np.float64)
         feasible = np.asarray(ok, bool).copy()
-        duplicates: list[tuple] = []
+        dups: list[tuple] = []
         for r in range(r_n):
             if feasible[r]:
                 p = int(idx[r])
@@ -64,16 +88,16 @@ class SafeTailRedundantPolicy(RoutingPolicyBase):
                 if k_extra:
                     feas = np.flatnonzero((g[r] <= slo[r]) & mask[r])
                     feas = feas[np.argsort(g[r][feas], kind="stable")]
-                    duplicates.append(tuple(
+                    dups.append(tuple(
                         int(j) for j in feas if int(j) != p)[:k_extra])
                 else:
-                    duplicates.append(())
+                    dups.append(())
             else:
                 # route_best's infeasible fallback, no duplicates
                 primary[r], offload[r] = self.cheapest_lane_upstream(mask[r])
                 predicted[r] = float(np.min(g[r]))
-                duplicates.append(())
+                dups.append(())
         return WindowDecision(primary=primary, feasible=feasible,
                               offload=offload, predicted=predicted,
                               lam=lam, slo=slo, mask=mask, g=g,
-                              duplicates=tuple(duplicates))
+                              duplicates=tuple(dups))

@@ -60,6 +60,7 @@ import numpy as np
 from repro.core.catalogue import Cluster
 from repro.core.router import BIG, RouterParams, select_instance_batch
 from repro.core.workload import Arrival
+from repro.kernels.routing_decide import apply_guard
 
 __all__ = ["simulate", "TOLERANCES"]
 
@@ -269,12 +270,13 @@ def _scan(consts: dict, carry0: tuple, xs: tuple, st: _Static):
             lam_c = droll_d / st.window + smear
             g = score(lam_c, n_route, consts["rtt"])
             if st.mode == "guarded_alg1":
+                # ONE guard surface with the fused routing_guard kernel
+                # and guarded.decide (routing_decide.apply_guard): the
+                # scan twin cannot drift from the event loop on Alg. 1
                 hidx = consts["home_s"]
-                g_home = g[hidx]
-                g_inst = jnp.where(g_home < jnp.float32(BIG),
-                                   g_home - consts["rtt"][hidx], g_home)
-                off_s = (g_inst > consts["tau_s"]) & consts["has_up_s"]
-                target = jnp.where(off_s, consts["up_s"], hidx)
+                target, off_s = apply_guard(
+                    g[hidx], consts["rtt"][hidx], consts["tau_s"],
+                    consts["up_s"], consts["has_up_s"], hidx)
             else:                                  # route_best
                 S = consts["home_s"].shape[0]
                 gm = jnp.broadcast_to(g[None, :], (S, I))

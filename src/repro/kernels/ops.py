@@ -99,12 +99,73 @@ def ssd_scan(x, dt, a, b, c, d_skip, initial_state=None,
 
 
 def routing_score(lam, alpha, beta, gamma, mu, n, rtt, slo, cost,
-                  erlang_c_table, impl: Optional[str] = None):
+                  erlang_c_table, impl: Optional[str] = None,
+                  block_r: int = 256):
     """Batched LA-IMR routing decisions. See kernels.ref.routing_score."""
     mode = _resolve(impl)
     if mode in ("ref", "fused"):
-        return _ref.routing_score(lam, alpha, beta, gamma, mu, n, rtt, slo,
-                                  cost, erlang_c_table)
+        return _jit_ref_routing_score(lam, alpha, beta, gamma, mu, n, rtt,
+                                      slo, cost, erlang_c_table)
     from repro.kernels import routing_score as rs
     return rs.routing_score(lam, alpha, beta, gamma, mu, n, rtt, slo, cost,
-                            erlang_c_table, interpret=(mode == "interp"))
+                            erlang_c_table, block_r=block_r,
+                            interpret=(mode == "interp"))
+
+
+def routing_guard(lam, alpha, beta, gamma, mu, n, rtt, tau, home, up,
+                  erlang_c_table, impl: Optional[str] = None,
+                  block_r: int = 256):
+    """Fused Algorithm-1 guarded routing. See kernels.ref.routing_guard."""
+    mode = _resolve(impl)
+    if mode in ("ref", "fused"):
+        return _jit_ref_routing_guard(lam, alpha, beta, gamma, mu, n, rtt,
+                                      tau, home, up, erlang_c_table)
+    from repro.kernels import routing_decide as rd
+    return rd.routing_guard(lam, alpha, beta, gamma, mu, n, rtt, tau, home,
+                            up, erlang_c_table, block_r=block_r,
+                            interpret=(mode == "interp"))
+
+
+def routing_topk(lam, alpha, beta, gamma, mu, n, rtt, slo, cost,
+                 erlang_c_table, k: int = 2, margin: float = 0.0,
+                 impl: Optional[str] = None, block_r: int = 256):
+    """Fused top-k feasible select. See kernels.ref.routing_topk."""
+    mode = _resolve(impl)
+    if mode in ("ref", "fused"):
+        return _jit_ref_routing_topk(lam, alpha, beta, gamma, mu, n, rtt,
+                                     slo, cost, erlang_c_table, k=k,
+                                     margin=margin)
+    from repro.kernels import routing_decide as rd
+    return rd.routing_topk(lam, alpha, beta, gamma, mu, n, rtt, slo, cost,
+                           erlang_c_table, k=k, margin=margin,
+                           block_r=block_r, interpret=(mode == "interp"))
+
+
+def routing_attain(lam, alpha, beta, gamma, mu, n, rtt, slo, sigma, avail,
+                   erlang_c_table, k: int = 2, margin: float = 0.0,
+                   impl: Optional[str] = None, block_r: int = 256):
+    """Fused attainment-argmax select. See kernels.ref.routing_attain."""
+    mode = _resolve(impl)
+    if mode in ("ref", "fused"):
+        return _jit_ref_routing_attain(lam, alpha, beta, gamma, mu, n, rtt,
+                                       slo, sigma, avail, erlang_c_table,
+                                       k=k, margin=margin)
+    from repro.kernels import routing_decide as rd
+    return rd.routing_attain(lam, alpha, beta, gamma, mu, n, rtt, slo,
+                             sigma, avail, erlang_c_table, k=k,
+                             margin=margin, block_r=block_r,
+                             interpret=(mode == "interp"))
+
+
+# jitted oracle paths: the routing ops sit on the per-window hot path of
+# the control plane, where retracing the pure-jnp oracle per flush would
+# dominate the decision cost. k/margin are static (they shape the
+# outputs); array shapes are bucketed by the caller (pow2 padding).
+import jax as _jax  # noqa: E402  (after the _ref import by design)
+
+_jit_ref_routing_score = _jax.jit(_ref.routing_score)
+_jit_ref_routing_guard = _jax.jit(_ref.routing_guard)
+_jit_ref_routing_topk = _jax.jit(_ref.routing_topk,
+                                 static_argnames=("k", "margin"))
+_jit_ref_routing_attain = _jax.jit(_ref.routing_attain,
+                                   static_argnames=("k", "margin"))

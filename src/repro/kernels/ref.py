@@ -151,6 +151,42 @@ def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
     return y
 
 
+# unstable-pool sentinel the vmap scorer emits (== repro.core.router.BIG)
+_UNSTABLE_G = 1e9
+
+
+def _table_scores(lam: jax.Array, alpha: jax.Array, beta: jax.Array,
+                  gamma: jax.Array, mu: jax.Array, n: jax.Array,
+                  rtt: jax.Array, erlang_c_table: jax.Array):
+    """(g, rho) over the (R, I) decision matrix with Erlang-C queueing
+    read from the precomputed table (gather + linear interpolation on
+    the rho grid — the structural twin of the kernels' hat-function
+    contraction). Shared by every routing oracle below."""
+    T = erlang_c_table.shape[1]
+    lam_ = lam.astype(jnp.float32)            # (R,) or per-candidate (R, I)
+    if lam_.ndim == 1:
+        lam_ = lam_[:, None]                                    # (R, 1)
+    lam_tilde = lam_ / jnp.maximum(n[None, :], 1.0)
+    proc = alpha[None, :] + beta[None, :] * jnp.power(
+        jnp.maximum(lam_tilde, 0.0), gamma[None, :])
+    rho = lam_ / jnp.maximum(n[None, :] * mu[None, :], 1e-12)   # (R, I)
+    # table lookup with linear interpolation on the rho grid
+    pos = jnp.clip(rho, 0.0, 1.0) * (T - 1)
+    lo = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, T - 2)
+    frac = pos - lo.astype(jnp.float32)
+    tbl = erlang_c_table.astype(jnp.float32)
+    # gather per (r, i): table[i, lo[r, i]]
+    q_lo = jax.vmap(lambda l_row: tbl[jnp.arange(tbl.shape[0]), l_row])(lo)
+    q_hi = jax.vmap(lambda l_row: tbl[jnp.arange(tbl.shape[0]), l_row + 1])(lo)
+    q = q_lo * (1 - frac) + q_hi * frac
+    return proc + rtt[None, :] + q, rho
+
+
+def _slo_rows(slo: jax.Array) -> jax.Array:
+    slo_ = slo.astype(jnp.float32)
+    return slo_[None, :] if slo_.ndim == 1 else slo_
+
+
 def routing_score(lam: jax.Array, alpha: jax.Array, beta: jax.Array,
                   gamma: jax.Array, mu: jax.Array, n: jax.Array,
                   rtt: jax.Array, slo: jax.Array, cost: jax.Array,
@@ -168,27 +204,9 @@ def routing_score(lam: jax.Array, alpha: jax.Array, beta: jax.Array,
     erlang_c_table: (I, T) — per-deployment expected wait at rho grid
     points rho = linspace(0, 1, T) (last entries may be large/BIG).
     """
-    T = erlang_c_table.shape[1]
-    lam_ = lam.astype(jnp.float32)            # (R,) or per-candidate (R, I)
-    if lam_.ndim == 1:
-        lam_ = lam_[:, None]                                    # (R, 1)
-    slo_ = slo.astype(jnp.float32)
-    if slo_.ndim == 1:
-        slo_ = slo_[None, :]                                    # (1, I)
-    lam_tilde = lam_ / jnp.maximum(n[None, :], 1.0)
-    proc = alpha[None, :] + beta[None, :] * jnp.power(
-        jnp.maximum(lam_tilde, 0.0), gamma[None, :])
-    rho = lam_ / jnp.maximum(n[None, :] * mu[None, :], 1e-12)   # (R, I)
-    # table lookup with linear interpolation on the rho grid
-    pos = jnp.clip(rho, 0.0, 1.0) * (T - 1)
-    lo = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, T - 2)
-    frac = pos - lo.astype(jnp.float32)
-    tbl = erlang_c_table.astype(jnp.float32)
-    # gather per (r, i): table[i, lo[r, i]]
-    q_lo = jax.vmap(lambda l_row: tbl[jnp.arange(tbl.shape[0]), l_row])(lo)
-    q_hi = jax.vmap(lambda l_row: tbl[jnp.arange(tbl.shape[0]), l_row + 1])(lo)
-    q = q_lo * (1 - frac) + q_hi * frac
-    g = proc + rtt[None, :] + q
+    slo_ = _slo_rows(slo)
+    g, rho = _table_scores(lam, alpha, beta, gamma, mu, n, rtt,
+                           erlang_c_table)
     feasible = (rho < 1.0) & (g <= slo_)
     g_masked = jnp.where(feasible, g, jnp.inf)
     gmin = jnp.min(g_masked, axis=1, keepdims=True)
@@ -197,3 +215,118 @@ def routing_score(lam: jax.Array, alpha: jax.Array, beta: jax.Array,
     any_ok = jnp.any(feasible, axis=1)
     best_g = jnp.take_along_axis(g, idx[:, None], axis=1)[:, 0]
     return idx, best_g, any_ok
+
+
+def routing_guard(lam: jax.Array, alpha: jax.Array, beta: jax.Array,
+                  gamma: jax.Array, mu: jax.Array, n: jax.Array,
+                  rtt: jax.Array, tau: jax.Array, home: jax.Array,
+                  up: jax.Array, erlang_c_table: jax.Array):
+    """Fused Algorithm-1 guarded routing. Oracle for ``routing_guard``.
+
+    Scores every candidate, gathers the per-request home column, strips
+    the home RTT from the controllable latency (except for the unstable
+    sentinel, which must stay above any tau) and offloads one hop up
+    when ``g_inst > tau`` and an upstream exists. tau: (R,) guard
+    budgets; home/up: (R,) int columns (up = -1 at the top tier).
+    Returns (chosen (R,) int32, g at chosen (R,), offloaded (R,) bool).
+    """
+    g, rho = _table_scores(lam, alpha, beta, gamma, mu, n, rtt,
+                           erlang_c_table)
+    g_eff = jnp.where(rho < 1.0, g, jnp.float32(_UNSTABLE_G))
+    home_ = home.astype(jnp.int32)
+    up_ = up.astype(jnp.int32)
+    g_home = jnp.take_along_axis(g_eff, home_[:, None], axis=1)[:, 0]
+    g_inst = jnp.where(g_home < jnp.float32(_UNSTABLE_G),
+                       g_home - rtt[home_], g_home)
+    off = (g_inst > tau.astype(jnp.float32)) & (up_ >= 0)
+    chosen = jnp.where(off, up_, home_)
+    g_sel = jnp.take_along_axis(g_eff, chosen[:, None], axis=1)[:, 0]
+    return chosen.astype(jnp.int32), g_sel, off
+
+
+def _dup_order(g: jax.Array, elig: jax.Array, ok: jax.Array, k: int):
+    """k - 1 duplicate columns from a stable ascending-g argsort over
+    the eligible set (ties to the lowest index) — the argsort twin of
+    the kernels' iterative masked argmin."""
+    order = jnp.argsort(jnp.where(elig, g, jnp.inf), axis=1)
+    cnt = elig.sum(axis=1)
+    cols, gcols = [], []
+    for j in range(1, k):
+        cj = order[:, j - 1]
+        valid = ok & (j - 1 < cnt)
+        cols.append(jnp.where(valid, cj, -1).astype(jnp.int32))
+        gcols.append(jnp.where(
+            valid, jnp.take_along_axis(g, cj[:, None], axis=1)[:, 0], 0.0))
+    return cols, gcols
+
+
+def _topk_outputs(g: jax.Array, rho: jax.Array, feasible: jax.Array,
+                  primary: jax.Array, gate: jax.Array, k: int):
+    ok = jnp.any(feasible, axis=1)
+    g_eff = jnp.where(rho < 1.0, g, jnp.float32(_UNSTABLE_G))
+    g_p = jnp.take_along_axis(g, primary[:, None], axis=1)[:, 0]
+    idx0 = jnp.where(ok, primary, -1).astype(jnp.int32)
+    g0 = jnp.where(ok, g_p, jnp.min(g_eff, axis=1))
+    cols_i = jnp.arange(g.shape[1])[None, :]
+    elig = feasible & gate & (cols_i != primary[:, None])
+    cols, gcols = _dup_order(g, elig, ok, k)
+    return (jnp.stack([idx0] + cols, axis=1),
+            jnp.stack([g0] + gcols, axis=1), ok)
+
+
+def routing_topk(lam: jax.Array, alpha: jax.Array, beta: jax.Array,
+                 gamma: jax.Array, mu: jax.Array, n: jax.Array,
+                 rtt: jax.Array, slo: jax.Array, cost: jax.Array,
+                 erlang_c_table: jax.Array, k: int = 2,
+                 margin: float = 0.0):
+    """Fused top-k select. Oracle for ``routing_topk``.
+
+    Column 0 is the route_best primary (SLO filter + latency argmin +
+    two-stage cost tie-break); columns 1..k-1 are the next feasible
+    candidates in ascending-g order, primary excluded and headroom-gated
+    by ``g <= slo - margin``, with -1 where fewer exist. Infeasible rows
+    report the row-min score in g column 0 (the predicted fallback).
+    """
+    slo_ = _slo_rows(slo)
+    g, rho = _table_scores(lam, alpha, beta, gamma, mu, n, rtt,
+                           erlang_c_table)
+    feasible = (rho < 1.0) & (g <= slo_)
+    g_masked = jnp.where(feasible, g, jnp.inf)
+    gmin = jnp.min(g_masked, axis=1, keepdims=True)
+    near = feasible & (g_masked <= gmin * (1.0 + 1e-5) + 1e-9)
+    primary = jnp.argmin(jnp.where(near, cost[None, :], jnp.inf), axis=1)
+    gate = g <= slo_ - jnp.float32(margin)
+    return _topk_outputs(g, rho, feasible, primary, gate, k)
+
+
+def routing_attain(lam: jax.Array, alpha: jax.Array, beta: jax.Array,
+                   gamma: jax.Array, mu: jax.Array, n: jax.Array,
+                   rtt: jax.Array, slo: jax.Array, sigma: jax.Array,
+                   avail: jax.Array, erlang_c_table: jax.Array,
+                   k: int = 2, margin: float = 0.0):
+    """Fused attainment-argmax select. Oracle for ``routing_attain``.
+
+    The primary maximises the delivery-weighted SLO-attainment
+    probability ``avail * Phi((ln slo - ln g) / (sigma * sqrt2))`` over
+    feasible candidates (f32 — the pinned decision precision); ties
+    within an absolute 1e-6 attainment band break toward lower g then
+    lower index, so the uniform-distribution case degrades to argmin g.
+    Duplicate columns as in :func:`routing_topk`.
+    """
+    slo_ = _slo_rows(slo)
+    g, rho = _table_scores(lam, alpha, beta, gamma, mu, n, rtt,
+                           erlang_c_table)
+    feasible = (rho < 1.0) & (g <= slo_)
+    z = (jnp.log(jnp.maximum(slo_, 1e-20))
+         - jnp.log(jnp.maximum(g, 1e-20))) \
+        / (jnp.maximum(sigma[None, :], 1e-20)
+           * jnp.float32(1.4142135623730951))
+    phi = 0.5 * (1.0 + jax.scipy.special.erf(jnp.clip(z, -10.0, 10.0)))
+    p = avail[None, :] * jnp.where(sigma[None, :] > 0.0, phi,
+                                   (g <= slo_).astype(jnp.float32))
+    p_masked = jnp.where(feasible, p, -1.0)
+    pmax = jnp.max(p_masked, axis=1, keepdims=True)
+    nearp = feasible & (p_masked >= pmax - jnp.float32(1e-6))
+    primary = jnp.argmin(jnp.where(nearp, g, jnp.inf), axis=1)
+    gate = g <= slo_ - jnp.float32(margin)
+    return _topk_outputs(g, rho, feasible, primary, gate, k)

@@ -1,0 +1,12 @@
+"""Known-bad decision-kernel module: routing_topk HAS its oracle twin
+but no pinning test anywhere in the test corpus, and apply_guard is a
+public helper with neither an oracle nor a suppression reason — both
+must be flagged."""
+
+
+def apply_guard(g, tau):
+    return [v > tau for v in g]
+
+
+def routing_topk(g, k=2):
+    return sorted(range(len(g)), key=g.__getitem__)[:k]

@@ -1,0 +1,12 @@
+"""Known-clean decision-kernel module (the ISSUE 9 shape): a public
+top-k entry point whose oracle twin shares its name, plus a shared
+guard helper that both sides consume — suppressed with a reason, which
+is the documented way to mark a non-kernel public function."""
+
+
+def apply_guard(g, tau):  # laimr-lint: disable=kernel-oracle -- shared guard arithmetic, not a kernel: both routing_topk and its oracle consume it and the pinning test exercises it
+    return [v > tau for v in g]
+
+
+def routing_topk(g, k=2):
+    return sorted(range(len(g)), key=g.__getitem__)[:k]

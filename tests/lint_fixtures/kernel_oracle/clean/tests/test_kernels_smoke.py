@@ -1,0 +1,11 @@
+"""Fast smoke pairing file: the kernel-oracle check consults this file
+as part of its test corpus (ISSUE 9) — routing_topk's pairing lives
+ONLY here, so the clean fixture fails loudly if the check stops
+reading it."""
+from repro.kernels import ref
+from repro.kernels.select_topk import routing_topk
+
+
+def test_topk_matches_oracle():
+    g = [3.0, 1.0, 2.0]
+    assert routing_topk(g, k=2) == ref.routing_topk(g, k=2)

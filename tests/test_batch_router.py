@@ -350,3 +350,108 @@ class TestPallasBackendParity:
             outcomes[backend] = [(d.outcome, d.target_key)
                                  for d in br.flush(0.1)]
         assert outcomes["vmap"] == outcomes["pallas-interpret"]
+
+
+def _decide(policy_name: str, backend: str, reqs, **cfg_kw):
+    """One WindowDecision from a fresh policy on a fresh router."""
+    from repro.control.policies import make_policy
+    from repro.core.router import Router
+    cl = two_tier()
+    pol = make_policy(policy_name, cl, Router(cl),
+                      AdmissionConfig(backend=backend, block_r=8, **cfg_kw))
+    return pol.decide(reqs, 0.1)
+
+
+@pytest.mark.slow
+class TestFusedPolicyParity:
+    """(ISSUE 9 tentpole) each policy's fused-kernel decide() must agree
+    with its vmap decide() field-for-field — primary, feasibility,
+    offload flags AND the duplicate tuples — on fresh-telemetry windows,
+    including the per-request SLO edge branches."""
+
+    SLO_CASES = (None, 5.0, 1e-6)
+
+    @pytest.mark.parametrize("slo", SLO_CASES)
+    def test_guarded_decisions_match(self, slo):
+        dv = _decide("guarded_alg1", "vmap", mk_reqs(12, slo=slo))
+        dp = _decide("guarded_alg1", "pallas-interpret",
+                     mk_reqs(12, slo=slo))
+        assert np.array_equal(dv.primary, dp.primary)
+        assert np.array_equal(dv.offload, dp.offload)
+        assert np.array_equal(dv.feasible, dp.feasible)
+        assert dp.g is None     # fused: no (R, I) matrix reached the host
+
+    @pytest.mark.parametrize("slo", SLO_CASES)
+    @pytest.mark.parametrize("redundancy", [1, 2, 3])
+    def test_safetail_decisions_and_duplicates_match(self, slo,
+                                                     redundancy):
+        dv = _decide("safetail", "vmap", mk_reqs(12, slo=slo),
+                     redundancy=redundancy)
+        dp = _decide("safetail", "pallas-interpret", mk_reqs(12, slo=slo),
+                     redundancy=redundancy)
+        assert np.array_equal(dv.primary, dp.primary)
+        assert np.array_equal(dv.feasible, dp.feasible)
+        assert np.array_equal(dv.offload, dp.offload)
+        assert dv.duplicates == dp.duplicates
+        assert dp.g is None
+
+    @pytest.mark.parametrize("slo", SLO_CASES)
+    @pytest.mark.parametrize("redundancy,margin", [(1, 0.0), (2, 0.0),
+                                                   (3, 0.2)])
+    def test_reliable_decisions_and_duplicates_match(self, slo,
+                                                     redundancy, margin):
+        kw = dict(redundancy=redundancy, headroom_margin=margin,
+                  link_loss={"edge": 0.0, "cloud": 0.05})
+        dv = _decide("reliable", "vmap", mk_reqs(12, slo=slo), **kw)
+        dp = _decide("reliable", "pallas-interpret", mk_reqs(12, slo=slo),
+                     **kw)
+        assert np.array_equal(dv.primary, dp.primary)
+        assert np.array_equal(dv.feasible, dp.feasible)
+        assert dv.duplicates == dp.duplicates
+        assert dp.g is None
+
+
+class TestDeviceColumnCache:
+    """(ISSUE 9 satellite) the candidate-table columns upload to device
+    ONCE per policy — repeated flushes must not re-run jnp.asarray on
+    the static columns, and only a replica-count change re-uploads n."""
+
+    def _policy(self, backend: str):
+        from repro.control.policies import make_policy
+        from repro.core.router import Router
+        cl = two_tier()
+        return make_policy("route_best", cl, Router(cl),
+                           AdmissionConfig(backend=backend, block_r=8))
+
+    @pytest.mark.parametrize("backend", ["vmap", "pallas-interpret"])
+    def test_static_columns_upload_once(self, backend):
+        pol = self._policy(backend)
+        assert pol.host_uploads == 0
+        for _ in range(5):
+            pol.decide(mk_reqs(4), 0.1)
+        # 6 static columns + 1 n column, regardless of flush count
+        assert pol.host_uploads == 7
+
+    def test_replica_change_reuploads_only_n(self):
+        pol = self._policy("vmap")
+        pol.decide(mk_reqs(4), 0.1)
+        assert pol.host_uploads == 7
+        pol.deps[0].n_replicas += 1
+        pol.decide(mk_reqs(4), 0.1)
+        assert pol.host_uploads == 8          # just the n column again
+        pol.decide(mk_reqs(4), 0.1)
+        assert pol.host_uploads == 8
+
+    def test_fused_guard_and_topk_share_the_cache(self):
+        from repro.control.policies import make_policy
+        from repro.core.router import Router
+        cl = two_tier()
+        for name in ("guarded_alg1", "safetail", "reliable"):
+            pol = make_policy(name, cl, Router(cl),
+                              AdmissionConfig(backend="pallas-interpret",
+                                              block_r=8, redundancy=2))
+            for _ in range(3):
+                pol.decide(mk_reqs(4), 0.1)
+            # 7 table columns (+2 distribution columns for reliable)
+            want = 9 if name == "reliable" else 7
+            assert pol.host_uploads == want, name

@@ -94,6 +94,20 @@ GOLDEN_WINDOWED = {
     ("burst", 0.1, "guarded_alg1"): dict(
         n=626, p50=1.0061975537910977, p99=3.5180977031426215,
         offload_fast=399),
+    # ISSUE 9: safetail/reliable windowed digests pinned (vmap-captured)
+    # so the fused kernel decisions have an exact wall to match.
+    ("ramp", 0.1, "safetail"): dict(
+        n=599, p50=0.3878116168755241, p99=1.0596894136743895,
+        offload_fast=78),
+    ("burst", 0.1, "safetail"): dict(
+        n=626, p50=0.7315342838806309, p99=3.470679008271632,
+        offload_fast=340),
+    ("ramp", 0.1, "reliable"): dict(
+        n=599, p50=0.3925731684935556, p99=1.0927808101906693,
+        offload_fast=78),
+    ("burst", 0.1, "reliable"): dict(
+        n=626, p50=0.795859417435981, p99=3.526403180628132,
+        offload_fast=340),
 }
 
 
@@ -225,6 +239,31 @@ class TestWindowedFaultsOffEquivalence:
         assert s["p50"] == pytest.approx(want["p50"], rel=1e-9)
         assert s["p99"] == pytest.approx(want["p99"], rel=1e-9)
         assert not res.failed and res.retried == 0
+
+
+@pytest.mark.slow
+class TestFusedBackendGoldenParity:
+    """(ISSUE 9 acceptance) with ``admission_backend="pallas-interpret"``
+    every registered policy's windowed run reproduces its vmap-path
+    golden digests bit-for-bit: the fused guard/top-k/attainment kernels
+    make the SAME decisions as the score-matrix + Python-loop path on
+    the pinned traces."""
+
+    @pytest.mark.parametrize("trace,window,policy",
+                             sorted(GOLDEN_WINDOWED))
+    def test_fused_interpret_matches_golden(self, trace, window, policy):
+        arr = trace_for(trace)
+        sim = ClusterSimulator(
+            two_tier(), SimConfig(mode="laimr", seed=11, slo=1.0,
+                                  admission_window=window, policy=policy,
+                                  admission_backend="pallas-interpret"))
+        res = sim.run(arr, horizon=500.0)
+        want = GOLDEN_WINDOWED[(trace, window, policy)]
+        s = res.summary()
+        assert int(s["n"]) == want["n"]
+        assert res.offload_fast == want["offload_fast"]
+        assert s["p50"] == pytest.approx(want["p50"], rel=1e-9)
+        assert s["p99"] == pytest.approx(want["p99"], rel=1e-9)
 
 
 class TestSimulatorAdapterConservation:

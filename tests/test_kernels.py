@@ -8,6 +8,8 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.routing_decide import (routing_attain, routing_guard,
+                                          routing_topk)
 from repro.kernels.routing_score import build_erlang_table, routing_score
 from repro.kernels.ssd_scan import ssd_scan
 
@@ -260,3 +262,269 @@ class TestRoutingScore:
             if feasible.any() and bool(rok[ridx]):
                 best = g_np[feasible].min()
                 assert abs(float(rg[ridx]) - best) / best < 0.05
+
+
+def _routing_setup(i, r, seed):
+    """Seeded candidate table + request rows for the fused decision
+    kernels (the TestRoutingScore idiom, plus guard columns)."""
+    rng = np.random.default_rng(seed)
+    p = dict(
+        alpha=jnp.asarray(rng.uniform(0.1, 1.0, i), jnp.float32),
+        beta=jnp.asarray(rng.uniform(0.1, 2.0, i), jnp.float32),
+        gamma=jnp.asarray(rng.uniform(0.9, 1.8, i), jnp.float32),
+        mu=jnp.asarray(rng.uniform(0.5, 3.0, i), jnp.float32),
+        n=jnp.asarray(rng.integers(1, 8, i), jnp.float32),
+        rtt=jnp.asarray(rng.uniform(0, 0.1, i), jnp.float32),
+    )
+    lam = jnp.asarray(rng.uniform(0.0, 10.0, r), jnp.float32)
+    table = build_erlang_table(np.asarray(p["mu"]), np.asarray(p["n"]))
+    return rng, lam, p, table
+
+
+class TestRoutingGuard:
+    """Fused Algorithm-1 guard kernel vs its ref.routing_guard oracle."""
+
+    @pytest.mark.parametrize("i,r", [(2, 64), (6, 256), (11, 128)])
+    def test_matches_ref(self, i, r):
+        rng, lam, p, table = _routing_setup(i, r, seed=20 + i)
+        tau = jnp.asarray(rng.uniform(0.1, 3.0, r), jnp.float32)
+        home = jnp.asarray(rng.integers(0, i, r), jnp.int32)
+        up = jnp.asarray(rng.integers(-1, i, r), jnp.int32)
+        gi, gg, goff = routing_guard(lam, *p.values(), tau, home, up,
+                                     table, block_r=64, interpret=True)
+        ri, rg, roff = ref.routing_guard(lam, *p.values(), tau, home, up,
+                                        table)
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+        np.testing.assert_array_equal(np.asarray(goff), np.asarray(roff))
+        np.testing.assert_allclose(np.asarray(gg), np.asarray(rg),
+                                   rtol=1e-4)
+
+    def test_tau_boundary_is_strict_in_both(self):
+        """Guard tau edge cases: lam = 0 makes g = alpha + rtt EXACTLY
+        in both implementations (no table interpolation error), so the
+        decision boundary can be pinned bitwise — tau == g_inst must NOT
+        offload (strict >), one f32 ulp below must."""
+        i, r = 3, 8
+        _, _, p, table = _routing_setup(i, r, seed=5)
+        lam = jnp.zeros(r, jnp.float32)
+        home = jnp.asarray(np.arange(r) % i, jnp.int32)
+        up = jnp.asarray((np.arange(r) + 1) % i, jnp.int32)
+        a = np.asarray(p["alpha"]); rt = np.asarray(p["rtt"])
+        h = np.asarray(home)
+        g_inst = (a[h].astype(np.float32) + rt[h].astype(np.float32)
+                  - rt[h].astype(np.float32))
+        for tau_np, want_off in (
+                (g_inst, False),                                   # == tau
+                (np.nextafter(g_inst, np.float32(-1.0)), True)):   # 1 ulp
+            tau = jnp.asarray(tau_np, jnp.float32)
+            gi, _, goff = routing_guard(lam, *p.values(), tau, home, up,
+                                        table, block_r=8, interpret=True)
+            ri, _, roff = ref.routing_guard(lam, *p.values(), tau, home,
+                                           up, table)
+            assert bool(jnp.all(goff == want_off))
+            assert bool(jnp.all(roff == want_off))
+            np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+
+    def test_top_tier_and_unstable_sentinel(self):
+        """up = -1 never offloads no matter how hot the home pool; an
+        unstable home (rho >= 1) carries the 1e9 sentinel with NO rtt
+        stripped, so it offloads for any tau < 1e9 but not tau >= 1e9 —
+        kernel and oracle must agree on all four corners."""
+        i, r = 2, 8
+        p = dict(
+            alpha=jnp.asarray([0.1, 0.1], jnp.float32),
+            beta=jnp.asarray([0.1, 0.1], jnp.float32),
+            gamma=jnp.asarray([1.0, 1.0], jnp.float32),
+            mu=jnp.asarray([0.01, 100.0], jnp.float32),  # col 0 unstable
+            n=jnp.asarray([1.0, 1.0], jnp.float32),
+            rtt=jnp.asarray([0.01, 0.02], jnp.float32),
+        )
+        table = build_erlang_table(np.asarray(p["mu"]), np.asarray(p["n"]))
+        lam = jnp.full(r, 5.0, jnp.float32)        # rho(col 0) >> 1
+        home = jnp.zeros(r, jnp.int32)
+        up = jnp.asarray([1, -1] * (r // 2), jnp.int32)
+        tau = jnp.asarray([0.5, 0.5, 1e9, 1e9] * (r // 4), jnp.float32)
+        gi, gg, goff = routing_guard(lam, *p.values(), tau, home, up,
+                                     table, block_r=8, interpret=True)
+        ri, rg, roff = ref.routing_guard(lam, *p.values(), tau, home, up,
+                                        table)
+        # offload ONLY where an upstream exists and tau < sentinel
+        want = np.array([True, False, False, False] * (r // 4))
+        np.testing.assert_array_equal(np.asarray(goff), want)
+        np.testing.assert_array_equal(np.asarray(roff), want)
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+        # the stayed-home rows report the sentinel, not a finite g
+        assert float(np.asarray(gg)[1]) == 1e9 == float(np.asarray(rg)[1])
+
+
+class TestRoutingTopK:
+    """Fused top-k select kernel vs its ref.routing_topk oracle."""
+
+    def _slo_cost(self, rng, i):
+        return (jnp.asarray(rng.uniform(1.0, 4.0, i), jnp.float32),
+                jnp.asarray(rng.uniform(1, 3, i), jnp.float32))
+
+    @pytest.mark.parametrize("i,r", [(2, 64), (6, 256), (11, 128)])
+    @pytest.mark.parametrize("k", [1, 2, 4])
+    def test_matches_ref(self, i, r, k):
+        rng, lam, p, table = _routing_setup(i, r, seed=40 + i)
+        slo, cost = self._slo_cost(rng, i)
+        gi, gg, gok = routing_topk(lam, *p.values(), slo, cost, table,
+                                   k=k, block_r=64, interpret=True)
+        ri, rg, rok = ref.routing_topk(lam, *p.values(), slo, cost, table,
+                                      k=k)
+        np.testing.assert_array_equal(np.asarray(gok), np.asarray(rok))
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+        np.testing.assert_allclose(np.asarray(gg), np.asarray(rg),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_margin_gates_duplicates(self):
+        rng, lam, p, table = _routing_setup(5, 64, seed=77)
+        slo, cost = self._slo_cost(rng, 5)
+        for margin in (0.0, 0.5, 2.0):
+            gi, _, _ = routing_topk(lam, *p.values(), slo, cost, table,
+                                    k=3, margin=margin, block_r=32,
+                                    interpret=True)
+            ri, _, _ = ref.routing_topk(lam, *p.values(), slo, cost,
+                                       table, k=3, margin=margin)
+            np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+
+    def test_all_infeasible_rows(self):
+        """Row with no feasible candidate: idx column 0 is -1 (the
+        policies substitute their upstream fallback), duplicate columns
+        empty, g column 0 the row-min predicted score."""
+        rng, lam, p, table = _routing_setup(4, 32, seed=9)
+        slo = jnp.full(4, 1e-6, jnp.float32)     # nothing meets this
+        cost = jnp.asarray(rng.uniform(1, 3, 4), jnp.float32)
+        gi, gg, gok = routing_topk(lam, *p.values(), slo, cost, table,
+                                   k=3, block_r=32, interpret=True)
+        ri, rg, rok = ref.routing_topk(lam, *p.values(), slo, cost, table,
+                                      k=3)
+        assert not bool(jnp.any(gok)) and not bool(jnp.any(rok))
+        assert bool(jnp.all(gi == -1)) and bool(jnp.all(ri == -1))
+        np.testing.assert_allclose(np.asarray(gg)[:, 0],
+                                   np.asarray(rg)[:, 0], rtol=1e-4)
+
+    def test_k_exceeds_feasible_count(self):
+        """k larger than the feasible set: the extra columns are -1 in
+        kernel and oracle alike (per-request SLO rows leave exactly two
+        candidates feasible)."""
+        rng, lam, p, table = _routing_setup(5, 32, seed=13)
+        cost = jnp.asarray(rng.uniform(1, 3, 5), jnp.float32)
+        slo_rows = np.full((32, 5), -1.0, np.float32)
+        slo_rows[:, 1] = 100.0
+        slo_rows[:, 3] = 100.0                   # cols 1 and 3 feasible
+        gi, _, gok = routing_topk(lam, *p.values(), jnp.asarray(slo_rows),
+                                  cost, table, k=5, block_r=32,
+                                  interpret=True)
+        ri, _, rok = ref.routing_topk(lam, *p.values(),
+                                     jnp.asarray(slo_rows), cost, table,
+                                     k=5)
+        assert bool(jnp.all(gok)) and bool(jnp.all(rok))
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+        got = np.asarray(gi)
+        # primaries come from the two admitted columns; the duplicate
+        # column holds the other one where it is still feasible (a hot
+        # window can saturate it), -1 otherwise
+        assert set(got[:, 0]) <= {1, 3}
+        assert set(got[:, 1]) <= {-1, 1, 3}
+        np.testing.assert_array_equal(got[:, 2:], -1)
+
+    def test_f32_tie_break_lowest_index_wins(self):
+        """Bit-identical candidates (clones) produce bit-equal g, so the
+        primary must be the cheapest near-tie and the duplicate order
+        strictly index-ascending — first-occurrence argmin semantics in
+        kernel and oracle."""
+        i, r = 4, 32
+        one = lambda v: jnp.full(i, v, jnp.float32)
+        p = dict(alpha=one(0.2), beta=one(0.3), gamma=one(1.2),
+                 mu=one(2.0), n=one(2.0), rtt=one(0.01))
+        table = build_erlang_table(np.asarray(p["mu"]), np.asarray(p["n"]))
+        lam = jnp.asarray(np.linspace(0.0, 3.0, r), jnp.float32)
+        slo = one(5.0)
+        cost = jnp.asarray([2.0, 1.0, 1.0, 2.0], jnp.float32)
+        gi, _, _ = routing_topk(lam, *p.values(), slo, cost, table, k=4,
+                                block_r=32, interpret=True)
+        ri, _, _ = ref.routing_topk(lam, *p.values(), slo, cost, table,
+                                   k=4)
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+        got = np.asarray(gi)
+        # cheapest near-tie: cost ties between cols 1/2 break to col 1
+        np.testing.assert_array_equal(got[:, 0], 1)
+        # duplicates ascend by index among the remaining clones
+        np.testing.assert_array_equal(got[:, 1], 0)
+        np.testing.assert_array_equal(got[:, 2], 2)
+        np.testing.assert_array_equal(got[:, 3], 3)
+
+
+class TestRoutingAttain:
+    """Fused attainment-argmax kernel vs its ref.routing_attain oracle."""
+
+    @pytest.mark.parametrize("i,r", [(2, 64), (6, 256), (11, 128)])
+    @pytest.mark.parametrize("k", [1, 3])
+    def test_matches_ref(self, i, r, k):
+        rng, lam, p, table = _routing_setup(i, r, seed=60 + i)
+        slo = jnp.asarray(rng.uniform(1.0, 4.0, i), jnp.float32)
+        sigma = jnp.asarray(rng.uniform(0.05, 0.8, i), jnp.float32)
+        avail = jnp.asarray(rng.uniform(0.7, 1.0, i), jnp.float32)
+        gi, gg, gok = routing_attain(lam, *p.values(), slo, sigma, avail,
+                                     table, k=k, margin=0.1, block_r=64,
+                                     interpret=True)
+        ri, rg, rok = ref.routing_attain(lam, *p.values(), slo, sigma,
+                                        avail, table, k=k, margin=0.1)
+        np.testing.assert_array_equal(np.asarray(gok), np.asarray(rok))
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+        np.testing.assert_allclose(np.asarray(gg), np.asarray(rg),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_uniform_distribution_degrades_to_argmin_g(self):
+        """Uniform sigma/avail make p strictly decreasing in g, so the
+        attainment winner collapses to the latency argmin over the
+        feasible set (computed directly from the oracle's score matrix)
+        — and kernel == oracle exactly. The budget must be uniform too:
+        a per-candidate slo reorders p away from the g order."""
+        rng, lam, p, table = _routing_setup(5, 64, seed=88)
+        slo = jnp.full(5, 3.0, jnp.float32)
+        sigma = jnp.full(5, 0.3, jnp.float32)
+        avail = jnp.full(5, 1.0, jnp.float32)
+        ai, _, aok = routing_attain(lam, *p.values(), slo, sigma, avail,
+                                    table, k=2, block_r=32, interpret=True)
+        ri, _, _ = ref.routing_attain(lam, *p.values(), slo, sigma, avail,
+                                     table, k=2)
+        np.testing.assert_array_equal(np.asarray(ai), np.asarray(ri))
+        g, rho = ref._table_scores(lam, p["alpha"], p["beta"], p["gamma"],
+                                   p["mu"], p["n"], p["rtt"], table)
+        g = np.asarray(g)
+        feasible = np.asarray(rho < 1.0) & (g <= np.asarray(slo)[None, :])
+        want = np.argmin(np.where(feasible, g, np.inf), axis=1)
+        feas = np.asarray(aok)
+        assert feas.any()
+        np.testing.assert_array_equal(np.asarray(ri)[feas, 0], want[feas])
+
+    def test_sigma_zero_is_a_step_function(self):
+        """sigma <= 0 collapses the lognormal to a step at the SLO
+        (slo_attain_prob edge semantics): p = avail inside the budget,
+        0 outside — the argmax then ranks purely by avail, ties to
+        lower g. Kernel and oracle must agree bitwise on indices."""
+        rng, lam, p, table = _routing_setup(4, 64, seed=91)
+        slo = jnp.asarray(rng.uniform(1.0, 4.0, 4), jnp.float32)
+        sigma = jnp.zeros(4, jnp.float32)
+        avail = jnp.asarray([0.9, 0.99, 0.99, 0.7], jnp.float32)
+        gi, _, gok = routing_attain(lam, *p.values(), slo, sigma, avail,
+                                    table, k=2, block_r=32, interpret=True)
+        ri, _, rok = ref.routing_attain(lam, *p.values(), slo, sigma,
+                                       avail, table, k=2)
+        np.testing.assert_array_equal(np.asarray(gok), np.asarray(rok))
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+
+    def test_all_infeasible_rows(self):
+        rng, lam, p, table = _routing_setup(3, 32, seed=17)
+        slo = jnp.full(3, 1e-6, jnp.float32)
+        sigma = jnp.full(3, 0.2, jnp.float32)
+        avail = jnp.ones(3, jnp.float32)
+        gi, _, gok = routing_attain(lam, *p.values(), slo, sigma, avail,
+                                    table, k=2, block_r=32, interpret=True)
+        ri, _, rok = ref.routing_attain(lam, *p.values(), slo, sigma,
+                                       avail, table, k=2)
+        assert not bool(jnp.any(gok)) and not bool(jnp.any(rok))
+        assert bool(jnp.all(gi == -1)) and bool(jnp.all(ri == -1))

@@ -1,0 +1,83 @@
+"""Fast interpret-mode kernel smoke cells (ISSUE 9 satellite).
+
+The exhaustive kernel-vs-oracle sweeps in ``test_kernels.py`` /
+``test_fused.py`` are module-wide ``slow`` and CI smoke skips them —
+which used to mean the not-slow suite never launched a Pallas kernel at
+all. Each cell here runs ONE tiny interpret-mode launch of a routing
+decision kernel against its ``ref.py`` oracle, so every kernel on the
+policy hot path is exercised (and lint-pinned: the kernel-oracle check
+counts this file as a naming site) in seconds.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.routing_decide import (routing_attain, routing_guard,
+                                          routing_topk)
+from repro.kernels.routing_score import build_erlang_table, routing_score
+
+I, R = 3, 8
+
+
+def _tiny(seed=0):
+    rng = np.random.default_rng(seed)
+    p = dict(
+        alpha=jnp.asarray(rng.uniform(0.1, 1.0, I), jnp.float32),
+        beta=jnp.asarray(rng.uniform(0.1, 2.0, I), jnp.float32),
+        gamma=jnp.asarray(rng.uniform(0.9, 1.8, I), jnp.float32),
+        mu=jnp.asarray(rng.uniform(0.5, 3.0, I), jnp.float32),
+        n=jnp.asarray(rng.integers(1, 8, I), jnp.float32),
+        rtt=jnp.asarray(rng.uniform(0, 0.1, I), jnp.float32),
+    )
+    lam = jnp.asarray(rng.uniform(0.0, 10.0, R), jnp.float32)
+    table = build_erlang_table(np.asarray(p["mu"]), np.asarray(p["n"]))
+    return rng, lam, p, table
+
+
+def test_routing_score_smoke():
+    rng, lam, p, table = _tiny(1)
+    slo = jnp.asarray(rng.uniform(1.0, 4.0, I), jnp.float32)
+    cost = jnp.asarray(rng.uniform(1, 3, I), jnp.float32)
+    gi, _, gok = routing_score(lam, *p.values(), slo, cost, table,
+                               block_r=8, interpret=True)
+    ri, _, rok = ref.routing_score(lam, *p.values(), slo, cost, table)
+    np.testing.assert_array_equal(np.asarray(gok), np.asarray(rok))
+    feas = np.asarray(rok)
+    np.testing.assert_array_equal(np.asarray(gi)[feas],
+                                  np.asarray(ri)[feas])
+
+
+def test_routing_guard_smoke():
+    rng, lam, p, table = _tiny(2)
+    tau = jnp.asarray(rng.uniform(0.1, 3.0, R), jnp.float32)
+    home = jnp.asarray(rng.integers(0, I, R), jnp.int32)
+    up = jnp.asarray(rng.integers(-1, I, R), jnp.int32)
+    gi, _, goff = routing_guard(lam, *p.values(), tau, home, up, table,
+                                block_r=8, interpret=True)
+    ri, _, roff = ref.routing_guard(lam, *p.values(), tau, home, up, table)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(goff), np.asarray(roff))
+
+
+def test_routing_topk_smoke():
+    rng, lam, p, table = _tiny(3)
+    slo = jnp.asarray(rng.uniform(1.0, 4.0, I), jnp.float32)
+    cost = jnp.asarray(rng.uniform(1, 3, I), jnp.float32)
+    gi, _, gok = routing_topk(lam, *p.values(), slo, cost, table, k=2,
+                              block_r=8, interpret=True)
+    ri, _, rok = ref.routing_topk(lam, *p.values(), slo, cost, table, k=2)
+    np.testing.assert_array_equal(np.asarray(gok), np.asarray(rok))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+
+
+def test_routing_attain_smoke():
+    rng, lam, p, table = _tiny(4)
+    slo = jnp.asarray(rng.uniform(1.0, 4.0, I), jnp.float32)
+    sigma = jnp.asarray(rng.uniform(0.05, 0.8, I), jnp.float32)
+    avail = jnp.asarray(rng.uniform(0.7, 1.0, I), jnp.float32)
+    gi, _, gok = routing_attain(lam, *p.values(), slo, sigma, avail,
+                                table, k=2, block_r=8, interpret=True)
+    ri, _, rok = ref.routing_attain(lam, *p.values(), slo, sigma, avail,
+                                   table, k=2)
+    np.testing.assert_array_equal(np.asarray(gok), np.asarray(rok))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))

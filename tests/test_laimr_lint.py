@@ -160,10 +160,28 @@ class TestKernelOracle:
         assert any("warp_scan has no reference oracle" in m
                    for m in msgs)
         assert any("fused_gather and ref.gather" in m for m in msgs)
+        # ISSUE 9 pairings: a decision kernel whose oracle exists but is
+        # never named alongside it in any test file, and an unsuppressed
+        # public guard helper with no oracle — both flagged
+        assert any("routing_topk and ref.routing_topk" in m for m in msgs)
+        assert any("apply_guard has no reference oracle" in m
+                   for m in msgs)
 
     def test_paired_kernel_with_ops_facade_is_clean(self):
         res = run(FIXTURES / "kernel_oracle" / "clean", ["src", "tests"])
         assert res.findings == []
+        # the suppressed shared-guard helper is ledgered, not silent
+        assert any(f.check == "kernel-oracle" for f in res.suppressed)
+
+    def test_smoke_file_is_part_of_the_corpus(self):
+        """routing_topk's pairing lives ONLY in test_kernels_smoke.py in
+        the clean tree: a regression that drops the smoke file from
+        TEST_FILES resurfaces the unpaired-kernel finding."""
+        from tools.laimr_lint.checks.kernel_oracle import TEST_FILES
+        assert "tests/test_kernels_smoke.py" in TEST_FILES
+        smoke = (FIXTURES / "kernel_oracle" / "clean"
+                 / "tests" / "test_kernels_smoke.py")
+        assert "ref.routing_topk" in smoke.read_text()
 
 
 class TestSuppressions:

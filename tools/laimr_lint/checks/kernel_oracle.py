@@ -33,7 +33,8 @@ _ID = "kernel-oracle"
 
 KERNELS_DIR = "src/repro/kernels"
 REF = "src/repro/kernels/ref.py"
-TEST_FILES = ("tests/test_kernels.py", "tests/test_fused.py")
+TEST_FILES = ("tests/test_kernels.py", "tests/test_fused.py",
+              "tests/test_kernels_smoke.py")
 EXCLUDED_MODULES = {"__init__.py", "ref.py", "ops.py"}
 _PREFIXES = ("fused_", "flash_")
 
