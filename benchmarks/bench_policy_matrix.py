@@ -1,8 +1,10 @@
-"""Policy x burst-scenario x window x PODS P99 matrix (ISSUE 4 + 5).
+"""Policy x burst-scenario x window x PODS x PLACEMENT P99 matrix
+(ISSUE 4 + 5 + 10).
 
   PYTHONPATH=src python -m benchmarks.bench_policy_matrix \
-      [--smoke] [--policies route_best,guarded_alg1,safetail] \
-      [--windows 0.05,0.2] [--pods 1,2,4] [--seed 7]
+      [--smoke] [--policies route_best,guarded_alg1,safetail,hybrid] \
+      [--windows 0.05,0.2] [--pods 1,2,4] \
+      [--placement first_fit,jsq] [--seed 7]
 
 The pluggable policy layer lets the SAME discrete-event substrate answer
 the paper-adjacent question the ROADMAP kept open: which *decision rule*
@@ -18,7 +20,11 @@ at each admission-window width AND each pod granularity
 monolithic pool, pods>1 splits every deployment into whole pods with
 first-fit spillover, per-pod utilisation, pod-granular scale-out boot
 lag and emptiest-pod drain — the regime where pod rounding and boot
-chunking reshape the tail. Reported per cell: completions, P50/P99
+chunking reshape the tail. The ``--placement`` axis (ISSUE 10) re-runs
+every pods>1 cell under ``jsq`` placement (join-shortest-queue
+admission, cold-pod duplicate pinning, finish-time work stealing and
+replica-quota scale-out), recording the pods-regression repair next to
+the first-fit baseline. Reported per cell: completions, P50/P99
 latency, offload rate, duplicate rate (SafeTail redundancy), pods
 booted/drained. The generalised conservation contract — every arrival
 completes exactly once, plane outcomes ``admitted + offloaded +
@@ -58,26 +64,33 @@ from repro.core.simulator import ClusterSimulator, FaultPlan, PodCrash, \
 from repro.core.workload import mixed_traffic
 
 SLO = 1.8
-POLICIES = ("route_best", "guarded_alg1", "safetail", "reliable")
+POLICIES = ("route_best", "guarded_alg1", "safetail", "reliable",
+            "hybrid")
 # policies the chunked JAX twin models (repro.core.jaxsim scope)
 JAX_POLICIES = ("route_best", "guarded_alg1")
 WINDOWS = (0.05, 0.2)
 SMOKE_WINDOWS = (0.1,)
 PODS = (1, 2, 4)
 SMOKE_PODS = (1, 2)
+# pod-placement modes (ISSUE 10): first_fit is the digest-pinned
+# default; jsq is the pods-regression repair (join-shortest-queue,
+# cold-pod duplicates, work stealing, replica-quota scale-out). pods=1
+# cells run first_fit only — placement is vacuous on a monolithic pool.
+PLACEMENTS = ("first_fit", "jsq")
 
 
 def run_cell(arrivals: list, policy: str, window: float, seed: int,
              pods: int = 1, redundancy: int = 2, cluster=None,
              label: str = "", slo: float = SLO,
-             faults: FaultPlan = None, backend: str = "event") -> dict:
+             faults: FaultPlan = None, backend: str = "event",
+             placement: str = "first_fit") -> dict:
     faults = faults if faults is not None else FaultPlan()
     sim = ClusterSimulator(
         cluster if cluster is not None else experiment_cluster(),
         SimConfig(mode="laimr", seed=seed, slo=slo, jitter_sigma=0.2,
                   admission_window=window, policy=policy,
                   redundancy=redundancy, pods_per_deployment=pods,
-                  faults=faults, backend=backend))
+                  faults=faults, backend=backend, placement=placement))
     res = sim.run(arrivals, horizon=None)
     n_arr = len(arrivals)
     if backend == "jax":
@@ -246,12 +259,12 @@ def faults_main(print_csv: bool = True, smoke: bool = False,
 
 def main(print_csv: bool = True, smoke: bool = False, policies=None,
          windows=None, pods=None, seed: int = 7,
-         backend: str = "event") -> dict:
+         backend: str = "event", placements=None) -> dict:
     horizon = 60.0 if smoke else 240.0
     pols = tuple(policies) if policies is not None else POLICIES
     if backend == "jax":
         # the chunked twin models route_best/guarded_alg1 only (no
-        # redundant dispatch) — see repro.core.jaxsim scope
+        # redundant dispatch, no burst detector) — repro.core.jaxsim
         dropped = [p for p in pols if p not in JAX_POLICIES]
         pols = tuple(p for p in pols if p in JAX_POLICIES)
         if dropped and print_csv:
@@ -261,47 +274,69 @@ def main(print_csv: bool = True, smoke: bool = False, policies=None,
         (SMOKE_WINDOWS if smoke else WINDOWS)
     pod_counts = tuple(pods) if pods is not None else \
         (SMOKE_PODS if smoke else PODS)
+    modes = tuple(placements) if placements is not None else PLACEMENTS
     traces = scenarios(horizon, seed)
     out: dict = {}
     rows = []
     if print_csv:
         print("# policy x burst scenario x admission-window width x "
-              f"pods (laimr, unified control plane, backend={backend}; "
-              "conservation enforced per cell)")
-        print("policy,scenario,window_s,pods,n,p50_s,p99_s,offload_rate,"
-              "duplicate_rate,flushes")
+              f"pods x placement (laimr, unified control plane, "
+              f"backend={backend}; conservation enforced per cell)")
+        print("policy,scenario,window_s,pods,placement,n,p50_s,p99_s,"
+              "offload_rate,duplicate_rate,flushes")
     for pol in pols:
         for name, arr in traces.items():
             for w in widths:
                 for np_ in pod_counts:
-                    row = run_cell(arr, pol, w, seed, pods=np_,
-                                   backend=backend)
-                    out[(pol, name, w, np_)] = row
-                    rows.append({"policy": pol, "scenario": name,
-                                 "window": w, "pods": np_,
-                                 "backend": backend, **row})
-                    if not finite_row(
-                            row,
-                            f"policy_matrix:{pol}:{name}@{w}/p{np_}"):
-                        continue
-                    if print_csv:
-                        print(f"{pol},{name},{w},{np_},{row['n']},"
-                              f"{row['p50']:.4f},{row['p99']:.4f},"
-                              f"{row['offload_rate']:.3f},"
-                              f"{row['duplicate_rate']:.3f},"
-                              f"{row['flushes']}")
+                    for plc in modes:
+                        if np_ == 1 and plc != "first_fit":
+                            continue   # placement is vacuous on pods=1
+                        row = run_cell(arr, pol, w, seed, pods=np_,
+                                       backend=backend, placement=plc)
+                        out[(pol, name, w, np_, plc)] = row
+                        rows.append({"policy": pol, "scenario": name,
+                                     "window": w, "pods": np_,
+                                     "placement": plc,
+                                     "backend": backend, **row})
+                        if not finite_row(
+                                row, f"policy_matrix:{pol}:{name}@{w}"
+                                     f"/p{np_}/{plc}"):
+                            continue
+                        if print_csv:
+                            print(f"{pol},{name},{w},{np_},{plc},"
+                                  f"{row['n']},"
+                                  f"{row['p50']:.4f},{row['p99']:.4f},"
+                                  f"{row['offload_rate']:.3f},"
+                                  f"{row['duplicate_rate']:.3f},"
+                                  f"{row['flushes']}")
     # SafeTail on the 3-tier paper catalogue: duplicate rate vs pods
     if "safetail" in pols:
         rows.extend(paper3_safetail_rows(horizon, seed, pod_counts,
                                          print_csv))
+    # the pods-regression headline (ISSUE 10): flash P99, guarded_alg1,
+    # monolithic vs pods=2 first_fit vs pods=2 jsq — the repair the
+    # placement axis exists to demonstrate
+    if print_csv and "guarded_alg1" in pols and "flash" in traces:
+        for w in widths:
+            mono = out.get(("guarded_alg1", "flash", w, 1, "first_fit"))
+            ff = out.get(("guarded_alg1", "flash", w, 2, "first_fit"))
+            jq = out.get(("guarded_alg1", "flash", w, 2, "jsq"))
+            if mono and jq:
+                verdict = "REPAIRED" if jq["p99"] <= mono["p99"] \
+                    else "NOT REPAIRED"
+                print(f"# pods regression @w={w}: flash guarded_alg1 "
+                      f"P99 pods=1 {mono['p99']:.3f}s, pods=2 first_fit "
+                      f"{ff['p99'] if ff else float('nan'):.3f}s, "
+                      f"pods=2 jsq {jq['p99']:.3f}s -> {verdict}")
     if print_csv:
         print(f"# {len(pols)} policies x {len(traces)} bursty scenarios "
               f"x {len(widths)} widths x {len(pod_counts)} pod counts "
-              f"(+ safetail paper3 rows); conservation held in every "
-              f"cell")
+              f"x {len(modes)} placements (+ safetail paper3 rows); "
+              f"conservation held in every cell")
     write_bench_json("policy_matrix", {
         "slo": SLO, "seed": seed, "horizon": horizon, "smoke": smoke,
-        "backend": backend, "pod_counts": list(pod_counts), "rows": rows})
+        "backend": backend, "pod_counts": list(pod_counts),
+        "placements": list(modes), "rows": rows})
     return out
 
 
@@ -315,6 +350,10 @@ if __name__ == "__main__":
                     help="comma-separated window widths in seconds")
     ap.add_argument("--pods", default=None,
                     help="comma-separated pods_per_deployment counts")
+    ap.add_argument("--placement", default=None,
+                    help="comma-separated placement modes "
+                         "(first_fit,jsq); pods=1 cells always run "
+                         "first_fit only")
     ap.add_argument("--backend", default="event",
                     choices=("event", "jax"),
                     help="simulator backend for the main matrix "
@@ -338,4 +377,6 @@ if __name__ == "__main__":
              if args.windows else None,
              pods=[int(p) for p in args.pods.split(",")]
              if args.pods else None,
-             seed=args.seed, backend=args.backend)
+             seed=args.seed, backend=args.backend,
+             placements=[p.strip() for p in args.placement.split(",")]
+             if args.placement else None)

@@ -109,13 +109,19 @@ def main() -> None:
     ap.add_argument("--policy", default="route_best",
                     help="routing strategy for the windowed laimr mode "
                          "(route_best / guarded_alg1 / safetail / "
-                         "reliable)")
+                         "reliable / hybrid)")
     ap.add_argument("--window", type=float, default=0.0,
                     help="admission-window width in seconds; 0 keeps "
                          "the scalar per-arrival Algorithm-1 path")
     ap.add_argument("--pods", type=int, default=1,
                     help="pods per deployment (1 = legacy monolithic "
                          "pool; >1 = pod-level fleet physics)")
+    ap.add_argument("--placement", default="first_fit",
+                    choices=("first_fit", "jsq"),
+                    help="pod placement for --pods > 1: first_fit "
+                         "(digest-pinned default) or jsq (join-"
+                         "shortest-queue + cold-pod duplicates + "
+                         "replica-quota scale-out, ISSUE 10)")
     ap.add_argument("--backend", default="event",
                     choices=("event", "jax"),
                     help="laimr-row simulator backend (jax = chunked "
@@ -134,7 +140,8 @@ def main() -> None:
                          "(repro.core.jaxsim scope)")
     lane = args.policy if args.window > 0 else "scalar alg1"
     print(f"# laimr mode: {lane} (window={args.window}, "
-          f"pods={args.pods}, backend={args.backend}, "
+          f"pods={args.pods}, placement={args.placement}, "
+          f"backend={args.backend}, "
           f"faults={'on' if args.faults else 'off'})")
     header = (f"{'scenario':<9} {'n':>6}  "
               f"{'laimr p50/p99':>16}  {'base p50/p99':>16}  "
@@ -155,6 +162,7 @@ def main() -> None:
                           admission_window=args.window,
                           policy=args.policy,
                           pods_per_deployment=args.pods,
+                          placement=args.placement,
                           faults=faults,
                           backend=args.backend if mode == "laimr"
                           else "event"))

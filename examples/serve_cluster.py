@@ -38,10 +38,16 @@ from benchmarks.common import experiment_cluster
 ap = argparse.ArgumentParser()
 ap.add_argument("--policy", default="route_best",
                 help="routing strategy from the repro.control.policies "
-                     "registry (route_best / guarded_alg1 / safetail)")
+                     "registry (route_best / guarded_alg1 / safetail / "
+                     "reliable / hybrid)")
 ap.add_argument("--pods", type=int, default=2,
                 help="pods per deployment for the pod-fleet simulation "
                      "(1 = legacy monolithic pools)")
+ap.add_argument("--placement", default="first_fit",
+                choices=("first_fit", "jsq"),
+                help="pod placement shared by the PodGroup fleet plane "
+                     "and the pod-fleet simulation (jsq = join-"
+                     "shortest-queue + cold-pod duplicates, ISSUE 10)")
 args = ap.parse_args()
 
 # --- data plane: measure a real reduced-model decode step ------------- #
@@ -106,7 +112,8 @@ fleet = FleetPlane(
     pods={"yolov5m@pi4-edge": [SlotBank(4), SlotBank(4)],
           "yolov5m@cloud": [SlotBank(8), SlotBank(8)]},
     policy=args.policy,
-    config=AdmissionConfig(window=0.02, max_batch=8))
+    config=AdmissionConfig(window=0.02, max_batch=8,
+                           placement=args.placement))
 t = 0.0
 fdecs = []
 for k in range(24):
@@ -164,11 +171,13 @@ sim = ClusterSimulator(experiment_cluster(),
                                  jitter_sigma=0.2,
                                  admission_window=0.1,
                                  policy=args.policy,
-                                 pods_per_deployment=args.pods))
+                                 pods_per_deployment=args.pods,
+                                 placement=args.placement))
 res = sim.run(arrivals, horizon=400.0)
 s = res.summary()
 occ = sim.fleet_stats()    # reports the single pool as one pod at --pods 1
-print(f"[pods={args.pods}:{args.policy}] p95={s['p95']:.2f}s "
+print(f"[pods={args.pods}:{args.policy}:{args.placement}] "
+      f"p95={s['p95']:.2f}s "
       f"p99={s['p99']:.2f}s offloads={res.offload_fast} "
       f"pods_booted={res.pods_booted} pods_drained={res.pods_drained} "
       f"final occupancy {occ} — pod granularity in the simulated "

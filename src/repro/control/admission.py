@@ -95,6 +95,21 @@ class AdmissionConfig:
     duplication — a duplicate is dispatched only onto candidates with
     ``g <= slo - headroom_margin``, so redundancy is bought only when
     the SLO leaves room to pay for it.
+
+    Placement (ISSUE 10): ``placement`` selects the pod-placement mode
+    shared by :class:`~repro.control.fleet.PodGroup` and the
+    simulator's ``_PodFleet`` — ``"first_fit"`` (default, digest-
+    pinned) or ``"jsq"`` (join-shortest-queue with cold-pod duplicate
+    pinning and finish-time work stealing).
+
+    Burst detection (ISSUE 10, consumed by the ``hybrid`` policy):
+    ``burst_memory`` is the time constant (seconds) of the long-horizon
+    EWMA arrival rate the detector compares against; a burst is entered
+    when the in-window rate exceeds ``burst_enter`` times the EWMA (and
+    at least ``burst_min_rate`` req/s in absolute terms) and exited
+    only when it falls below ``burst_exit`` times the EWMA — the
+    enter/exit gap is the hysteresis band that stops strategy flapping
+    on oscillating traffic (pinned on the MMPP trace).
     """
 
     window: float = 0.05
@@ -108,6 +123,11 @@ class AdmissionConfig:
     link_loss: dict[str, float] = dataclasses.field(default_factory=dict)
     link_jitter: dict[str, float] = dataclasses.field(default_factory=dict)
     headroom_margin: float = 0.25
+    placement: str = "first_fit"
+    burst_memory: float = 8.0
+    burst_enter: float = 2.0
+    burst_exit: float = 1.25
+    burst_min_rate: float = 2.0
 
 
 @dataclasses.dataclass

@@ -40,9 +40,14 @@ class PodGroup:
     the plane's global slot bookkeeping never shifts under live traffic.
     """
 
-    def __init__(self, pods: Sequence):
+    def __init__(self, pods: Sequence, placement: str = "first_fit"):
         if not pods:
             raise ValueError("PodGroup needs at least one pod")
+        if placement not in ("first_fit", "jsq"):
+            raise ValueError(
+                f"unknown placement {placement!r} "
+                "(expected 'first_fit' or 'jsq')")
+        self.placement = placement
         self.pods = list(pods)
         self.bases: list[int] = []
         total = 0
@@ -67,14 +72,39 @@ class PodGroup:
 
     def admit_next(self, first_token: int = 0,
                    start_pos: int = 0) -> Optional[int]:
-        """First-fit spillover: the first ACTIVE pod with a free slot
-        wins (draining/retired pods take no new work)."""
+        """Placement-mode admission (the simulator's ``_PodFleet._place``
+        mirror). ``first_fit`` (default): the first ACTIVE pod with a
+        free slot wins (draining/retired pods take no new work) — keeps
+        decode batches dense on the leading pods. ``jsq``: the ACTIVE
+        pod with the fewest slots in use wins (ties -> declaration
+        order), spreading occupancy instead of concentrating it."""
+        if self.placement == "jsq":
+            return self.admit_coldest(first_token, start_pos)
         for i, (p, base) in enumerate(zip(self.pods, self.bases)):
             if self.draining[i] or self.retired[i]:
                 continue
             slot = p.admit_next(first_token, start_pos)
             if slot is not None:
                 return base + slot
+        return None
+
+    def admit_coldest(self, first_token: int = 0,
+                      start_pos: int = 0) -> Optional[int]:
+        """Admit on the COLDEST active pod — fewest slots in use, ties
+        to declaration order. This is both the ``jsq`` admission rule
+        and the slot source for redundant copies
+        (``ControlPlane._take_slot(cold=True)``): a SafeTail duplicate
+        pinned to the coldest pod races a genuinely different queue
+        instead of the primary's first-fit neighbour."""
+        order = sorted(
+            (i for i, p in enumerate(self.pods)
+             if not self.draining[i] and not self.retired[i]
+             and p.n_free() > 0),
+            key=lambda i: (self.pods[i].slots - self.pods[i].n_free(), i))
+        for i in order:
+            slot = self.pods[i].admit_next(first_token, start_pos)
+            if slot is not None:
+                return self.bases[i] + slot
         return None
 
     def release(self, slot: int) -> None:
@@ -136,9 +166,34 @@ class PodGroup:
         pod_i = bisect.bisect_right(self.bases, slot) - 1
         return pod_i, slot - self.bases[pod_i]
 
-    def stats(self) -> list[tuple[int, int]]:
-        """Per-pod (slots in use, slots total) — spillover telemetry."""
-        return [(p.slots - p.n_free(), p.slots) for p in self.pods]
+    def lifecycle(self, pod_i: int) -> str:
+        """Pod lifecycle flag: "active" / "draining" / "retired"."""
+        if self.retired[pod_i]:
+            return "retired"
+        return "draining" if self.draining[pod_i] else "active"
+
+    def stats(self) -> list[tuple[int, int, str]]:
+        """Per-pod (slots in use, slots total, lifecycle) — spillover
+        telemetry. The lifecycle flag marks rows whose ``total`` is NOT
+        admittable capacity: draining pods only finish in-flight work
+        and retired pods are gone — the old 2-tuple rows silently
+        counted both as live, overstating free capacity to every
+        placement consumer (ISSUE 10 bugfix). Use :meth:`capacity` for
+        the admittable-slot sums."""
+        return [(p.slots - p.n_free(), p.slots, self.lifecycle(i))
+                for i, p in enumerate(self.pods)]
+
+    def capacity(self) -> tuple[int, int]:
+        """(slots in use, slots total) over ACTIVE pods only — the
+        admittable-capacity aggregate placement consumers should read
+        (dead pods' slots excluded, unlike the raw ``self.slots``)."""
+        used = total = 0
+        for i, p in enumerate(self.pods):
+            if self.draining[i] or self.retired[i]:
+                continue
+            used += p.slots - p.n_free()
+            total += p.slots
+        return used, total
 
 
 class FleetPlane(ControlPlane):
@@ -151,12 +206,18 @@ class FleetPlane(ControlPlane):
     def __init__(self, cluster, pods: dict[str, Sequence], **kwargs):
         if "engines" in kwargs:
             raise TypeError("FleetPlane takes `pods`, not `engines`")
-        groups = {key: PodGroup(pod_list) for key, pod_list in pods.items()}
+        cfg = kwargs.get("config")
+        placement = getattr(cfg, "placement", "first_fit") \
+            if cfg is not None else "first_fit"
+        groups = {key: PodGroup(pod_list, placement=placement)
+                  for key, pod_list in pods.items()}
         super().__init__(cluster, engines=groups, **kwargs)
 
     def pod_group(self, dep_key: str) -> PodGroup:
         return self.engines[dep_key]
 
-    def fleet_stats(self) -> dict[str, list[tuple[int, int]]]:
-        """deployment key -> per-pod (in use, total) occupancy."""
+    def fleet_stats(self) -> dict[str, list[tuple[int, int, str]]]:
+        """deployment key -> per-pod (in use, total, lifecycle) rows;
+        see :meth:`PodGroup.stats` (dead pods are flagged, and
+        :meth:`PodGroup.capacity` sums admittable slots only)."""
         return {key: grp.stats() for key, grp in self.engines.items()}

@@ -43,14 +43,38 @@ from repro.core.router import Router, RouterParams
 from repro.core.scheduler import Request
 
 
-def hpa_refresh(router: Router, pmhpa: PMHPA, t_now: float) -> list[int]:
+def hpa_refresh(router: Router, pmhpa: PMHPA, t_now: float,
+                policy=None) -> list[int]:
     """One event-batched control-plane refresh per HPA tick: decay every
     deployment's EWMA toward its sliding rate and export all PM-HPA
     custom metrics in one batch, immediately before reconcile reads the
     gauges. The per-deployment float ops equal the old interleaved loop,
     so simulator golden digests are unchanged. Returns the exported
-    desired-replica counts."""
-    return pmhpa.export_batch(router.refresh_telemetry(t_now))
+    desired-replica counts.
+
+    ``policy`` (ISSUE 10): a routing policy exposing ``scale_floor``
+    (``BurstAdaptiveHybridPolicy``) may raise the freshly exported
+    desired-replica gauges to a reactive floor so scale-out leads a
+    detected burst. Applied HERE — after the batched export, before the
+    caller's reconcile — because the export overwrites every gauge, so
+    any inter-tick gauge write by a policy would be silently lost.
+    ``policy=None`` (plain policies, scalar mode) is the digest-pinned
+    no-op path."""
+    exported = pmhpa.export_batch(router.refresh_telemetry(t_now))
+    floor_of = getattr(policy, "scale_floor", None)
+    if floor_of is not None:
+        floors = floor_of(t_now)
+        if floors:
+            for dep in pmhpa.cluster:
+                floor = floors.get(dep.key, 0)
+                if floor <= 0:
+                    continue
+                mkey = pmhpa.metrics.desired_replicas_key(
+                    dep.model.name, dep.instance.name)
+                want = int(min(floor, dep.n_max))
+                if want > pmhpa.metrics.get_gauge(mkey, dep.n_replicas):
+                    pmhpa.metrics.set_gauge(mkey, want)
+    return exported
 
 
 class ControlPlane:
@@ -160,12 +184,25 @@ class ControlPlane:
         self.outcomes[RETRIED] += 1
 
     # ------------------------------------------------------------------ #
-    def _take_slot(self, dep: Deployment) -> tuple[bool, Optional[int]]:
+    def _take_slot(self, dep: Deployment,
+                   cold: bool = False) -> tuple[bool, Optional[int]]:
         """(has capacity, slot) at ``dep`` — deployments without a
-        registered engine always have capacity (pure routing mode)."""
+        registered engine always have capacity (pure routing mode).
+
+        ``cold=True`` (redundant copies under ``placement="jsq"``) asks
+        the engine for a slot on its COLDEST pod (``admit_coldest`` on
+        :class:`~repro.control.fleet.PodGroup`) instead of the first-fit
+        slot: a duplicate racing its primary should land where queueing
+        pressure is lowest, not on the same hot leading pod. Engines
+        without pod structure fall back to ``admit_next``."""
         eng = self.engines.get(dep.key)
         if eng is None:
             return True, None
+        if cold and self.cfg.placement == "jsq":
+            admit_cold = getattr(eng, "admit_coldest", None)
+            if admit_cold is not None:
+                slot = admit_cold()
+                return slot is not None, slot
         slot = eng.admit_next()
         return slot is not None, slot
 
@@ -283,14 +320,17 @@ class ControlPlane:
         slot only if one is free at its target (no cascade — losing a
         duplicate costs nothing), registers real-slot groups for
         first-completion cancellation, and adds its arrival to the
-        target's telemetry (duplicate load is real load)."""
+        target's telemetry (duplicate load is real load). Under
+        ``placement="jsq"`` the slot comes from the target's COLDEST
+        pod (``_take_slot(cold=True)``) — SafeTail's whole point is a
+        copy that avoids the straggling pod."""
         deps = self.policy.deps
         group: list[AdmissionDecision] = []
         for j in dup_idx:
             dep = deps[int(j)]
             if dep.key == primary_dec.target_key:
                 continue        # never duplicate onto the primary's pool
-            got, slot = self._take_slot(dep)
+            got, slot = self._take_slot(dep, cold=True)
             if not got:
                 continue
             clone = Request(model=req.model, quality=req.quality,

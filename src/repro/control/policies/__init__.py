@@ -15,7 +15,11 @@ WindowDecision``. The registry maps stable string names — usable from
 * ``safetail``     — top-k feasible redundant dispatch with
   first-completion cancellation (SafeTail, arXiv:2408.17171);
 * ``reliable``     — SLO-attainment-probability routing with
-  headroom-gated duplication (FogROS2-PLR, arXiv:2410.05562; ISSUE 6).
+  headroom-gated duplication (FogROS2-PLR, arXiv:2410.05562; ISSUE 6);
+* ``hybrid``       — burst-adaptive composite: an EWMA burst detector
+  on the arrival stream delegates to ``guarded_alg1`` under steady
+  load and ``safetail`` during bursts, and exports a reactive scaling
+  floor through the PM-HPA hook (arXiv:2512.14290; ISSUE 10).
 
 Adding a strategy: subclass ``RoutingPolicyBase``, set ``name``,
 implement ``decide``, decorate with :func:`register`. See
@@ -73,6 +77,7 @@ def make_policy(spec: PolicySpec, cluster: Cluster, router: Router,
 
 
 from repro.control.policies.guarded import GuardedAlgorithm1Policy  # noqa: E402
+from repro.control.policies.hybrid import BurstAdaptiveHybridPolicy  # noqa: E402
 from repro.control.policies.reliable import ReliableSloPolicy  # noqa: E402
 from repro.control.policies.route_best import RouteBestPolicy  # noqa: E402
 from repro.control.policies.safetail import SafeTailRedundantPolicy  # noqa: E402
@@ -81,14 +86,16 @@ register(RouteBestPolicy)
 register(GuardedAlgorithm1Policy)
 register(SafeTailRedundantPolicy)
 register(ReliableSloPolicy)
+register(BurstAdaptiveHybridPolicy)
 
 #: back-compat alias — PR-3's single strategy was the route_best window
 #: mode; code written against ``RoutingPolicy`` keeps working.
 RoutingPolicy = RouteBestPolicy
 
 __all__ = [
-    "BIG", "CandidateTable", "GuardedAlgorithm1Policy", "POLICIES",
-    "PolicySpec", "ReliableSloPolicy", "RouteBestPolicy", "RoutingPolicy",
+    "BIG", "BurstAdaptiveHybridPolicy", "CandidateTable",
+    "GuardedAlgorithm1Policy", "POLICIES", "PolicySpec",
+    "ReliableSloPolicy", "RouteBestPolicy", "RoutingPolicy",
     "RoutingPolicyBase", "SafeTailRedundantPolicy", "WindowDecision",
     "get_policy", "make_policy", "register",
 ]

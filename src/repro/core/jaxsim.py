@@ -3,8 +3,10 @@
 ``simulate`` runs the SAME physics the event loop integrates — the
 Eq. 5 utilisation-dependent service law, the Algorithm-1 offload guard
 and fractional bulk offload, the PM-HPA inverse-model feasibility scan
-with scale-in hysteresis, boot-lagged scale enactment, first-fit pod
-admission — but as one ``lax.scan`` over fixed-width time buckets
+with scale-in hysteresis, boot-lagged scale enactment, placement-aware
+pod admission (first-fit declaration order, or the jsq coldest-pod
+waterfill with replica-quota scale-out) — but as one ``lax.scan`` over
+fixed-width time buckets
 instead of a Python heap loop. Deployments/pods are dense ``(I, P)``
 arrays, arrivals are pre-binned ``(B, S)`` count tensors (one column
 per model stream), and each bucket's routing is one batched pass
@@ -79,6 +81,7 @@ TOLERANCES = {"p50_rel": 0.25, "p99_rel": 0.35, "offload_abs": 0.12}
 class _Static:
     mode: str            # "scalar" | "route_best" | "guarded_alg1"
     multi: bool          # pods_per_deployment > 1
+    placement: str       # "first_fit" | "jsq" (pod admission + quota)
     dt: float
     window: float        # router sliding-window width [s]
     erl_n: int           # Erlang scan length (>= every n_max)
@@ -176,14 +179,25 @@ def _scan(consts: dict, carry0: tuple, xs: tuple, st: _Static):
             active = (nr > 0.0) & (~drn)
             n_act = active.sum(axis=1).astype(jnp.float32)
             cur_pods = n_act + pend
-            want_pods = jnp.clip(jnp.ceil(want / spp), 1.0,
-                                 consts["max_pods"])
-            boot = jnp.maximum(want_pods - cur_pods, 0.0) * fire
+            ready_tot = nr.sum(axis=1)
+            if st.placement == "jsq":
+                # replica-quota enactment (the oracle's jsq branch of
+                # _PodFleet.apply_scale): boot whatever pod count covers
+                # `want` replicas — the n_max clamp happens at boot
+                # maturation, where the last pod is trimmed to the
+                # remaining quota
+                have = ready_tot + pend * spp
+                boot = jnp.ceil(jnp.maximum(want - have, 0.0) / spp) * fire
+                want_pods = jnp.maximum(jnp.ceil(want / spp), 1.0)
+                do_drain = fire & (want < ready_tot)
+            else:
+                want_pods = jnp.clip(jnp.ceil(want / spp), 1.0,
+                                     consts["max_pods"])
+                boot = jnp.maximum(want_pods - cur_pods, 0.0) * fire
+                do_drain = fire & (want_pods < cur_pods) & \
+                    (want < ready_tot + pend * spp)
             ring = ring + boot[:, None] * onehot
             pend = pend + boot
-            ready_tot = nr.sum(axis=1)
-            do_drain = fire & (want_pods < cur_pods) & \
-                (want < ready_tot + pend * spp)
             k = jnp.where(do_drain,
                           jnp.minimum(cur_pods - want_pods, n_act - 1.0), 0.0)
             key = jnp.where(active, bl, jnp.inf)
@@ -219,6 +233,13 @@ def _scan(consts: dict, carry0: tuple, xs: tuple, st: _Static):
             crank = jnp.cumsum(inactive.astype(jnp.float32), axis=1)
             act = inactive & (crank <= mature[:, None])
             nr = jnp.where(act, consts["spp"][:, None], nr)
+            if st.placement == "jsq":
+                # _PodFleet._boot_size: the booting pod is clamped to
+                # the remaining n_max headroom (cumulative trim keeps
+                # total materialised replicas <= n_max, pod order)
+                csum = jnp.cumsum(nr, axis=1)
+                over = jnp.maximum(csum - consts["n_max"][:, None], 0.0)
+                nr = jnp.maximum(nr - over, 0.0)
             ctr = ctr.at[2].add(act.sum().astype(jnp.float32))  # pods booted
         else:
             nr = nr.at[:, 0].add(mature)
@@ -307,11 +328,18 @@ def _scan(consts: dict, carry0: tuple, xs: tuple, st: _Static):
         ewma = a_m * ewma + (1.0 - a_m) * lam_end
 
         # -- 4. pod admission: first-fit idle slots, then equalise -----
+        # (jsq skips the declaration-order pre-take entirely: every
+        # admission goes through the backlog-ranked waterfill below, so
+        # the coldest pods absorb load first — the bucket twin of
+        # _PodFleet._place's coldest-idle rule + work stealing)
         m = arrivals_dep
         active = (nr > 0.0) & (~drn)
-        idle = jnp.maximum(jnp.floor(nr - bl), 0.0) * active
-        cum_excl = jnp.cumsum(idle, axis=1) - idle
-        take = jnp.floor(jnp.clip(m[:, None] - cum_excl, 0.0, idle))
+        if st.placement == "jsq":
+            take = jnp.zeros_like(nr)
+        else:
+            idle = jnp.maximum(jnp.floor(nr - bl), 0.0) * active
+            cum_excl = jnp.cumsum(idle, axis=1) - idle
+            take = jnp.floor(jnp.clip(m[:, None] - cum_excl, 0.0, idle))
         rem = m - take.sum(axis=1)
         n_act = jnp.maximum(active.sum(axis=1).astype(jnp.float32), 1.0)
         base = jnp.floor(rem / n_act)
@@ -378,7 +406,7 @@ def _validate(cluster: Cluster, cfg) -> str:
         raise ValueError(
             f"backend='jax' supports policies route_best/guarded_alg1 in "
             f"window mode, not {cfg.policy!r} (redundant-dispatch racing "
-            "is event-loop only)")
+            "and the hybrid burst detector are event-loop only)")
     return cfg.policy
 
 
@@ -531,13 +559,26 @@ def simulate(cluster: Cluster, cfg, arrivals: list[Arrival],
     # ---- pods / boot ring / rate rings --------------------------------
     P = max(1, int(cfg.pods_per_deployment))
     multi = P > 1
+    placement = str(getattr(cfg, "placement", "first_fit"))
     spp = np.maximum(1.0, np.ceil(n0 / P)).astype(np.float32)
-    max_pods = np.maximum(1.0, np.floor(n_max / spp)).astype(np.float32) \
-        if multi else np.ones(I, np.float32)
-    if multi:
-        pmax = int(max(np.ceil(n0 / spp).max(), max_pods.max()))
+    # pod quota: first_fit floors (digest-pinned capacity quantisation);
+    # jsq ceils — the fleet may boot a remainder-sized pod to land on
+    # n_max replicas exactly (the multi-pod tail regression repair)
+    if not multi:
+        max_pods = np.ones(I, np.float32)
+    elif placement == "jsq":
+        max_pods = np.maximum(1.0, np.ceil(n_max / spp)).astype(np.float32)
     else:
+        max_pods = np.maximum(1.0, np.floor(n_max / spp)).astype(np.float32)
+    if not multi:
         pmax = 1
+    elif placement == "jsq":
+        # replica-quota boots aren't pod-count capped: transiently the
+        # fleet can hold the initial pods PLUS a full quota's worth of
+        # fresh boots (e.g. 2+1 initial, then 2+1 more to reach n_max=6)
+        pmax = int((np.ceil(n0 / spp) + np.ceil(n_max / spp)).max())
+    else:
+        pmax = int(max(np.ceil(n0 / spp).max(), max_pods.max()))
     nr0 = np.zeros((I, pmax), np.float32)
     for i in range(I):
         if multi:
@@ -555,7 +596,7 @@ def simulate(cluster: Cluster, cfg, arrivals: list[Arrival],
     W = max(1, int(round(window / dt)))
 
     st = _Static(
-        mode=mode, multi=multi, dt=dt, window=window,
+        mode=mode, multi=multi, placement=placement, dt=dt, window=window,
         erl_n=int(max(64, n_max.max())),
         n_probe=64, ewma_alpha=float(params.ewma_alpha),
         rho_low=float(params.rho_low), util_cap=float(cfg.util_cap),

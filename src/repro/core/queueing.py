@@ -175,6 +175,8 @@ def mmc_wait_scalar(lam: float, c: int, mu: float) -> float:
     if lam <= 0.0:
         return 0.0
     cmu = c * mu
+    if cmu <= 0.0:             # dead deployment (c == 0): no servers, no
+        return float("inf")    # stability — never a phantom replica
     rho = lam / cmu
     if rho >= 1.0:
         return float("inf")
@@ -226,6 +228,8 @@ class ErlangMemo:
         if lam <= 0.0:
             return 0.0
         cmu = c * self.mu
+        if cmu <= 0.0:         # c == 0: all pods dead — infinite wait,
+            return float("inf")  # same contract as mmc_wait_scalar
         if lam / cmu >= 1.0:
             return float("inf")
         if self.rho_buckets is None:

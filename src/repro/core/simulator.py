@@ -295,15 +295,34 @@ class _Pool:
         return rep
 
     def sync_dep(self) -> None:
-        """Keep Deployment.n_replicas (the control-plane view) in sync."""
-        self.dep.n_replicas = max(1, self._n_ready)
+        """Keep Deployment.n_replicas (the control-plane view) in sync.
+
+        Reports the TRUE ready count, including 0 when every replica is
+        gone (crash fault): the old ``max(1, n)`` floor made the
+        router/PM-HPA predictors see one phantom replica and keep
+        routing into a dead deployment. The Erlang inputs are
+        degenerate-safe at c == 0 (``mmc_wait_scalar`` / ``ErlangMemo``
+        return inf, the scorers return BIG), so truth-telling simply
+        makes a dead deployment infeasible — pinned by the
+        crash-all-pods regression test in tests/test_faults.py. For any
+        live pool (n >= 1) this is bit-identical to the old floor."""
+        self.dep.n_replicas = self._n_ready
 
     def n_busy(self) -> int:
         return sum(1 for r in self.replicas.values() if r.busy)
 
-    def stats(self) -> tuple[int, int, int]:
-        """(busy, ready, queued) — pod occupancy telemetry."""
-        return (self.n_busy(), self._n_ready, len(self.queue))
+    def lifecycle(self) -> str:
+        """Pod lifecycle flag for stats rows (fleet mode). A drained
+        pod object is deleted outright, so only active/draining appear
+        here; ``PodGroup.stats`` adds "retired" on the serving side."""
+        return "draining" if self.draining else "active"
+
+    def stats(self) -> tuple[int, int, int, str]:
+        """(busy, ready, queued, lifecycle) — pod occupancy telemetry.
+        ``lifecycle`` marks pods whose capacity must not be counted as
+        admittable (draining pods finish in-flight work only)."""
+        return (self.n_busy(), self._n_ready, len(self.queue),
+                self.lifecycle())
 
 
 class _PodFleet:
@@ -322,10 +341,17 @@ class _PodFleet:
     """
 
     __slots__ = ("dep", "net_rtt", "slots_per_pod", "pods", "_pod_id",
-                 "pending_pods", "pods_booted", "pods_drained", "parked")
+                 "pending_pods", "pods_booted", "pods_drained", "parked",
+                 "placement")
 
-    def __init__(self, dep: Deployment, n_pods: int):
+    def __init__(self, dep: Deployment, n_pods: int,
+                 placement: str = "first_fit"):
+        if placement not in ("first_fit", "jsq"):
+            raise ValueError(
+                f"unknown placement {placement!r} "
+                "(expected 'first_fit' or 'jsq')")
         self.dep = dep
+        self.placement = placement
         self.net_rtt = dep.instance.net_rtt
         self.slots_per_pod = max(1, -(-dep.n_replicas // max(1, n_pods)))
         self._pod_id = itertools.count()
@@ -360,22 +386,39 @@ class _PodFleet:
     def sync_dep(self) -> None:
         """Deployment.n_replicas (what the router/PM-HPA predictors see)
         is the READY aggregate over all pods — draining pods' replicas
-        already left the count via ``_Pool.mark_draining``."""
-        self.dep.n_replicas = max(1, self.n_ready)
+        already left the count via ``_Pool.mark_draining``. The TRUE
+        count is reported, 0 included: when fault injection kills every
+        pod the predictors must see a dead deployment (infeasible,
+        Erlang inputs degenerate-safe), not one phantom replica that
+        keeps attracting traffic. Bit-identical to the old
+        ``max(1, n)`` floor whenever any pod is alive."""
+        self.dep.n_replicas = self.n_ready
 
-    def stats(self) -> list[tuple[int, int, int]]:
-        """Per-pod (busy, ready, queued) — the spillover telemetry
-        ``FleetPlane.fleet_stats`` exposes on the serving side."""
+    def stats(self) -> list[tuple[int, int, int, str]]:
+        """Per-pod (busy, ready, queued, lifecycle) — the spillover
+        telemetry ``FleetPlane.fleet_stats`` exposes on the serving
+        side. Rows flagged "draining" hold no admittable capacity."""
         return [p.stats() for p in self.pods.values()]
 
-    # ---- admission: first-fit slot, then sticky shortest queue -------- #
+    # ---- admission: placement-mode dispatch --------------------------- #
     def submit(self, sim: "ClusterSimulator", req: Request) -> None:
-        """First-fit spillover (``PodGroup.admit_next`` semantics): the
-        first non-draining pod with an idle replica serves immediately;
-        with every slot busy the request joins the SHORTEST queue among
-        active pods (ties -> oldest pod) and stays there. The chosen
-        pod's sliding rate observes the arrival — per-pod load feeds the
-        per-pod Eq. 5 utilisation."""
+        """Pod placement (``PodGroup.admit_next`` semantics, both modes).
+
+        ``placement="first_fit"`` (default, digest-pinned): the first
+        non-draining pod with an idle replica serves immediately; with
+        every slot busy the request joins the SHORTEST queue among
+        active pods (ties -> fewest busy, then oldest pod) and stays
+        there.
+
+        ``placement="jsq"``: join-shortest-queue by ``(queued, busy)``
+        occupancy — an idle slot on the COLDEST pod (fewest busy
+        replicas) wins over first-fit order, and queueing picks the
+        least-occupied pod, so one hot pod can no longer build a queue
+        while its neighbours idle (the pods=2 flash-P99 regression the
+        PR-5 matrix surfaced).
+
+        Either way the chosen pod's sliding rate observes the arrival —
+        per-pod load feeds the per-pod Eq. 5 utilisation."""
         self._place(sim, req, observe=True)
 
     def _respill(self, sim: "ClusterSimulator", req: Request) -> None:
@@ -387,14 +430,34 @@ class _PodFleet:
     def _place(self, sim: "ClusterSimulator", req: Request,
                observe: bool) -> None:
         now = sim._now
-        for pod in self.pods.values():
-            if not pod.draining and pod.idle_replica() is not None:
+        if self.placement == "jsq":
+            idle = [p for p in self.pods.values()
+                    if not p.draining and p.idle_replica() is not None]
+            if idle:
+                # coldest pod with a free slot: fewest busy replicas,
+                # ties -> oldest pod (deterministic)
+                pod = min(idle, key=lambda p: (p.n_busy(), p.pod_id))
                 if observe:
                     pod.rate.observe(now)
                 sim._start_service(pod, req)
                 return
+        else:
+            for pod in self.pods.values():
+                if not pod.draining and pod.idle_replica() is not None:
+                    if observe:
+                        pod.rate.observe(now)
+                    sim._start_service(pod, req)
+                    return
+        # Every slot busy: join the shortest queue by (queued, busy,
+        # pod_id). The busy tie-break is live in BOTH modes — at spill
+        # time every active pod's replicas are all busy, so for
+        # equal-size pods (every golden fleet scenario) it is a provable
+        # no-op vs the old (queued, pod_id) key, while unequal remainder
+        # pods now break queue-length ties toward the pod with fewer
+        # in-flight requests instead of raw creation order.
         pod = min((p for p in self.pods.values() if not p.draining),
-                  key=lambda p: (len(p.queue), p.pod_id), default=None)
+                  key=lambda p: (len(p.queue), p.n_busy(), p.pod_id),
+                  default=None)
         if pod is None:
             # fault injection can kill every pod: park the request — a
             # booting replacement (on_ready) or the end-of-run sweep
@@ -441,6 +504,28 @@ class _PodFleet:
             nxt = sim._pop_queued(pod)
             if nxt is not None:
                 sim._start_service(pod, nxt)
+        if self.placement == "jsq":
+            self._steal_into(sim, pod)
+
+    def _steal_into(self, sim: "ClusterSimulator", pod: _Pool) -> None:
+        """Work-stealing (``placement="jsq"`` only): a pod that drained
+        its own queue pulls queued work from the most backlogged sibling
+        instead of idling — sticky queues are exactly how one hot pod
+        held the P99 hostage under first-fit. Cancel-aware like every
+        drain path: ``_pop_queued`` returning None means the donor held
+        only cancelled SafeTail copies, so rescan (same loop shape as
+        the boot-time steal in :meth:`on_ready`)."""
+        while not pod.draining and pod.idle_replica() is not None:
+            donor = max((p for p in self.pods.values()
+                         if p.queue and p.pod_id != pod.pod_id),
+                        key=lambda p: (len(p.queue), -p.pod_id),
+                        default=None)
+            if donor is None:
+                break
+            nxt = sim._pop_queued(donor)
+            if nxt is None:
+                continue     # donor held only cancelled copies; rescan
+            sim._start_service(pod, nxt)
 
     # ---- boot / drain lifecycle --------------------------------------- #
     def on_ready(self, sim: "ClusterSimulator") -> None:
@@ -449,7 +534,7 @@ class _PodFleet:
         backlogged pods — scale-out must relieve EXISTING backlog, not
         just future arrivals (sticky queues would otherwise strand it)."""
         self.pending_pods = max(0, self.pending_pods - 1)
-        pod = self._new_pod(self.slots_per_pod)
+        pod = self._new_pod(self._boot_size())
         self.pods_booted += 1
         self.sync_dep()
         while self.parked:
@@ -472,6 +557,19 @@ class _PodFleet:
             if nxt is None:
                 continue     # donor held only cancelled copies; rescan
             sim._start_service(pod, nxt)
+
+    def _boot_size(self) -> int:
+        """Replica count of the pod materialising right now.
+        ``first_fit`` boots whole ``slots_per_pod`` pods (digest-pinned
+        PR-5 physics). ``jsq`` is pod-aware about the replica QUOTA too:
+        the boot is clamped to the remaining ``n_max`` headroom, so the
+        fleet can land on ``n_max`` exactly instead of stranding the
+        last partial pod's worth of capacity (the multi-pod tail
+        regression's root cause — see :meth:`apply_scale`)."""
+        if self.placement == "jsq":
+            return max(1, min(self.slots_per_pod,
+                              self.dep.n_max - self.n_ready))
+        return self.slots_per_pod
 
     def mark_pod_draining(self, sim: "ClusterSimulator",
                           pod: _Pool) -> None:
@@ -558,8 +656,40 @@ class _PodFleet:
         asks for fewer replicas than are ready or booting — a
         hold/scale-out event whose pod rounding lands below the current
         pod count (e.g. re-asserting ``n_max`` over a remainder pod)
-        must not drain anything."""
+        must not drain anything.
+
+        ``jsq`` placement (ISSUE 10) swaps the POD-COUNT quota for a
+        REPLICA quota: boot however many pods it takes to cover
+        ``to_n`` (the last one sized to the remaining headroom by
+        :meth:`_boot_size`), bounded by ``n_max`` replicas instead of
+        ``floor(n_max / spp)`` pods. This is the multi-pod tail
+        regression's actual repair — under first-fit quantisation an
+        edge fleet of 2+1-replica pods could only ever materialise 5 of
+        its 6-replica quota, and the missing replica (not queue
+        placement) is what pushed the pods=2 flash P99 past the
+        monolithic cell. First-fit keeps the quantised physics
+        bit-identical to the golden digests."""
         spp = self.slots_per_pod
+        if self.placement == "jsq":
+            to_n = min(ev.to_n, self.dep.n_max)
+            have = self.n_ready + self.pending_pods * spp
+            if to_n > have:
+                for _ in range(-(-(to_n - have) // spp)):
+                    self.pending_pods += 1
+                    sim._push(sim._now + self.dep.startup_delay,
+                              _REPLICA_READY, self.dep.key)
+            elif to_n < self.n_ready:
+                want_pods = max(1, -(-to_n // spp))
+                cur = self.n_active_pods()
+                victims = sorted(
+                    (p for p in self.pods.values() if not p.draining),
+                    key=lambda p: (p.n_busy(), len(p.queue), -p.pod_id))
+                for pod in victims[: cur - want_pods]:
+                    if self.n_active_pods() <= 1:
+                        break
+                    self.mark_pod_draining(sim, pod)
+            self.sync_dep()
+            return
         want_pods = max(1, -(-ev.to_n // spp))
         want_pods = min(want_pods, max(1, self.dep.n_max // spp))
         cur = self.n_active_pods() + self.pending_pods
@@ -636,6 +766,17 @@ class SimConfig:
     # see the module docstring. 1 (default) keeps the legacy monolithic
     # pool per deployment, bit-identical to every pinned golden digest.
     pods_per_deployment: int = 1
+    # Pod placement mode (ISSUE 10), only meaningful with
+    # pods_per_deployment > 1. "first_fit" (default) keeps the PR-5
+    # semantics above — bit-identical to every pinned golden digest.
+    # "jsq" joins the shortest queue by (queued, busy) occupancy,
+    # starts service on the COLDEST pod with a free slot, steals from
+    # the most backlogged sibling at finish time, and pins SafeTail/
+    # reliable duplicates to the coldest feasible pods — the fix for
+    # the pods=2 flash-P99 regression. Mirrored on the serving side by
+    # PodGroup(placement=...) so FleetPlane and the event loop share
+    # one placement semantics.
+    placement: str = "first_fit"
     # Fault injection (ISSUE 6): seeded schedule of pod crashes,
     # straggler windows and per-tier network-drop probabilities. The
     # default EMPTY plan is bit-identical to every pinned golden digest:
@@ -676,7 +817,8 @@ class SimResult:
     dup_cancelled: int = 0
     # pod-level fleet physics (pods_per_deployment > 1): whole pods
     # booted/drained over the run, and the final per-pod occupancy
-    # (dep key -> [(busy, ready, queued), ...]) — empty in legacy mode
+    # (dep key -> [(busy, ready, queued, lifecycle), ...], lifecycle
+    # "active"/"draining") — empty in legacy mode
     pods_booted: int = 0
     pods_drained: int = 0
     pod_stats: dict = dataclasses.field(default_factory=dict)
@@ -798,9 +940,14 @@ class ClusterSimulator:
         # swaps every monolithic pool for a _PodFleet; == 1 keeps the
         # legacy _Pool path untouched (bit-identical golden digests).
         self._multi = config.pods_per_deployment > 1
+        if config.placement not in ("first_fit", "jsq"):
+            raise ValueError(
+                f"unknown SimConfig.placement {config.placement!r} "
+                "(expected 'first_fit' or 'jsq')")
         if self._multi:
             self.pools: dict[str, _Pool | _PodFleet] = {
-                d.key: _PodFleet(d, config.pods_per_deployment)
+                d.key: _PodFleet(d, config.pods_per_deployment,
+                                 placement=config.placement)
                 for d in cluster}
         else:
             self.pools = {d.key: _Pool(d) for d in cluster}
@@ -830,7 +977,8 @@ class ClusterSimulator:
                     # the reliable policy prices the SAME faults the
                     # event loop injects (unused by other policies)
                     latency_sigma=config.jitter_sigma,
-                    link_loss=dict(config.faults.drop_prob)))
+                    link_loss=dict(config.faults.drop_prob),
+                    placement=config.placement))
         self._win_seq = 0
         # redundant-dispatch state (safetail policy): per-group
         # completion race + lazily-cancelled queued copies. Empty dicts
@@ -1332,7 +1480,13 @@ class ClusterSimulator:
             # the old interleaved loop, so the golden digests are
             # unchanged. This is the PM-HPA half of the shared plane and
             # runs identically in scalar and window mode.
-            self._hpa_refresh(self.router, self.pmhpa, self._now)
+            # The plane's policy may export a reactive scaling floor
+            # (BurstAdaptiveHybridPolicy) on top of the batched
+            # telemetry refresh; policy=None (scalar mode / plain
+            # policies) keeps the refresh bit-identical to the digests.
+            self._hpa_refresh(self.router, self.pmhpa, self._now,
+                              policy=(self.plane.policy
+                                      if self.plane is not None else None))
             events = self.pmhpa.reconcile(self._now)
         else:
             events = self.reactive.reconcile(self._now)
@@ -1410,9 +1564,9 @@ class ClusterSimulator:
             straggled=self.n_straggled,
         )
 
-    def fleet_stats(self) -> dict[str, list[tuple[int, int, int]]]:
-        """Per-pod (busy, ready, queued) occupancy per deployment — the
-        simulator twin of ``FleetPlane.fleet_stats``. In legacy mode the
-        single pool reports as one pod."""
+    def fleet_stats(self) -> dict[str, list[tuple[int, int, int, str]]]:
+        """Per-pod (busy, ready, queued, lifecycle) occupancy per
+        deployment — the simulator twin of ``FleetPlane.fleet_stats``.
+        In legacy mode the single pool reports as one pod."""
         return {key: p.stats() if self._multi else [p.stats()]
                 for key, p in self.pools.items()}

@@ -149,6 +149,43 @@ class TestChaosConservationEveryPolicy:
         assert len(res.failed) > 0
         assert res.retried == 0
 
+    def test_crash_all_pods_reports_zero_replicas_no_phantom(self):
+        """ISSUE 10 bugfix regression: with every edge pod dead,
+        ``sync_dep`` must report the TRUE ready count — 0 — not the old
+        ``max(1, n)`` floor's phantom replica that kept the router and
+        PM-HPA predictors attracted to a dead deployment. The Erlang
+        inputs are degenerate-safe at c == 0 (``mmc_wait_scalar`` /
+        ``ErlangMemo`` return inf, the scorers return BIG), so the dead
+        tier simply becomes infeasible."""
+        plan = FaultPlan(crashes=(PodCrash(t=1e9, dep_key=EDGE),))
+        sim = ClusterSimulator(
+            two_tier(), SimConfig(mode="laimr", seed=0,
+                                  pods_per_deployment=2, faults=plan))
+        sim._now = 0.0
+        fleet = sim.pools[EDGE]
+        kill = PodCrash(t=0.0, dep_key=EDGE, restart=False)
+        assert fleet.crash_pod(sim, kill)
+        assert fleet.crash_pod(sim, kill)
+        assert not fleet.crash_pod(sim, kill)   # nothing left to kill
+        assert fleet.n_ready == 0
+        assert fleet.dep.n_replicas == 0        # truth, not max(1, n)
+
+    def test_crash_all_edge_pods_routing_survives_degenerate_erlang(self):
+        """End to end: both edge pods die for good mid-run; the windowed
+        plane keeps scoring (a phantom replica — or a ZeroDivisionError
+        in the c == 0 Erlang terms — would break here), later arrivals
+        complete on the surviving cloud tier, conservation holds."""
+        plan = FaultPlan(
+            crashes=tuple(PodCrash(t=5.0, dep_key=EDGE, restart=False)
+                          for _ in range(2)),
+            seed=4)
+        arr = trace()
+        sim = chaos_sim("guarded_alg1", plan)
+        res = sim.run(arr, horizon=400.0)
+        assert res.crashes == 2
+        assert_chaos_conservation(sim, res, len(arr))
+        assert any(r.arrival > 5.0 for r in res.completed)
+
 
 class TestNoSlotResurrection:
     """(ii) finishes into crashed capacity are loud, never silent."""

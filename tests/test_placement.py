@@ -1,0 +1,370 @@
+"""Pod-aware placement + burst-adaptive hybrid policy (ISSUE 10).
+
+The wall around the multi-pod tail-regression repair:
+
+  (i)   placement invariance: ``placement="jsq"`` with pods=1 is
+        BIT-IDENTICAL to first_fit (a monolithic pool has no placement
+        decision to make), and unknown placement names are a loud error
+        at every layer (SimConfig, _PodFleet, PodGroup);
+  (ii)  jsq semantics: idle admissions land on the COLDEST pod,
+        replica-quota scale-out materialises ``n_max`` exactly
+        (first-fit's pod-count floor cannot — the regression's root
+        cause), a finishing pod steals queued work from backlogged
+        neighbours, and ``admit_coldest`` pins serving-side duplicates
+        to the coldest pod;
+  (iii) conservation walls extended to jsq and hybrid: every policy x
+        jsq placement conserves on a bursty trace, and the chaos wall
+        (crash mid-burst) holds under jsq — no slot resurrection
+        through respill or work stealing;
+  (iv)  burst-detector hysteresis: entering needs a rate step above the
+        enter ratio AND the absolute floor, leaving requires falling
+        back inside the exit band, cold start never bursts, invalid
+        bands raise, and the detector does not thrash between
+        constituents on the oscillating MMPP trace;
+  (v)   lifecycle-aware capacity stats: draining/retired pods are
+        flagged in ``PodGroup.stats`` / fleet rows and excluded from
+        ``PodGroup.capacity`` — dead pods must not be counted as
+        admittable capacity (ISSUE 10 bugfix);
+  (vi)  the pinned flash regression (slow): on the PR-5 bench smoke
+        cell, pods=2 jsq flash P99 <= the monolithic pods=1 cell, and
+        the hybrid policy beats BOTH constituents on flash P99 while
+        matching guarded_alg1's steady-state P50.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.control import (AdmissionConfig, ControlPlane, FleetPlane,
+                           PodGroup, POLICIES, SlotBank)
+from repro.control.policies import BurstAdaptiveHybridPolicy
+from repro.core.autoscaler import ScaleEvent
+from repro.core.catalogue import Cluster, Deployment
+from repro.core.latency_model import CLOUD, PI4_EDGE, YOLOV5M
+from repro.core.scheduler import QualityClass, Request
+from repro.core.simulator import (ClusterSimulator, FaultPlan, PodCrash,
+                                  SimConfig, _PodFleet)
+from repro.core.workload import bounded_pareto_bursts, mmpp_arrivals
+from test_faults import assert_chaos_conservation, chaos_sim, trace
+from test_sim_golden import two_tier
+from test_sim_pods import cluster_n, mk_sim, rq
+
+ALL_POLICIES = sorted(POLICIES)
+EDGE = "yolov5m@pi4-edge"
+
+
+# --------------------------------------------------------------------- #
+# (i) placement invariance + validation
+# --------------------------------------------------------------------- #
+class TestPlacementInvariance:
+    def test_pods_one_jsq_is_bit_identical_to_first_fit(self):
+        """With one monolithic pool per deployment there is no
+        placement decision: jsq must reproduce first_fit exactly."""
+        runs = {}
+        for placement in ("first_fit", "jsq"):
+            arr = bounded_pareto_bursts(3.0, 120.0, "yolov5m", seed=11)
+            sim = ClusterSimulator(
+                two_tier(), SimConfig(mode="laimr", seed=11, slo=1.0,
+                                      pods_per_deployment=1,
+                                      placement=placement))
+            runs[placement] = sim.run(arr, horizon=500.0).latencies()
+        np.testing.assert_array_equal(runs["first_fit"], runs["jsq"])
+
+    def test_unknown_placement_raises_everywhere(self):
+        with pytest.raises(ValueError, match="placement"):
+            ClusterSimulator(two_tier(),
+                             SimConfig(placement="round_robin"))
+        with pytest.raises(ValueError, match="placement"):
+            _PodFleet(list(two_tier())[0], 2, placement="round_robin")
+        with pytest.raises(ValueError, match="placement"):
+            PodGroup([SlotBank(2)], placement="round_robin")
+
+
+# --------------------------------------------------------------------- #
+# (ii) jsq semantics in the simulator fleet
+# --------------------------------------------------------------------- #
+class TestJsqFleet:
+    def test_idle_admission_lands_on_coldest_pod(self):
+        """first_fit packs pod 0 first; jsq alternates to keep
+        occupancy balanced across the 2+2 split."""
+        sim = mk_sim(cluster_n(n_edge=4), pods=2, placement="jsq")
+        fleet = sim.pools[EDGE]
+        p0, p1 = fleet.pods[0], fleet.pods[1]
+        fleet.submit(sim, rq(0))
+        assert (p0.n_busy(), p1.n_busy()) == (1, 0)
+        fleet.submit(sim, rq(1))     # pod 1 is now the coldest
+        assert (p0.n_busy(), p1.n_busy()) == (1, 1)
+        fleet.submit(sim, rq(2))     # tie -> lowest pod_id
+        assert (p0.n_busy(), p1.n_busy()) == (2, 1)
+        fleet.submit(sim, rq(3))
+        assert (p0.n_busy(), p1.n_busy()) == (2, 2)
+
+    def test_replica_quota_scale_out_reaches_n_max(self):
+        """The regression's root cause: first-fit bounds scale-out at
+        floor(n_max/spp) PODS (edge 3 replicas, spp=2, n_max=6 -> at
+        most 2+1+2 = 5 of 6 replicas); jsq boots to the replica QUOTA,
+        landing on n_max exactly with a remainder-sized final pod."""
+        def cl() -> Cluster:
+            # fresh per run: the simulator mutates dep.n_replicas
+            edge = dataclasses.replace(PI4_EDGE, net_rtt=0.05)
+            cloud = dataclasses.replace(CLOUD, net_rtt=0.086)
+            return Cluster([
+                Deployment(YOLOV5M, edge, QualityClass.BALANCED,
+                           n_replicas=3, n_max=6),
+                Deployment(YOLOV5M, cloud, QualityClass.BALANCED,
+                           n_replicas=1, n_max=16),
+            ])
+        ready = {}
+        for placement in ("first_fit", "jsq"):
+            sim = mk_sim(cl(), pods=2, placement=placement)
+            fleet = sim.pools[EDGE]
+            assert fleet.n_ready == 3          # 2 + 1 initial split
+            sim._apply_scale(ScaleEvent(0.0, EDGE, 3, 6, "test"))
+            for _ in range(fleet.pending_pods):
+                sim._now = fleet.dep.startup_delay
+                sim._on_replica_ready(EDGE)
+            ready[placement] = fleet.n_ready
+        assert ready["first_fit"] == 5         # pinned quantisation gap
+        assert ready["jsq"] == 6               # the repair
+
+    def test_finish_steals_from_backlogged_neighbour(self):
+        """jsq only: a pod whose own queue is empty pulls queued work
+        from the most backlogged sibling when a replica frees up."""
+        sim = mk_sim(cluster_n(n_edge=4), pods=2, placement="jsq")
+        fleet = sim.pools[EDGE]
+        p0, p1 = fleet.pods[0], fleet.pods[1]
+        for k in range(4):                     # saturate both pods
+            fleet.submit(sim, rq(k))
+        fleet.submit(sim, rq(4))               # spills: queues on pod 0
+        assert (len(p0.queue), len(p1.queue)) == (1, 0)
+        rid = next(iter(p1.replicas))
+        fleet.finish(sim, p1.pod_id, rid)      # pod 1 frees a replica
+        assert (len(p0.queue), len(p1.queue)) == (0, 0)   # stolen
+        assert p1.n_busy() == 2                # refilled by stolen work
+
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    def test_jsq_windowed_sim_conserves_per_policy(self, policy):
+        arr = bounded_pareto_bursts(3.0, 60.0, "yolov5m", seed=3)
+        sim = ClusterSimulator(
+            two_tier(), SimConfig(mode="laimr", seed=3, slo=1.0,
+                                  admission_window=0.1, policy=policy,
+                                  pods_per_deployment=2,
+                                  placement="jsq"))
+        res = sim.run(arr, horizon=600.0)
+        assert len(res.completed) == len(arr)
+        ids = [r.req_id for r in res.completed]
+        assert len(set(ids)) == len(ids)
+        sim.plane.check_conservation()
+        assert sim.plane.decided == len(arr)
+
+    @pytest.mark.parametrize("policy", ["guarded_alg1", "hybrid"])
+    def test_jsq_chaos_wall_no_slot_resurrection(self, policy):
+        """The ISSUE 6 chaos wall extended to jsq + hybrid: crash an
+        edge pod mid-burst; conservation and the drained-slot guards
+        must hold through respill AND work stealing."""
+        plan = FaultPlan(crashes=(PodCrash(t=10.0, dep_key=EDGE),),
+                         seed=3)
+        arr = trace()
+        sim = chaos_sim(policy, plan, placement="jsq")
+        res = sim.run(arr, horizon=400.0)
+        assert_chaos_conservation(sim, res, len(arr))
+        assert res.crashes == 1
+
+
+# --------------------------------------------------------------------- #
+# (ii, serving side) coldest-pod admission + cold duplicates
+# --------------------------------------------------------------------- #
+class TestServingJsq:
+    def test_admit_coldest_spreads_occupancy(self):
+        grp = PodGroup([SlotBank(2), SlotBank(2)], placement="jsq")
+        assert grp.admit_next() == 0           # both cold -> pod 0
+        assert grp.admit_next() == 2           # pod 1 is colder
+        assert grp.admit_next() == 1
+        assert grp.admit_next() == 3
+        assert grp.admit_next() is None
+
+    def test_admit_coldest_skips_dead_pods(self):
+        grp = PodGroup([SlotBank(2), SlotBank(2), SlotBank(2)],
+                       placement="jsq")
+        grp.mark_draining(0)
+        grp.retire(2)
+        assert grp.admit_coldest() == 2        # only pod 1 is alive
+        assert grp.admit_coldest() == 3
+        assert grp.admit_coldest() is None
+
+    def test_duplicates_pinned_to_coldest_pod(self):
+        """A SafeTail duplicate under jsq placement takes its slot on
+        the coldest pod: when primary and duplicate land on the same
+        deployment they occupy DIFFERENT pods — racing a genuinely
+        independent queue instead of the primary's first-fit
+        neighbour slot."""
+        plane = FleetPlane(
+            two_tier(),
+            pods={"yolov5m@pi4-edge": [SlotBank(4), SlotBank(4)],
+                  "yolov5m@cloud": [SlotBank(4), SlotBank(4)]},
+            policy="safetail",
+            config=AdmissionConfig(max_batch=16, redundancy=2,
+                                   placement="jsq"))
+        for k in range(2):
+            plane.submit(Request(model="yolov5m",
+                                 quality=QualityClass.BALANCED,
+                                 arrival=0.001 * k, slo=50.0), 0.001 * k)
+        decs = plane.flush(0.1)
+        plane.check_conservation()
+        dups = [d for d in decs if d.dup_of is not None]
+        assert dups, "safetail dispatched no duplicates"
+        primaries = {d.req.req_id: d for d in decs if d.dup_of is None}
+        for dup in dups:
+            prim = primaries[dup.dup_of]
+            if dup.slot is None or prim.slot is None:
+                continue
+            if dup.target_key == prim.target_key:
+                grp = plane.pod_group(dup.target_key)
+                assert grp.locate(dup.slot)[0] != grp.locate(prim.slot)[0]
+
+
+# --------------------------------------------------------------------- #
+# (iv) burst-detector hysteresis
+# --------------------------------------------------------------------- #
+def mk_hybrid(**cfg_kw) -> BurstAdaptiveHybridPolicy:
+    cfg = AdmissionConfig(window=0.1, policy="hybrid", **cfg_kw)
+    plane = ControlPlane(two_tier(), config=cfg)
+    assert isinstance(plane.policy, BurstAdaptiveHybridPolicy)
+    return plane.policy
+
+
+class TestBurstDetector:
+    def test_cold_start_never_bursts(self):
+        pol = mk_hybrid()
+        assert pol.observe_window(1000, 0.0) is False
+        assert pol.bursting is False
+
+    def test_enter_exit_hysteresis(self):
+        pol = mk_hybrid(burst_min_rate=1.0)
+        t = 0.0
+        for _ in range(20):                    # settle the EWMA near 10/s
+            t += 1.0
+            assert pol.observe_window(10, t) is False
+        t += 1.0
+        assert pol.observe_window(60, t) is True      # 6x step: enter
+        # 1.5x of the adapted mean sits INSIDE the hysteresis band
+        # (enter=2.0, exit=1.25): the detector holds, no flap
+        t += 1.0
+        assert pol.observe_window(int(1.5 * pol._ewma), t) is True
+        for _ in range(10):                    # back to the long-run mean
+            t += 1.0
+            pol.observe_window(10, t)
+        assert pol.bursting is False
+
+    def test_min_rate_floor_blocks_trickle_bursts(self):
+        """A 10x relative step on trickle traffic (well below
+        burst_min_rate) must not enter a burst."""
+        pol = mk_hybrid(burst_min_rate=5.0)
+        t = 0.0
+        for _ in range(10):
+            t += 10.0
+            pol.observe_window(1, t)           # 0.1 req/s baseline
+        t += 10.0
+        assert pol.observe_window(10, t) is False   # 1 req/s << floor
+        assert pol.bursting is False
+
+    def test_invalid_hysteresis_band_raises(self):
+        with pytest.raises(ValueError, match="hysteresis"):
+            mk_hybrid(burst_enter=1.2, burst_exit=1.5)
+
+    def test_no_flap_on_mmpp(self):
+        """The hysteresis band's acceptance bar: on the oscillating
+        MMPP trace the strategy must not thrash between constituents —
+        a handful of transitions over the run, not one per flush."""
+        arr = mmpp_arrivals([2.0, 16.0], 60.0 / 8.0, 60.0, "yolov5m",
+                            seed=7)
+        sim = ClusterSimulator(
+            two_tier(), SimConfig(mode="laimr", seed=7, slo=1.8,
+                                  jitter_sigma=0.2, admission_window=0.1,
+                                  policy="hybrid",
+                                  pods_per_deployment=2,
+                                  placement="jsq"))
+        res = sim.run(arr, horizon=None)
+        assert len(res.completed) + len(res.failed) == len(arr)
+        pol = sim.plane.policy
+        assert isinstance(pol, BurstAdaptiveHybridPolicy)
+        flushes = sim.plane.flushes
+        assert pol.switches <= max(8, flushes // 20), \
+            f"{pol.switches} switches over {flushes} flushes"
+
+
+# --------------------------------------------------------------------- #
+# (v) lifecycle-aware capacity stats
+# --------------------------------------------------------------------- #
+class TestLifecycleCapacityStats:
+    def test_pod_group_stats_flag_dead_pods(self):
+        grp = PodGroup([SlotBank(2), SlotBank(2), SlotBank(2)])
+        grp.admit_next()
+        assert grp.stats() == [(1, 2, "active"), (0, 2, "active"),
+                               (0, 2, "active")]
+        assert grp.capacity() == (1, 6)
+        grp.mark_draining(1)
+        grp.retire(2)
+        # the old 2-tuple rows silently counted all three pods as live
+        # capacity; the flags + capacity() exclude the dead ones
+        assert grp.stats() == [(1, 2, "active"), (0, 2, "draining"),
+                               (0, 2, "retired")]
+        assert grp.capacity() == (1, 2)
+        assert grp.n_free() == 1
+
+    def test_sim_fleet_stats_flag_draining_pods(self):
+        sim = mk_sim(cluster_n(n_edge=4), pods=2)
+        fleet = sim.pools[EDGE]
+        fleet.submit(sim, rq(0))               # keep pod 0 busy
+        fleet.mark_pod_draining(sim, fleet.pods[0])
+        rows = sim.fleet_stats()[EDGE]
+        assert all(len(t) == 4 for t in rows)
+        assert rows[0][3] == "draining"        # busy -> still listed
+        assert [t[3] for t in rows[1:]] == ["active"]
+
+
+# --------------------------------------------------------------------- #
+# (vi) the pinned flash regression (the bench smoke cell)
+# --------------------------------------------------------------------- #
+@pytest.mark.slow
+class TestFlashRegressionPin:
+    """The PR-5 regression cell from BENCH_policy_matrix.json — the
+    scenario ISSUE 10 exists to repair: flash_crowd, horizon=60,
+    window=0.1, seed=7, slo=1.8, experiment_cluster."""
+
+    @pytest.fixture(scope="class")
+    def cells(self):
+        from benchmarks.bench_policy_matrix import run_cell
+        from benchmarks.bench_window_sweep import scenarios
+        traces = scenarios(60.0, 7)
+        out = {}
+        for policy in ("guarded_alg1", "safetail", "hybrid"):
+            for pods, placement in ((1, "first_fit"), (2, "first_fit"),
+                                    (2, "jsq")):
+                out[(policy, pods, placement)] = run_cell(
+                    traces["flash"], policy, 0.1, 7, pods=pods,
+                    placement=placement)
+        for policy in ("guarded_alg1", "hybrid"):
+            out[(policy, "steady")] = run_cell(
+                traces["pareto"], policy, 0.1, 7, pods=2,
+                placement="jsq")
+        return out
+
+    def test_jsq_repairs_the_pods_regression(self, cells):
+        mono = cells[("guarded_alg1", 1, "first_fit")]["p99"]
+        ff = cells[("guarded_alg1", 2, "first_fit")]["p99"]
+        jsq = cells[("guarded_alg1", 2, "jsq")]["p99"]
+        assert ff > mono          # the regression exists under first_fit
+        assert jsq <= mono        # ... and jsq repairs it
+
+    def test_hybrid_beats_both_constituents_on_flash_p99(self, cells):
+        for pods, placement in ((1, "first_fit"), (2, "jsq")):
+            hyb = cells[("hybrid", pods, placement)]["p99"]
+            guarded = cells[("guarded_alg1", pods, placement)]["p99"]
+            safetail = cells[("safetail", pods, placement)]["p99"]
+            assert hyb < min(guarded, safetail), (pods, placement)
+
+    def test_hybrid_matches_guarded_steady_state_p50(self, cells):
+        hyb = cells[("hybrid", "steady")]["p50"]
+        guarded = cells[("guarded_alg1", "steady")]["p50"]
+        assert hyb == pytest.approx(guarded, rel=0.10)

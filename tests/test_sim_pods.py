@@ -91,7 +91,7 @@ class TestFleetTopology:
         assert (len(p0.queue), len(p1.queue)) == (1, 1)
         fleet.submit(sim, rq(6))
         assert (len(p0.queue), len(p1.queue)) == (2, 1)
-        assert fleet.stats() == [(2, 2, 2), (2, 2, 1)]
+        assert fleet.stats() == [(2, 2, 2, "active"), (2, 2, 1, "active")]
 
     def test_per_pod_rates_observe_their_own_arrivals(self):
         sim = mk_sim(cluster_n(n_edge=2), pods=2)
@@ -110,7 +110,8 @@ class TestFleetTopology:
         stats = sim.fleet_stats()
         assert set(stats) == {"yolov5m@pi4-edge", "yolov5m@cloud"}
         for per_pod in stats.values():
-            assert all(len(t) == 3 for t in per_pod)
+            assert all(len(t) == 4 for t in per_pod)
+            assert all(t[3] in ("active", "draining") for t in per_pod)
 
 
 class TestPodScaleLifecycle:
